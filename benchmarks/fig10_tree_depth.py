@@ -1,0 +1,43 @@
+"""Fig. 10 analog: DT depth sweep on Hospital × rules.
+
+Reproduces the paper's headline §5 observation: MLtoSQL is a big win for
+shallow trees and becomes a *slowdown* as depth grows — the motivation for
+data-driven runtime selection.
+"""
+from __future__ import annotations
+
+from benchmarks.common import NOOPT, build_query, make_dataset, run_variant, train_model
+
+DEPTHS = [3, 6, 10, 14, 18]
+
+
+def run(quick: bool = False):
+    rows = []
+    scale = 20_000 if quick else 300_000
+    train, infer = make_dataset("hospital", scale)
+    for depth in (DEPTHS[:2] if quick else DEPTHS):
+        pipe = train_model(train, "dt", depth=depth)
+        ens = pipe.model_nodes()[0].attrs["ensemble"]
+        unused = len(train.numeric + train.categorical) - len(
+            set(int(f) for f in ens.feature if f >= 0)
+        )
+        q = build_query(infer, pipe)
+        t0 = run_variant(q, infer.tables, **NOOPT)
+        t_proj = run_variant(
+            q, infer.tables, predicate_pruning=False, data_induced=False,
+            transform="none",
+        )
+        t_sql = run_variant(q, infer.tables, transform="sql")
+        t_dnn = run_variant(q, infer.tables, transform="dnn")
+        rows.append({"depth": depth, "noopt_s": t0, "proj_s": t_proj,
+                     "sql_s": t_sql, "dnn_s": t_dnn})
+        print(
+            f"fig10,{depth},{t0:.3f},{t_proj:.3f},{t_sql:.3f},{t_dnn:.3f},"
+            f"sql={'win' if t_sql < t0 else 'SLOWDOWN'}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("fig10,depth,noopt_s,modelproj_s,mltosql_s,mltodnn_s,verdict")
+    run()

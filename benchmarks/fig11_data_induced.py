@@ -1,0 +1,64 @@
+"""Fig. 11 + Tab. 2 analog: data-induced per-partition model specialization.
+
+Hospital partitioned on num_issues (2 parts) and rcount (6 parts); DT depths
+10/15/20; variants: no-opt, Raven w/o partitioning, Raven + partitioned.
+Also reports the Tab. 2 metric: average #columns pruned per partition model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import NOOPT, build_query, make_dataset, run_variant, train_model
+from repro.core.optimizer import OptimizerOptions, RavenOptimizer
+from repro.core.rules.data_induced import apply_data_induced
+
+
+def _avg_pruned_cols(q) -> float:
+    """Tab. 2 metric: features the partition-specialized models stop using
+    (averaged over partitions)."""
+    q2 = q.copy()
+    apply_data_induced(q2)
+    pn = q2.predict_nodes()[0]
+    if not pn.partitioned:
+        return 0.0
+    out = []
+    for _, spec in pn.partitioned:
+        ens = spec.model_nodes()[0].attrs["ensemble"]
+        out.append(ens.n_features - len(ens.used_features()))
+    return float(np.mean(out))
+
+
+DEPTHS = [10, 15, 20]
+PARTITIONS = ["num_issues", "rcount"]
+
+
+def run(quick: bool = False):
+    rows = []
+    scale = 20_000 if quick else 300_000
+    train, infer = make_dataset("hospital", scale)
+    for depth in (DEPTHS[:1] if quick else DEPTHS):
+        pipe = train_model(train, "dt", depth=depth)
+        q_nopart = build_query(infer, pipe, where="score >= 0.5")
+        t0 = run_variant(q_nopart, infer.tables, **NOOPT)
+        t_nopart = run_variant(q_nopart, infer.tables, transform="sql",
+                               data_induced=False)
+        for pcol in (PARTITIONS[:1] if quick else PARTITIONS):
+            q = build_query(infer, pipe, where="score >= 0.5",
+                            partition_col=pcol)
+            t_part = run_variant(q, infer.tables, transform="sql")
+            pruned = _avg_pruned_cols(q)
+            rows.append({
+                "depth": depth, "partition": pcol, "noopt_s": t0,
+                "nopart_s": t_nopart, "part_s": t_part,
+                "avg_pruned_features": pruned,
+            })
+            print(
+                f"fig11,{depth},{pcol},{t0:.3f},{t_nopart:.3f},{t_part:.3f},"
+                f"{pruned:.1f},{t0/t_part:.2f}x"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    print("fig11,depth,partition,noopt_s,nopart_s,part_s,avg_pruned,speedup")
+    run()

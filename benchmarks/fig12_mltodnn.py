@@ -1,0 +1,37 @@
+"""Fig. 12 analog: complex gradient-boosting models — interpreted ML runtime
+vs MLtoDNN tensor programs (the paper's GPU story becomes the fused-XLA /
+MXU-targeted tensor-runtime story on TPU; crossover re-learned, §5.2).
+
+Models: 60–500 estimators, depth 4–8, on Hospital. For these, the paper
+reports ModelProj pointless (all inputs used), MLtoSQL detrimental, and the
+DNN runtime the clear winner — exactly what the tensor path must show here.
+"""
+from __future__ import annotations
+
+from benchmarks.common import NOOPT, build_query, make_dataset, run_variant, train_model
+
+MODELS = [(60, 4), (150, 5), (300, 6), (500, 8)]
+
+
+def run(quick: bool = False):
+    rows = []
+    scale = 10_000 if quick else 100_000
+    train, infer = make_dataset("hospital", scale)
+    for n_est, depth in (MODELS[:1] if quick else MODELS):
+        pipe = train_model(train, "gb", n_estimators=n_est, depth=depth)
+        q = build_query(infer, pipe)
+        t_interp = run_variant(q, infer.tables, **NOOPT)
+        t_dnn = run_variant(q, infer.tables, transform="dnn")
+        rows.append({"estimators": n_est, "depth": depth,
+                     "interp_s": t_interp, "dnn_s": t_dnn,
+                     "speedup": t_interp / t_dnn})
+        print(
+            f"fig12,{n_est},{depth},{t_interp:.3f},{t_dnn:.3f},"
+            f"{t_interp/t_dnn:.2f}x"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("fig12,estimators,depth,interp_s,dnn_s,speedup")
+    run()

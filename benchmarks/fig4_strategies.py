@@ -1,0 +1,70 @@
+"""Fig. 4 analog: optimization-strategy evaluation on the generated corpus.
+
+Stratified 5-fold CV repeated to 200 runs (paper's protocol): accuracy +
+speedup-vs-optimal distribution per strategy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.corpus import build_corpus
+from repro.core.strategies import (
+    ClassificationStrategy,
+    RegressionStrategy,
+    RuleBasedStrategy,
+    evaluate_strategy,
+)
+
+
+def _stratified_folds(labels, k, rng):
+    folds = [[] for _ in range(k)]
+    for cls in np.unique(labels):
+        idx = np.flatnonzero(labels == cls)
+        rng.shuffle(idx)
+        for i, j in enumerate(idx):
+            folds[i % k].append(j)
+    return [np.asarray(f) for f in folds]
+
+
+def run(quick: bool = False, n_pipelines: int = 138, n_repeats: int = 8):
+    if quick:
+        n_pipelines, n_repeats = 30, 2
+    corpus = build_corpus(n_pipelines=n_pipelines, n_rows=20_000, seed=0)
+    rng = np.random.default_rng(0)
+    results = {"rule": [], "clf": [], "reg": []}
+    for rep in range(n_repeats):  # n_repeats × 5 folds
+        folds = _stratified_folds(corpus.labels, 5, rng)
+        for i in range(5):
+            test = folds[i]
+            tr = np.concatenate([folds[j] for j in range(5) if j != i])
+            Xtr, ytr = corpus.stats[tr], corpus.labels[tr]
+            rtr = corpus.runtimes[tr]
+            Xte, yte, rte = corpus.stats[test], corpus.labels[test], corpus.runtimes[test]
+            for name, strat in (
+                ("rule", RuleBasedStrategy().fit(Xtr, ytr)),
+                ("clf", ClassificationStrategy().fit(Xtr, ytr)),
+                ("reg", RegressionStrategy().fit(Xtr, rtr)),
+            ):
+                results[name].append(
+                    evaluate_strategy(strat, Xte, yte, rte)
+                )
+    rows = []
+    for name, rs in results.items():
+        acc = np.asarray([r["accuracy"] for r in rs])
+        sp = np.asarray([r["speedup_vs_optimal"] for r in rs])
+        rows.append({
+            "strategy": name, "acc_mean": float(acc.mean()),
+            "speedup_median": float(np.median(sp)),
+            "speedup_p25": float(np.percentile(sp, 25)),
+            "speedup_min": float(sp.min()),
+        })
+        print(
+            f"fig4,{name},{acc.mean():.3f},{np.median(sp):.3f},"
+            f"{np.percentile(sp,25):.3f},{sp.min():.3f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("fig4,strategy,accuracy,speedup_median,speedup_p25,speedup_min")
+    run()

@@ -1,0 +1,51 @@
+"""Fig. 6 analog: end-to-end prediction-query runtime, 4 datasets × 3 models.
+
+Variants per cell:
+  noopt   — Raven (no-opt): full scan, interpreted ML runtime through the
+            UDF host boundary (the paper's baseline).
+  raven   — all logical optimizations + strategy-free best physical pick
+            (we report all three transforms; 'raven' = min, like the
+            classification strategy would choose with an oracle corpus).
+"""
+from __future__ import annotations
+
+from benchmarks.common import NOOPT, build_query, make_dataset, run_variant, train_model
+
+CELLS = [
+    ("credit_card", "lr", {}), ("credit_card", "dt", {}), ("credit_card", "gb", {}),
+    ("hospital", "lr", {}), ("hospital", "dt", {}), ("hospital", "gb", {}),
+    ("expedia", "lr", {"n_iter": 40}), ("expedia", "dt", {}), ("expedia", "gb", {}),
+    ("flights", "lr", {"n_iter": 40}), ("flights", "dt", {}), ("flights", "gb", {}),
+]
+
+SCALES = {"credit_card": 400_000, "hospital": 400_000,
+          "expedia": 100_000, "flights": 50_000}
+
+
+def run(quick: bool = False):
+    rows = []
+    for name, kind, kw in CELLS[:4] if quick else CELLS:
+        scale = 20_000 if quick else SCALES[name]
+        train, infer = make_dataset(name, scale)
+        pipe = train_model(train, kind, **kw)
+        q = build_query(infer, pipe)
+        t_noopt = run_variant(q, infer.tables, **NOOPT)
+        per = {}
+        for tr in ("none", "sql", "dnn"):
+            per[tr] = run_variant(q, infer.tables, transform=tr)
+        best = min(per, key=per.get)
+        rows.append({
+            "dataset": name, "model": kind, "rows": scale,
+            "noopt_s": t_noopt, **{f"{k}_s": v for k, v in per.items()},
+            "best": best, "speedup": t_noopt / per[best],
+        })
+        print(
+            f"fig6,{name},{kind},{scale},{t_noopt:.3f},{per['none']:.3f},"
+            f"{per['sql']:.3f},{per['dnn']:.3f},{best},{t_noopt/per[best]:.2f}x"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("fig6,dataset,model,rows,noopt_s,none_s,sql_s,dnn_s,best,speedup")
+    run()

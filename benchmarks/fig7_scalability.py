@@ -1,0 +1,31 @@
+"""Fig. 7 analog: speedup vs dataset scale (Hospital, LR + GB)."""
+from __future__ import annotations
+
+from benchmarks.common import NOOPT, build_query, make_dataset, run_variant, train_model
+
+SIZES = [10_000, 50_000, 200_000, 800_000]
+
+
+def run(quick: bool = False):
+    rows = []
+    sizes = SIZES[:2] if quick else SIZES
+    for kind in ("lr", "gb"):
+        train, _ = make_dataset("hospital", 4096)
+        pipe = train_model(train, kind)
+        for n in sizes:
+            _, infer = make_dataset("hospital", n)
+            q = build_query(infer, pipe)
+            t_noopt = run_variant(q, infer.tables, **NOOPT)
+            t_opt = min(
+                run_variant(q, infer.tables, transform=t)
+                for t in ("none", "sql", "dnn")
+            )
+            rows.append({"model": kind, "rows": n, "noopt_s": t_noopt,
+                         "raven_s": t_opt, "speedup": t_noopt / t_opt})
+            print(f"fig7,{kind},{n},{t_noopt:.3f},{t_opt:.3f},{t_noopt/t_opt:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    print("fig7,model,rows,noopt_s,raven_s,speedup")
+    run()

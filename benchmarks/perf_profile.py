@@ -1,0 +1,102 @@
+"""§Perf profiling view: lower one cell, print trip-scaled byte/flop
+attribution by opcode and by source op_name.
+
+    PYTHONPATH=src python -m benchmarks.perf_profile --arch qwen2-moe-a2.7b \
+        --shape train_4k [--set moe_dispatch=scatter]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+def main() -> None:
+    from repro.configs import ARCHS
+    from repro.launch.dryrun import _parse_override, _to_struct
+    from repro.launch.hlo_analysis import (
+        analyze_hlo,
+        per_opcode_bytes,
+        per_source_bytes,
+    )
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shardings import batch_shardings, input_spec_for
+    from repro.models import build_model
+    from repro.models.base import SHAPES, shardings_for
+    from repro.models.zoo import decode_caches_from_specs
+    from repro.train.step import (
+        init_opt_state,
+        make_prefill_step,
+        make_serve_step,
+        make_train_step,
+    )
+    import dataclasses
+
+    from repro.configs import get_config
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--shape", choices=list(SHAPES), required=True)
+    ap.add_argument("--set", action="append", default=[])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    overrides = dict(_parse_override(kv) for kv in args.set)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    sp = SHAPES[args.shape]
+    mesh = make_production_mesh()
+    model = build_model(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    params_s = _to_struct(model.shapes, dt)
+    ps = shardings_for(params_s, mesh)
+    batch_s = model.input_specs(sp)
+    bs = batch_shardings(batch_s, mesh)
+    with mesh:
+        if sp.kind == "train":
+            opt_s = init_opt_state(model, params_s, materialize=False)
+            opt_sh = shardings_for(opt_s, mesh)
+            step = make_train_step(model, mesh=mesh, accum_steps=cfg.accum_steps)
+            compiled = jax.jit(
+                step, in_shardings=(ps, opt_sh, bs),
+                out_shardings=(ps, opt_sh, None), donate_argnums=(0, 1),
+            ).lower(params_s, opt_s, batch_s).compile()
+        elif sp.kind == "prefill":
+            step = make_prefill_step(model, mesh=mesh)
+            compiled = jax.jit(step, in_shardings=(ps, bs)).lower(
+                params_s, batch_s
+            ).compile()
+        else:
+            caches_s = decode_caches_from_specs(model, sp)
+            cache_names = [k for k in batch_s if k not in ("tokens", "lengths")]
+            cache_sh = tuple(
+                jax.sharding.NamedSharding(
+                    mesh, input_spec_for(n, batch_s[n].shape, mesh)
+                )
+                for n in cache_names
+            )
+            small = {"tokens": batch_s["tokens"], "lengths": batch_s["lengths"]}
+            small_sh = {k: bs[k] for k in small}
+            step = make_serve_step(model, mesh=mesh)
+            compiled = jax.jit(
+                step, in_shardings=(ps, small_sh, cache_sh),
+                out_shardings=(None, None, cache_sh), donate_argnums=(2,),
+            ).lower(params_s, small, caches_s).compile()
+
+    text = compiled.as_text()
+    cost = analyze_hlo(text)
+    print(f"exec_flops={cost.flops:.3e}  exec_bytes={cost.bytes:.3e}  "
+          f"coll={ {k: f'{v:.2e}' for k, v in cost.collective_bytes.items()} }")
+    print("\n-- bytes by opcode --")
+    for k, v in per_opcode_bytes(text):
+        print(f"  {k:28s} {v:.3e}")
+    print("\n-- bytes by source op_name --")
+    for k, v in per_source_bytes(text):
+        print(f"  {k:48s} {v:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: train a pipeline, write a PREDICT query, let Raven optimize it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.optimizer import OptimizerOptions, RavenOptimizer
+from repro.core.ir import TableStats
+from repro.data.datasets import make_hospital
+from repro.ml import GradientBoostingClassifier, fit_pipeline
+from repro.relational.engine import execute_plan
+from repro.sql.parser import parse_prediction_query
+
+# 1. data + trained pipeline (scaler + one-hot + gradient boosting)
+ds = make_hospital(50_000)
+joined = ds.joined_columns()
+pipe = fit_pipeline(
+    joined, ds.label, ds.numeric, ds.categorical,
+    GradientBoostingClassifier(n_estimators=20, max_depth=3),
+    categories=ds.categories(),
+)
+print(f"trained pipeline: {pipe.n_ops()} ops, {len(pipe.inputs)} inputs")
+
+# 2. a prediction query (SQL Server PREDICT-TVF syntax, paper §6)
+sql = """
+    SELECT COUNT(*), AVG(score)
+    FROM PREDICT(model = 'covid_risk', data = patients) AS p
+    WHERE asthma = 1 AND score >= 0.5
+"""
+query = parse_prediction_query(
+    sql, {"covid_risk": pipe}, ds.tables,
+    stats={"patients": TableStats.of(ds.tables["patients"])},
+)
+
+# 3. optimize + execute: unoptimized vs Raven
+for label, opts in [
+    ("no-opt", OptimizerOptions(predicate_pruning=False,
+                                projection_pushdown=False,
+                                data_induced=False, transform="none")),
+    ("raven ", OptimizerOptions()),  # logical rules + default physical pick
+]:
+    plan, report = RavenOptimizer(options=opts).optimize(query)
+    out = execute_plan(plan, ds.tables)
+    cols = {k: float(np.asarray(v)[0]) for k, v in out.columns.items()}
+    print(f"{label}: {cols}  notes={report.notes}")

@@ -1,0 +1,40 @@
+"""Batched serving driver (deliverable b, serving kind): continuous-batching
+engine over a small trained LM — requests of mixed lengths stream through
+fixed-shape prefill/decode programs with slot recycling.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.launch.train import train_loop
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+# quick-train a tiny LM so generations are non-degenerate
+print("training a tiny LM for 40 steps...")
+out = train_loop(arch="qwen2-0.5b", steps=40, batch=8, seq=64, lr=2e-3,
+                 log_every=20)
+params = out["params"]
+model = build_model(reduced_config("qwen2-0.5b"))
+
+eng = ServeEngine(model, params, n_slots=4, cache_len=128)
+rng = np.random.default_rng(0)
+print("submitting 12 requests (mixed prompt lengths, max_new_tokens=16)...")
+reqs = [
+    eng.submit(list(rng.integers(1, 100, rng.integers(2, 24))),
+               max_new_tokens=16)
+    for _ in range(12)
+]
+t0 = time.perf_counter()
+done = eng.run()
+dt = time.perf_counter() - t0
+tokens = sum(len(r.output) for r in done)
+print(f"served {len(done)} requests / {tokens} tokens in {dt:.2f}s "
+      f"({tokens/dt:.1f} tok/s through 4 slots)")
+for r in done[:3]:
+    print(f"  req {r.rid}: prompt[:6]={r.prompt[:6]} -> {r.output}")
+assert len(done) == 12

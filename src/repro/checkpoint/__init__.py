@@ -1,0 +1,13 @@
+from repro.checkpoint.store import (
+    CheckpointManager,
+    load_checkpoint,
+    restore_onto_mesh,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "save_checkpoint",
+    "load_checkpoint",
+    "restore_onto_mesh",
+]

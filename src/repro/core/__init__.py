@@ -1,0 +1,15 @@
+"""Raven's contribution: the unified IR and the prediction-query optimizer."""
+from repro.core.ir import (
+    ColumnStats,
+    LAggregate,
+    LFilter,
+    LJoin,
+    LPredict,
+    LProject,
+    LScan,
+    LogicalPlan,
+    PredictionQuery,
+    TableStats,
+    walk,
+)
+from repro.core.optimizer import OptimizerOptions, RavenOptimizer

@@ -1,0 +1,314 @@
+"""The Raven optimizer: logical rules in strict order, then data-driven
+logical-to-physical runtime selection, then lowering to the physical plan.
+
+Order (paper §5.2 closing summary):
+  1. predicate-based model pruning   (enables more projection pushdown)
+  2. data-induced optimizations      (same machinery, stats-sourced)
+  3. model-projection pushdown       (consumes sparsity created by 1 & 2)
+  4. runtime selection per predict node via a strategy (or forced option)
+  5. lowering: LPredict → Project(exprs) | TensorOp | MLUdf
+
+MLtoSQL / MLtoDNN failures fall back to the ML runtime ('none'), matching
+the paper's whole-pipeline-or-fail semantics.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.ir import (
+    LAggregate,
+    LFilter,
+    LJoin,
+    LPredict,
+    LProject,
+    LScan,
+    LogicalPlan,
+    PredictionQuery,
+)
+from repro.core.rules.data_induced import apply_data_induced
+from repro.core.rules.ml_to_dnn import MLtoDNNUnsupported, compile_pipeline_to_dnn
+from repro.core.rules.ml_to_sql import (
+    MLtoSQLUnsupported,
+    compile_pipeline_to_sql,
+)
+from repro.core.rules.predicate_pruning import apply_predicate_pruning
+from repro.core.rules.projection_pushdown import apply_projection_pushdown
+from repro.core.stats import pipeline_stats
+from repro.relational.engine import (
+    Aggregate,
+    Filter,
+    Join,
+    MLUdf,
+    PhysicalPlan,
+    Project,
+    Scan,
+    TensorOp,
+)
+from repro.relational.expr import Bin, Case, Col, Const, Expr, Un, columns_of
+
+
+@dataclass
+class OptimizerOptions:
+    predicate_pruning: bool = True
+    projection_pushdown: bool = True
+    data_induced: bool = True
+    transform: Optional[str] = None  # force {'none','sql','dnn'}; None -> strategy
+    tensor_strategy: str = "auto"  # 'auto' | 'gemm' | 'traversal'
+    use_pallas: Optional[bool] = None
+    udf_batch_size: int = 10_000
+
+
+@dataclass
+class OptimizationReport:
+    transforms: dict[int, str] = field(default_factory=dict)
+    notes: list[str] = field(default_factory=list)
+
+
+class RavenOptimizer:
+    def __init__(self, strategy=None, options: Optional[OptimizerOptions] = None):
+        self.strategy = strategy
+        self.options = options or OptimizerOptions()
+
+    # -- public API ---------------------------------------------------------
+
+    def optimize(self, query: PredictionQuery) -> tuple[PhysicalPlan, OptimizationReport]:
+        opt = self.options
+        q = query.copy()
+        report = OptimizationReport()
+        if opt.predicate_pruning:
+            apply_predicate_pruning(q)
+        if opt.data_induced:
+            apply_data_induced(q)
+        if opt.projection_pushdown:
+            apply_projection_pushdown(q)
+        else:
+            from repro.core.rules.projection_pushdown import (
+                prune_relational_columns,
+            )
+
+            # vanilla-engine behaviour: scans don't read columns no operator
+            # references, but FK joins survive (join elimination is Raven's)
+            prune_relational_columns(q, eliminate_joins=False)
+
+        for i, pred in enumerate(q.predict_nodes()):
+            if opt.transform is not None:
+                t = opt.transform
+            elif self.strategy is not None:
+                t = self.strategy.choose(pipeline_stats(pred.pipeline))
+            else:
+                t = "none"
+            pred.transform = t
+            report.transforms[i] = t
+            if t == "sql" and self._sql_score_space(pred) == "logit":
+                score = pred.output_names[0]
+                if _score_visible(q.plan, score):
+                    # score reaches the query result (or a non-threshold
+                    # expression): emit in probability space — exact
+                    # semantics, one sigmoid at the top of the expression.
+                    pred.emit_prob = True
+                else:
+                    # score only feeds threshold filters: keep the faster
+                    # logit-space emission and move the thresholds instead.
+                    rewrite_score_filters(q.plan, score, "logit")
+
+        plan = self._lower(q.plan, report)
+        return plan, report
+
+    @staticmethod
+    def _sql_score_space(pred: LPredict) -> str:
+        for m in pred.pipeline.model_nodes():
+            post = (
+                m.attrs["ensemble"].post_transform
+                if m.op == "tree_ensemble"
+                else m.attrs.get("post", "none")
+            )
+            if post == "logistic":
+                return "logit"
+        return "prob"
+
+    # -- lowering -----------------------------------------------------------
+
+    def _lower(self, p: LogicalPlan, report: OptimizationReport) -> PhysicalPlan:
+        opt = self.options
+        if isinstance(p, LScan):
+            return Scan(p.table, list(p.columns))
+        if isinstance(p, LJoin):
+            return Join(
+                self._lower(p.child, report), p.dim_table, p.fact_key,
+                p.dim_key, list(p.dim_columns),
+            )
+        if isinstance(p, LFilter):
+            return Filter(self._lower(p.child, report), p.expr)
+        if isinstance(p, LProject):
+            return Project(self._lower(p.child, report), list(p.keep), dict(p.exprs))
+        if isinstance(p, LAggregate):
+            return Aggregate(self._lower(p.child, report), list(p.aggs))
+        if isinstance(p, LPredict):
+            child = self._lower(p.child, report)
+            t = p.transform or "none"
+            if t == "sql":
+                try:
+                    return self._lower_sql(p, child, report)
+                except MLtoSQLUnsupported as e:
+                    report.notes.append(f"MLtoSQL fallback: {e}")
+                    t = "none"
+            if t == "dnn":
+                try:
+                    comp = compile_pipeline_to_dnn(
+                        p.pipeline, strategy=opt.tensor_strategy,
+                        use_pallas=opt.use_pallas,
+                    )
+                    outs = list(p.pipeline.outputs)
+                    names = list(p.output_names)
+
+                    def fn(cols, _c=comp, _o=outs, _n=names):
+                        res = _c.fn(cols)
+                        return {
+                            n: (res[o].reshape(-1) if res[o].ndim > 1 else res[o])
+                            for o, n in zip(_o, _n)
+                        }
+
+                    return TensorOp(child, fn, names)
+                except MLtoDNNUnsupported as e:
+                    report.notes.append(f"MLtoDNN fallback: {e}")
+                    t = "none"
+            return MLUdf(
+                child, p.pipeline, list(p.output_names),
+                batch_size=opt.udf_batch_size,
+            )
+        raise TypeError(type(p))
+
+    def _lower_sql(self, p: LPredict, child: PhysicalPlan, report) -> PhysicalPlan:
+        """MLtoSQL lowering, incl. per-partition specialized expressions."""
+        if p.partitioned and p.partition_col:
+            comps = [
+                (key, compile_pipeline_to_sql(pl)) for key, pl in p.partitioned
+            ]
+            space = comps[0][1].score_space
+            exprs: dict[str, Expr] = {}
+            for oi, (out, name) in enumerate(
+                zip(p.pipeline.outputs, p.output_names)
+            ):
+                expr: Expr = comps[-1][1].exprs[out]
+                for key, comp in comps[:-1]:
+                    expr = Case(
+                        Bin("eq", Col(p.partition_col), Const(float(key))),
+                        comp.exprs[out],
+                        expr,
+                    )
+                exprs[name] = expr
+            report.notes.append(
+                f"MLtoSQL partitioned over {p.partition_col} "
+                f"({len(comps)} specialized models)"
+            )
+        else:
+            comp = compile_pipeline_to_sql(p.pipeline)
+            space = comp.score_space
+            exprs = {
+                name: comp.exprs[out]
+                for out, name in zip(p.pipeline.outputs, p.output_names)
+            }
+        if space == "logit":
+            if p.emit_prob:
+                score_name = p.output_names[0]
+                exprs[score_name] = Un("sigmoid", exprs[score_name])
+                report.notes.append(
+                    f"score column '{score_name}' emitted in probability "
+                    "space (sigmoid applied — score is query-visible)"
+                )
+            else:
+                report.notes.append(
+                    f"score column '{p.output_names[0]}' emitted in logit "
+                    "space (threshold filters rewritten)"
+                )
+        return Project(child, None, exprs)
+
+
+def _logical_out_cols(p: LogicalPlan) -> list[str]:
+    """Output-column inference for logical plans (mirrors engine._out_cols)."""
+    if isinstance(p, LScan):
+        return list(p.columns)
+    if isinstance(p, LJoin):
+        return _logical_out_cols(p.child) + list(p.dim_columns)
+    if isinstance(p, LFilter):
+        return _logical_out_cols(p.child)
+    if isinstance(p, LProject):
+        base = list(p.keep) if p.keep is not None else _logical_out_cols(p.child)
+        return base + list(p.exprs)
+    if isinstance(p, LPredict):
+        return _logical_out_cols(p.child) + list(p.output_names)
+    if isinstance(p, LAggregate):
+        return [a[0] for a in p.aggs]
+    raise TypeError(type(p))
+
+
+def _is_threshold_filter(e: Expr, score_col: str) -> bool:
+    """True iff every reference to ``score_col`` in ``e`` is a rewritable
+    ``score <op> const`` comparison (possibly under and/or)."""
+    if isinstance(e, Bin) and e.op in ("and", "or"):
+        return _is_threshold_filter(e.a, score_col) and _is_threshold_filter(
+            e.b, score_col
+        )
+    if (
+        isinstance(e, Bin)
+        and e.op in ("ge", "gt", "le", "lt")
+        and isinstance(e.a, Col)
+        and e.a.name == score_col
+        and isinstance(e.b, Const)
+    ):
+        return True
+    return score_col not in columns_of(e)
+
+
+def _score_visible(plan: LogicalPlan, score_col: str) -> bool:
+    """Does the score column escape threshold filters — i.e. reach the query
+    result, an aggregate, or a projection expression? If so, MLtoSQL must
+    emit it in probability space."""
+    from repro.core.ir import walk
+
+    if score_col in _logical_out_cols(plan):
+        return True
+    for node in walk(plan):
+        if isinstance(node, LAggregate):
+            if any(col == score_col for _, _, col in node.aggs):
+                return True
+        elif isinstance(node, LProject):
+            if any(score_col in columns_of(e) for e in node.exprs.values()):
+                return True
+        elif isinstance(node, LFilter):
+            if not _is_threshold_filter(node.expr, score_col):
+                return True
+    return False
+
+
+def rewrite_score_filters(
+    plan: LogicalPlan, score_col: str, to_space: str
+) -> None:
+    """Rewrite prob-space score predicates to logit space in-place
+    (needed when MLtoSQL emits logit-space scores)."""
+    from repro.core.ir import walk
+
+    if to_space != "logit":
+        return
+    for node in walk(plan):
+        if isinstance(node, LFilter):
+            node.expr = _rewrite_expr(node.expr, score_col)
+
+
+def _rewrite_expr(e: Expr, score_col: str) -> Expr:
+    if (
+        isinstance(e, Bin)
+        and e.op in ("ge", "gt", "le", "lt")
+        and isinstance(e.a, Col)
+        and e.a.name == score_col
+        and isinstance(e.b, Const)
+    ):
+        p = min(max(float(e.b.value), 1e-9), 1 - 1e-9)
+        return Bin(e.op, e.a, Const(float(math.log(p / (1 - p)))))
+    if isinstance(e, Bin) and e.op in ("and", "or"):
+        return Bin(e.op, _rewrite_expr(e.a, score_col), _rewrite_expr(e.b, score_col))
+    return e

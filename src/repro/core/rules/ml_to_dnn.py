@@ -1,0 +1,25 @@
+"""MLtoDNN (paper §5.1): pipeline → fused tensor program for the DNN runtime.
+
+Thin rule wrapper over :mod:`repro.tensor.compile` (the Hummingbird analog);
+coverage is everything the tensor compiler supports — featurizers, linear
+models, tree ensembles (GEMM or gather strategy). The LPredict node's
+physical lowering becomes a TensorOp whose function is jitted and fused
+with the surrounding relational program.
+"""
+from __future__ import annotations
+
+from repro.ml.pipeline import TrainedPipeline
+from repro.tensor.compile import TensorCompilation, compile_pipeline_tensor
+
+
+class MLtoDNNUnsupported(Exception):
+    pass
+
+
+def compile_pipeline_to_dnn(
+    pipe: TrainedPipeline, strategy: str = "auto", use_pallas: bool | None = None
+) -> TensorCompilation:
+    try:
+        return compile_pipeline_tensor(pipe, strategy=strategy, use_pallas=use_pallas)
+    except (ValueError, KeyError) as e:  # unsupported op kinds
+        raise MLtoDNNUnsupported(str(e)) from e

@@ -1,0 +1,20 @@
+from repro.distributed.compression import (
+    ErrorFeedbackState,
+    compressed_gradient_update,
+    ef_init,
+    ef_int8_compress,
+    ef_int8_decompress,
+)
+from repro.distributed.straggler import StepTimer, StragglerMonitor
+from repro.distributed.collectives import hierarchical_psum
+
+__all__ = [
+    "ef_init",
+    "ef_int8_compress",
+    "ef_int8_decompress",
+    "ErrorFeedbackState",
+    "compressed_gradient_update",
+    "StepTimer",
+    "StragglerMonitor",
+    "hierarchical_psum",
+]

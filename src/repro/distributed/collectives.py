@@ -1,0 +1,41 @@
+"""Collective helpers for the multi-pod mesh.
+
+``hierarchical_psum`` implements the two-level gradient reduction from
+DESIGN.md §5: reduce-scatter + all-gather *inside* a pod over ICI, with the
+inter-pod (DCN) hop carrying only each chip's 1/N_intra shard — the standard
+bandwidth-optimal hierarchy. Inside shard_map it lowers to exactly
+reduce-scatter(data) → all-reduce(pod) → all-gather(data); outside a
+shard_map it degrades to a plain tree-sum (tests, single-device)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hierarchical_psum(x, intra_axis: str = "data", inter_axis: str = "pod"):
+    """psum over (intra, inter) with the DCN hop at 1/|intra| volume."""
+    try:
+        jax.lax.axis_index(intra_axis)  # raises NameError outside shard_map
+    except NameError:
+        return x
+
+    def one(leaf):
+        n = jax.lax.psum(1, intra_axis)
+        flat = leaf.reshape(-1)
+        pad = (-flat.shape[0]) % n
+        flat = jnp.pad(flat, (0, pad))
+        # reduce-scatter over ICI: each chip owns a 1/n shard of the sum
+        shard = jax.lax.psum_scatter(
+            flat.reshape(n, -1), intra_axis, scatter_dimension=0, tiled=False
+        )
+        # inter-pod all-reduce over DCN on the shard only
+        try:
+            jax.lax.axis_index(inter_axis)
+            shard = jax.lax.psum(shard, inter_axis)
+        except NameError:
+            pass
+        # all-gather back over ICI
+        full = jax.lax.all_gather(shard, intra_axis, axis=0, tiled=False)
+        return full.reshape(-1)[: leaf.size].reshape(leaf.shape)
+
+    return jax.tree.map(one, x)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: batched single-token decode attention over a KV cache.
+
+The decode_32k serve_step hotspot: one query token per sequence attends over
+a long KV cache. Memory-bound by the cache read, so the kernel streams KV
+blocks HBM→VMEM once, carries the online-softmax state in VMEM scratch, and
+masks by per-sequence cache length. Grid (B, KH, S/BK): per-(batch, kv-head)
+all G grouped query heads are processed together so each KV block is read
+exactly once per group — the minimal-traffic schedule for GQA decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, bk: int, g: int,
+):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]  # (G, D) — grouped heads of this kv head
+    k = k_ref[0, :, 0, :]  # (BK, D)
+    v = v_ref[0, :, 0, :]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, BK)
+    kv_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+    valid = kv_pos < len_ref[0, 0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _done():
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    scale: float | None = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q:(B,H,D); k_cache,v_cache:(B,S,KH,D); lengths:(B,) → (B,H,D)."""
+    B, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    bk = min(block_k, S)
+    assert S % bk == 0
+    qg = (q * scale).reshape(B, KH, G, D)
+    grid = (B, KH, S // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, g=G),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32).reshape(B, 1), qg, k_cache, v_cache)
+    return out.reshape(B, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "use_pallas", "interpret"))
+def decode_attention_op(
+    q, k_cache, v_cache, lengths, *, scale: float | None = None,
+    use_pallas: bool | None = None, interpret: bool = False,
+):
+    from repro.kernels import ref as _ref
+
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not (use_pallas or interpret):
+        return _ref.decode_attention_ref(q, k_cache, v_cache, lengths, scale=scale)
+    return decode_attention(q, k_cache, v_cache, lengths, scale=scale, interpret=interpret)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: tiled online-softmax (flash) attention with GQA.
+
+Grid (B, H, Sq/BQ, Skv/BK), KV innermost; the running max / normalizer / un-
+normalized accumulator live in VMEM scratch across KV steps and the output
+block is written once on the last KV step. K/V blocks stream HBM→VMEM; the
+two contractions (q·kᵀ and p·v) hit the MXU. Causal masking is applied
+in-block (upper-triangular blocks still run but contribute nothing; the
+XLA-path roofline is unaffected since dry-runs use the jnp reference).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, bq: int, bk: int, skv: int, sq: int,
+):
+    j = pl.program_id(3)
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :] * scale  # (BQ, D)
+    k = k_ref[0, :, 0, :]  # (BK, D)
+    v = v_ref[0, :, 0, :]  # (BK, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (BQ, BK)
+
+    if causal:
+        i = pl.program_id(2)
+        q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (skv - sq)
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (BQ, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)  # (BQ, BK)
+    alpha = jnp.exp(m_prev - m_new)  # (BQ, 1)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _done():
+        o_ref[0, :, 0, :] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q:(B,Sq,H,D); k,v:(B,Skv,KH,D), H % KH == 0. Returns (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    grid = (B, H, Sq // bq, Skv // bk)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, bq=bq, bk=bk, skv=Skv, sq=Sq
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "use_pallas", "interpret")
+)
+def flash_attention_op(
+    q, k, v, *, causal: bool = True, scale: float | None = None,
+    use_pallas: bool | None = None, interpret: bool = False,
+):
+    from repro.kernels import ref as _ref
+
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not (use_pallas or interpret):
+        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    return flash_attention(
+        q, k, v, causal=causal, scale=scale, interpret=interpret
+    )

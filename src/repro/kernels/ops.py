@@ -1,0 +1,113 @@
+"""Jit'd wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernel runs natively; on CPU the
+pure-jnp oracle from :mod:`repro.kernels.ref` runs instead (fused by XLA),
+and ``interpret=True`` forces the Pallas kernel body through the interpreter
+for correctness tests. All wrappers handle padding so callers pass natural
+shapes; padding is constructed to be provably inert (see each pad helper).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as _ref
+from repro.kernels.tree_gemm import tree_gemm as _tree_gemm_kernel
+from repro.kernels.featurize import featurize as _featurize_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# tree_gemm
+# ---------------------------------------------------------------------------
+
+
+def pad_gemm_program(A, B, C, D, V, align: int = 128):
+    """MXU-align F/I/L. Inert padding proof:
+      * extra F rows of A are zero → S unchanged (x is zero-padded to match);
+      * extra I columns: threshold +inf ⇒ decision 1, but their C rows are
+        zero ⇒ P unchanged;
+      * extra L columns: Dcount = -1 can never equal a non-negative path
+        count ⇒ match 0 ⇒ V never read (and V is 0 there anyway)."""
+    T, F, I = A.shape
+    L = C.shape[2]
+    Fp, Ip, Lp = _round_up(F, align), _round_up(I, align), _round_up(L, align)
+    A2 = np.zeros((T, Fp, Ip), np.float32)
+    A2[:, :F, :I] = A
+    B2 = np.full((T, Ip), np.float32(np.inf))
+    B2[:, :I] = B
+    C2 = np.zeros((T, Ip, Lp), np.float32)
+    C2[:, :I, :L] = C
+    D2 = np.full((T, Lp), np.float32(-1.0))
+    D2[:, :L] = D
+    V2 = np.zeros((T, Lp), np.float32)
+    V2[:, :L] = V
+    return A2, B2, C2, D2, V2
+
+
+@functools.partial(jax.jit, static_argnames=("base", "block_n", "use_pallas", "interpret"))
+def tree_gemm_op(
+    x, A, B, C, D, V, *, base: float, block_n: int = 256,
+    use_pallas: bool | None = None, interpret: bool = False,
+):
+    """(N,F) rows → (N,) raw scores. Pads N to block_n and F to A's F."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    N, F = x.shape
+    Fk = A.shape[1]
+    if not (use_pallas or interpret):
+        xp = jnp.pad(x, ((0, 0), (0, Fk - F))) if Fk > F else x
+        return _ref.tree_gemm_ref(xp, A, B, C, D, V, base)
+    Np = _round_up(max(N, 1), block_n)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, Np - N), (0, Fk - F)))
+    out = _tree_gemm_kernel(
+        xp, A, B, C, D, V, base, block_n=block_n, interpret=interpret
+    )
+    return out[:N]
+
+
+# ---------------------------------------------------------------------------
+# featurize
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cat_segments", "block_n", "use_pallas", "interpret"),
+)
+def featurize_op(
+    num, cat, offset, scale, cat_values, cat_segments,
+    *, block_n: int = 256, use_pallas: bool | None = None, interpret: bool = False,
+):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not (use_pallas or interpret):
+        return _ref.featurize_ref(num, cat, offset, scale, cat_values, cat_segments)
+    N = num.shape[0]
+    Np = _round_up(max(N, 1), block_n)
+    nump = jnp.pad(num, ((0, Np - N), (0, 0)))
+    catp = jnp.pad(cat, ((0, Np - N), (0, 0)), constant_values=-1)
+    out = _featurize_kernel(
+        nump, catp, offset, scale, cat_values, cat_segments,
+        block_n=block_n, interpret=interpret,
+    )
+    return out[:N]
+
+
+# ---------------------------------------------------------------------------
+# attention (wrappers defined with the kernels in flash_attention.py /
+# decode_attention.py; re-exported here for a single import surface)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attention import flash_attention_op  # noqa: E402
+from repro.kernels.decode_attention import decode_attention_op  # noqa: E402

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: GEMM-strategy tree-ensemble inference.
+
+The paper's MLtoDNN hotspot, rethought for the MXU (DESIGN.md §2): each
+(batch-block, tree) grid step runs the fused chain
+
+    S = X·A  →  D = (S ≤ B)  →  P = D·C  →  match = (P == Dcount)  →  y += match·V
+
+entirely in VMEM, with the two contractions on the MXU. Trees accumulate into
+the output block across the innermost grid dimension (revisited output block;
+init at t == 0) — no HBM round-trips between trees.
+
+Tiling: rows are tiled by ``block_n``; F/I/L are MXU-aligned by padding in
+``repro.kernels.ops`` (zero feature columns, +inf thresholds, zero path
+columns and Dcount = -1 are all provably inert — see ops.pad_gemm_program).
+VMEM footprint per step ≈ 4·(block_n·F + F·I + I·L + block_n·(I+L)) bytes;
+callers pick block_n so this stays under ~12 MB of the 16 MB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, d_ref, v_ref, o_ref, *, base: float):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, base)
+
+    x = x_ref[...]  # (BN, F)
+    a = a_ref[0]  # (F, I)
+    s = jnp.dot(x, a, preferred_element_type=jnp.float32)  # MXU
+    dec = (s <= b_ref[0][None, :]).astype(jnp.float32)  # (BN, I)
+    p = jnp.dot(dec, c_ref[0], preferred_element_type=jnp.float32)  # MXU
+    match = (p == d_ref[0][None, :]).astype(jnp.float32)  # (BN, L)
+    part = jnp.dot(
+        match, v_ref[0][:, None], preferred_element_type=jnp.float32
+    )  # (BN, 1)
+    o_ref[...] += part
+
+
+def tree_gemm(
+    x: jnp.ndarray,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    D: jnp.ndarray,
+    V: jnp.ndarray,
+    base: float,
+    *,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x:(N,F) f32 (N % block_n == 0); A:(T,F,I); B:(T,I); C:(T,I,L);
+    D:(T,L); V:(T,L). Returns (N,) raw ensemble scores."""
+    N, F = x.shape
+    T, _, I = A.shape
+    L = C.shape[2]
+    assert N % block_n == 0, (N, block_n)
+    grid = (N // block_n, T)
+    out = pl.pallas_call(
+        functools.partial(_kernel, base=float(base)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, F), lambda n, t: (n, 0)),
+            pl.BlockSpec((1, F, I), lambda n, t: (t, 0, 0)),
+            pl.BlockSpec((1, I), lambda n, t: (t, 0)),
+            pl.BlockSpec((1, I, L), lambda n, t: (t, 0, 0)),
+            pl.BlockSpec((1, L), lambda n, t: (t, 0)),
+            pl.BlockSpec((1, L), lambda n, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda n, t: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.float32),
+        interpret=interpret,
+    )(
+        x.astype(jnp.float32),
+        A.astype(jnp.float32),
+        B.astype(jnp.float32),
+        C.astype(jnp.float32),
+        D.astype(jnp.float32),
+        V.astype(jnp.float32),
+    )
+    return out[:, 0]

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: jax locks device count on first use.
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh and record memory / cost / collective-traffic analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k [--multi-pod] [--out benchmarks/results]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Each --all cell runs in a fresh subprocess (compiler state isolation). The
+JSON records feed EXPERIMENTS.md §Dry-run and the §Roofline analysis.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import batch_shardings, input_spec_for
+from repro.models import build_model
+from repro.models.base import (
+    SHAPES,
+    active_param_count,
+    param_count,
+    shardings_for,
+    struct,
+)
+from repro.models.zoo import decode_caches_from_specs
+from repro.train.step import init_opt_state, make_prefill_step, make_serve_step, make_train_step
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\(?[a-z0-9]+\[[^=]*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo: str) -> dict[str, float]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo):
+        types, kind = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(types):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES.get(dt, 4)
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+def _to_struct(shapes, dtype):
+    return jax.tree.map(
+        lambda s: struct(s, dtype), shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def _parse_override(kv: str):
+    k, _, v = kv.partition("=")
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    return k, v
+
+
+def lower_cell(
+    arch: str, shape_name: str, multi_pod: bool, overrides: dict | None = None
+) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    sp = SHAPES[shape_name]
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": sp.kind,
+    }
+    ok, why = cfg.supports_shape(shape_name)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    params_s = _to_struct(model.shapes, dt)
+    ps = shardings_for(params_s, mesh)
+    batch_s = model.input_specs(sp)
+    bs = batch_shardings(batch_s, mesh)
+
+    t0 = time.time()
+    with mesh:
+        if sp.kind == "train":
+            opt_s = init_opt_state(model, params_s, materialize=False)
+            opt_sh = shardings_for(opt_s, mesh)
+            step = make_train_step(model, mesh=mesh, accum_steps=cfg.accum_steps)
+            lowered = jax.jit(
+                step, in_shardings=(ps, opt_sh, bs),
+                out_shardings=(ps, opt_sh, None),
+                donate_argnums=(0, 1),  # params/opt alias in-place
+            ).lower(params_s, opt_s, batch_s)
+        elif sp.kind == "prefill":
+            step = make_prefill_step(model, mesh=mesh)
+            lowered = jax.jit(step, in_shardings=(ps, bs)).lower(params_s, batch_s)
+        else:  # decode
+            caches_s = decode_caches_from_specs(model, sp)
+            cache_names = [
+                k for k in batch_s if k not in ("tokens", "lengths")
+            ]
+            cache_sh = tuple(
+                jax.sharding.NamedSharding(
+                    mesh, input_spec_for(n, batch_s[n].shape, mesh)
+                )
+                for n in cache_names
+            )
+            small = {
+                "tokens": batch_s["tokens"],
+                "lengths": batch_s["lengths"],
+            }
+            small_sh = {k: bs[k] for k in small}
+            step = make_serve_step(model, mesh=mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(ps, small_sh, cache_sh),
+                out_shardings=(None, None, cache_sh),
+                donate_argnums=(2,),  # caches update in-place
+            ).lower(params_s, small, caches_s)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    # executed-cost analysis: while bodies × known_trip_count (per-device).
+    # cost_analysis() counts loop bodies once — see hlo_analysis docstring.
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    exec_cost = analyze_hlo(hlo_text)
+    n_tokens = sp.global_batch * (sp.seq_len if sp.kind != "decode" else 1)
+    n_params = param_count(cfg)
+    n_active = active_param_count(cfg)
+    mult = {"train": 6, "prefill": 2, "decode": 2}[sp.kind]
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        arg_bytes=int(ma.argument_size_in_bytes),
+        alias_bytes=int(ma.alias_size_in_bytes),
+        out_bytes=int(ma.output_size_in_bytes),
+        temp_bytes=int(ma.temp_size_in_bytes),
+        code_bytes=int(ma.generated_code_size_in_bytes),
+        hlo_flops=float(ca.get("flops", 0.0)),
+        hlo_bytes=float(ca.get("bytes accessed", 0.0)),
+        exec_flops=float(exec_cost.flops),
+        exec_bytes=float(exec_cost.bytes),
+        exec_collective_bytes={
+            k: float(v) for k, v in exec_cost.collective_bytes.items()
+        },
+        unknown_trip_loops=int(exec_cost.unknown_trip_loops),
+        collective_bytes=coll,
+        model_flops=float(mult * n_active * n_tokens),
+        n_params=n_params,
+        n_active_params=n_active,
+        n_tokens=n_tokens,
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument(
+        "--set", action="append", default=[], metavar="KEY=VALUE",
+        help="ArchConfig overrides (perf iterations)",
+    )
+    ap.add_argument("--tag", default=None, help="suffix for the record file")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.all:
+        failures = 0
+        mesh_tag = "mp" if args.multi_pod else "sp"
+        for arch in ARCHS:
+            for shape in SHAPES:
+                path = os.path.join(
+                    args.out, f"dryrun_{mesh_tag}_{arch}_{shape}.json"
+                )
+                if args.skip_existing and os.path.exists(path):
+                    try:
+                        with open(path) as f:
+                            if json.load(f).get("status") in ("ok", "skipped"):
+                                print(f"[{mesh_tag}] {arch} × {shape}: cached")
+                                continue
+                    except Exception:
+                        pass
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", arch, "--shape", shape, "--out", args.out,
+                ]
+                if args.multi_pod:
+                    cmd.append("--multi-pod")
+                r = subprocess.run(cmd)
+                failures += int(r.returncode != 0)
+        print(f"dry-run sweep done; {failures} failures")
+        sys.exit(1 if failures else 0)
+
+    overrides = dict(_parse_override(kv) for kv in args.set)
+    rec = lower_cell(args.arch, args.shape, args.multi_pod, overrides or None)
+    if overrides:
+        rec["overrides"] = overrides
+    mesh_tag = "mp" if args.multi_pod else "sp"
+    suffix = f"_{args.tag}" if args.tag else ""
+    path = os.path.join(
+        args.out, f"dryrun_{mesh_tag}_{args.arch}_{args.shape}{suffix}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = (
+        f"temp={rec['temp_bytes']/1e9:.2f}GB flops={rec['hlo_flops']:.3e} "
+        f"compile={rec['compile_s']}s"
+        if status == "ok"
+        else rec.get("reason", "")
+    )
+    print(f"[{rec['mesh']}] {args.arch} × {args.shape}: {status} {extra}")
+
+
+if __name__ == "__main__":
+    main()

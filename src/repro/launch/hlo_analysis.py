@@ -1,0 +1,460 @@
+"""Static executed-cost analysis over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits each instruction ONCE — a ``lax.scan``
+over 126 layers contributes its body a single time, and the FSDP all-gathers
+*inside* that scan are likewise counted once (we verified both empirically;
+see EXPERIMENTS.md §Roofline methodology). For roofline purposes we need
+*executed* totals, so this module re-derives costs from ``compiled.as_text()``
+and multiplies every ``while`` body by its ``known_trip_count`` backend
+config (present for all lax.scan/fori loops), recursively.
+
+Per-device semantics: the optimized module is the per-device SPMD program, so
+every number reported here is per-chip — exactly what the roofline terms
+divide by.
+
+What is counted:
+  * flops       — ``dot`` ops: 2 × output elems × contracted elems (descends
+                  into fusion/call bodies; convolutions similarly).
+  * bytes       — HBM-traffic model: Σ over materializing instructions of
+                  (operand bytes + output bytes), fusions at their boundary
+                  (inputs+outputs only) — the same model as XLA's
+                  HloCostAnalysis "bytes accessed", plus loop trip scaling.
+  * collectives — result bytes per kind (all-gather / all-reduce /
+                  reduce-scatter / all-to-all / collective-permute), trip-
+                  scaled; ``-start``/``-done`` async pairs counted once.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s4": 1, "u4": 1,  # round up
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(?P<name>%[\w.\-]+)\s*=\s*(?P<rest>.*)$"
+)
+_OPCODE_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(?P<name>%[\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count.*?"n"\s*:\s*"(\d+)"')
+_CALLED_RE = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=)(%[\w.\-]+)"
+)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# ops that do not touch HBM (metadata / aliasing / control)
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "domain", "opt-barrier",
+    "while", "conditional", "call", "fusion",  # handled by recursion/boundary
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    # first array shape only (dot outputs are single arrays)
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 1
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//") or s.startswith("HloModule"):
+            continue
+        if s == "}" or s == "})":
+            cur = None
+            continue
+        if s.endswith("{") and ("=" not in s.split("(")[0]):
+            m = _COMP_HDR_RE.match(s)
+            if m:
+                cur = Computation(m.group("name"))
+                comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        rest = m.group("rest")
+        om = _OPCODE_RE.search(" " + rest)
+        if not om:
+            continue
+        opcode = om.group(1)
+        # om indices are relative to " " + rest: shift back by 1
+        type_str = rest[: max(om.start() - 1, 0)].strip()
+        tail = rest[om.end() - 2:]  # from '(' of the operand list
+        pm = _OPERANDS_RE.match(tail)
+        operand_str = pm.group(1) if pm else ""
+        operands = [
+            o.strip() for o in re.split(r",(?![^\[]*\])", operand_str)
+            if o.strip().startswith("%")
+        ]
+        attrs = tail[pm.end():] if pm else tail
+        instr = Instr(
+            m.group("name"), type_str, opcode, operands, attrs,
+            is_root=line.lstrip().startswith("ROOT "),
+        )
+        cur.instrs.append(instr)
+        cur.by_name[instr.name] = instr
+    return comps
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict[str, float] = field(default_factory=dict)
+    transcendentals: float = 0.0
+    unknown_trip_loops: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.transcendentals += mult * other.transcendentals
+        self.unknown_trip_loops += other.unknown_trip_loops
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + mult * v
+
+
+def _operand_type(comp: Computation, name: str) -> str:
+    ins = comp.by_name.get(name)
+    return ins.type_str if ins else ""
+
+
+def _inplace_update_bytes(
+    comps: dict[str, Computation], comp: Computation, ins: Instr
+) -> float | None:
+    """In-place update ops alias their buffer operand: XLA writes only the
+    update region (dynamic-update-slice) / the scattered rows (scatter), so
+    counting operands+output would inflate traffic by buffer/update — ~80x
+    for per-layer KV-cache writes into (L,B,S,KH,hd) stacks. Returns the
+    corrected byte count, or None if ``ins`` is not such an op.
+
+    Handles both standalone ops and fusions whose ROOT is the update op
+    (XLA wraps them as '*dynamic-update-slice*_fusion' / 'wrapped_scatter')."""
+    _UPDATES = ("dynamic-update-slice", "scatter")
+    _SLICES = ("dynamic-slice", "gather", "slice")
+    op = ins.opcode
+    if op in _SLICES:
+        # slicing/gathering touches only the extracted region: read + write
+        # of the result (counting the full source would charge e.g. every
+        # per-layer KV-cache slice with the whole (L,B,S,KH,hd) stack, or
+        # every embedding lookup with the whole vocab table)
+        return 2.0 * _type_bytes(ins.type_str)
+    if op in _UPDATES:
+        upd_idx = 1 if op == "dynamic-update-slice" else 2
+        if len(ins.operands) <= upd_idx:
+            return float(_type_bytes(ins.type_str))
+        # read update + write region (+ small indices, ignored)
+        return 2.0 * _type_bytes(_operand_type(comp, ins.operands[upd_idx]))
+    if op != "fusion":
+        return None
+    called = _CALLED_RE.findall(ins.attrs)
+    sub = comps.get(called[0]) if called else None
+    if sub is None or not sub.instrs:
+        return None
+    roots = [i for i in sub.instrs if i.is_root]
+    root = roots[0] if roots else sub.instrs[-1]
+    if root.opcode in _UPDATES:
+        upd_idx = 1 if root.opcode == "dynamic-update-slice" else 2
+        if len(root.operands) <= upd_idx:
+            return float(_type_bytes(ins.type_str))
+        return 2.0 * _type_bytes(_operand_type(sub, root.operands[upd_idx]))
+    # cast/slice-only fusions: bodies made purely of dtype casts, layout
+    # bitcasts and slice/update ops. The casts exist because the CPU backend
+    # emulates bf16 in f32 and round-trips the FULL loop-carried buffer per
+    # iteration — on the TPU target (native bf16, in-place DUS aliasing) only
+    # the touched region moves. Charge 2x the updated/sliced region.
+    _CASTY = {"convert", "bitcast", "copy", "reshape"} | set(_SLICES) | set(
+        _UPDATES
+    )
+    body = [
+        i for i in sub.instrs if i.opcode not in ("parameter", "constant")
+    ]
+    if body and all(i.opcode in _CASTY for i in body):
+        touched = 0.0
+        for i in body:
+            if i.opcode == "dynamic-update-slice" and len(i.operands) > 1:
+                touched += 2.0 * _type_bytes(
+                    _operand_type(sub, i.operands[1])
+                )
+            elif i.opcode == "scatter" and len(i.operands) > 2:
+                touched += 2.0 * _type_bytes(
+                    _operand_type(sub, i.operands[2])
+                )
+            elif i.opcode in _SLICES:
+                touched += 2.0 * _type_bytes(i.type_str)
+        if touched > 0:
+            return touched
+        return 2.0 * _type_bytes(ins.type_str)  # pure cast: read + write once
+
+    # general fusion: per-operand utilization — a parameter consumed ONLY by
+    # slice/gather ops contributes its slice results, not the full buffer
+    # (catches convert-of-a-cache-slice fusions whose root is the convert)
+    params = [i for i in sub.instrs if i.opcode == "parameter"]
+    if not params:
+        return None
+    sliced_any = False
+    total = float(_type_bytes(ins.type_str))  # output write
+    by_param = {pi.name: pi for pi in params}
+    consumers: dict[str, list] = {pi.name: [] for pi in params}
+    for j in sub.instrs:
+        for o in j.operands:
+            if o in by_param:
+                consumers[o].append(j)
+    for operand, pi in zip(ins.operands, params):
+        cons = consumers.get(pi.name, [])
+        if cons and all(c.opcode in _SLICES for c in cons):
+            total += sum(_type_bytes(c.type_str) for c in cons)
+            sliced_any = True
+        else:
+            total += _type_bytes(_operand_type(comp, operand))
+    return total if sliced_any else None
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems = _type_elems(ins.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    lhs_t = _operand_type(comp, ins.operands[0]) if ins.operands else ""
+    sm = _SHAPE_RE.search(lhs_t)
+    contracted = 1
+    if sm:
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        for c in cdims:
+            if c < len(dims):
+                contracted *= dims[c]
+    return 2.0 * out_elems * contracted
+
+
+def _conv_flops(comp: Computation, ins: Instr) -> float:
+    # flops = 2 × output elems × (kernel elems × Cin / feature_group)
+    out_elems = _type_elems(ins.type_str)
+    rhs_t = _operand_type(comp, ins.operands[1]) if len(ins.operands) > 1 else ""
+    sm = _SHAPE_RE.search(rhs_t)
+    if not sm:
+        return 0.0
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    out_feat = max(dims) if dims else 1  # conservative: exclude output-feature dim
+    kernel = 1
+    for d in dims:
+        kernel *= d
+    return 2.0 * out_elems * max(kernel // max(out_feat, 1), 1)
+
+
+def analyze_computation(
+    comps: dict[str, Computation],
+    name: str,
+    *,
+    count_bytes: bool = True,
+    _depth: int = 0,
+) -> Cost:
+    cost = Cost()
+    comp = comps.get(name)
+    if comp is None or _depth > 64:
+        return cost
+    for ins in comp.instrs:
+        op = ins.opcode
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVES:
+            if op.endswith("-done"):
+                continue  # counted at -start
+            cost.collective_bytes[base] = (
+                cost.collective_bytes.get(base, 0.0) + _type_bytes(ins.type_str)
+            )
+            if count_bytes:
+                cost.bytes += _type_bytes(ins.type_str) + sum(
+                    _type_bytes(_operand_type(comp, o)) for o in ins.operands
+                )
+            continue
+        if op == "dot":
+            cost.flops += _dot_flops(comp, ins)
+        elif op == "convolution":
+            cost.flops += _conv_flops(comp, ins)
+        if op == "while":
+            m = _TRIP_RE.search(ins.attrs)
+            trip = int(m.group(1)) if m else 1
+            if not m:
+                cost.unknown_trip_loops += 1
+            called = _CALLED_RE.findall(ins.attrs)
+            body = [c for c in called]  # condition cost is negligible but cheap
+            for c in body:
+                sub = analyze_computation(
+                    comps, c, count_bytes=count_bytes, _depth=_depth + 1
+                )
+                cost.add(sub, mult=float(trip))
+            continue
+        if op == "conditional":
+            bm = _BRANCHES_RE.search(ins.attrs)
+            branches = (
+                [b.strip() for b in bm.group(1).split(",")] if bm else []
+            )
+            for c in branches:
+                # upper bound: all branches counted
+                cost.add(
+                    analyze_computation(
+                        comps, c, count_bytes=count_bytes, _depth=_depth + 1
+                    )
+                )
+            continue
+        if op in ("call", "fusion", "custom-call", "reduce", "sort", "map",
+                  "reduce-window", "select-and-scatter", "scatter",
+                  "async-start"):
+            # flops recursion into called computations (dot inside fusion);
+            # bytes stay at the boundary (fusion = one HBM round trip)
+            for c in _CALLED_RE.findall(ins.attrs):
+                sub = analyze_computation(
+                    comps, c, count_bytes=False, _depth=_depth + 1
+                )
+                cost.add(sub)
+        if count_bytes and (op not in _FREE_OPS or op in ("fusion", "call")):
+            fixed = _inplace_update_bytes(comps, comp, ins)
+            if fixed is not None:
+                cost.bytes += fixed
+            else:
+                cost.bytes += _type_bytes(ins.type_str) + sum(
+                    _type_bytes(_operand_type(comp, o)) for o in ins.operands
+                )
+    return cost
+
+
+def per_opcode_bytes(text: str, top: int = 12) -> list[tuple[str, float]]:
+    """Trip-scaled byte attribution per opcode — the §Perf profiling view."""
+    comps = parse_hlo(text)
+    acc: dict[str, float] = {}
+
+    def walk(name: str, mult: float, depth: int = 0) -> None:
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return
+        for ins in comp.instrs:
+            op = ins.opcode
+            base = op[:-6] if op.endswith("-start") else op
+            if op == "while":
+                m = _TRIP_RE.search(ins.attrs)
+                trip = int(m.group(1)) if m else 1
+                for c in _CALLED_RE.findall(ins.attrs):
+                    walk(c, mult * trip, depth + 1)
+                continue
+            if op.endswith("-done"):
+                continue
+            if op in _FREE_OPS and op not in ("fusion", "call"):
+                continue
+            b = _inplace_update_bytes(comps, comp, ins)
+            if b is None:
+                b = _type_bytes(ins.type_str) + sum(
+                    _type_bytes(_operand_type(comp, o)) for o in ins.operands
+                )
+            acc[base] = acc.get(base, 0.0) + mult * b
+
+    m = re.search(r"^ENTRY\s+(%[\w.\-]+)", text, re.MULTILINE)
+    if m:
+        walk(m.group(1), 1.0)
+    return sorted(acc.items(), key=lambda kv: -kv[1])[:top]
+
+
+def per_source_bytes(text: str, top: int = 15) -> list[tuple[str, float]]:
+    """Trip-scaled byte attribution per op_name metadata prefix (maps bytes
+    back to the jax source construct that emitted them)."""
+    comps = parse_hlo(text)
+    acc: dict[str, float] = {}
+    name_re = re.compile(r'op_name="([^"]*)"')
+
+    def walk(name: str, mult: float, depth: int = 0) -> None:
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                m = _TRIP_RE.search(ins.attrs)
+                trip = int(m.group(1)) if m else 1
+                for c in _CALLED_RE.findall(ins.attrs):
+                    walk(c, mult * trip, depth + 1)
+                continue
+            if op.endswith("-done"):
+                continue
+            if op in _FREE_OPS and op not in ("fusion", "call"):
+                continue
+            b = _inplace_update_bytes(comps, comp, ins)
+            if b is None:
+                b = _type_bytes(ins.type_str) + sum(
+                    _type_bytes(_operand_type(comp, o)) for o in ins.operands
+                )
+            nm = name_re.search(ins.attrs)
+            key = "?"
+            if nm:
+                parts = nm.group(1).split("/")
+                # keep the informative tail: last two path segments
+                key = "/".join(parts[-2:]) if len(parts) > 1 else parts[-1]
+            acc[key] = acc.get(key, 0.0) + mult * b
+
+    m = re.search(r"^ENTRY\s+(%[\w.\-]+)", text, re.MULTILINE)
+    if m:
+        walk(m.group(1), 1.0)
+    return sorted(acc.items(), key=lambda kv: -kv[1])[:top]
+
+
+def analyze_hlo(text: str) -> Cost:
+    comps = parse_hlo(text)
+    entry = None
+    m = re.search(r"^ENTRY\s+(%[\w.\-]+)", text, re.MULTILINE)
+    if m:
+        entry = m.group(1)
+    else:  # fall back: computation named %main*
+        for n in comps:
+            if n.startswith("%main"):
+                entry = n
+                break
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return analyze_computation(comps, entry)

@@ -1,0 +1,61 @@
+"""Input/activation sharding assignment for the dry-run and launchers.
+
+Batch dims shard over the (pod×)data axes; KV/attention head dims and
+expert/state dims shard over `model`, guarded by divisibility (dims smaller
+than the axis stay replicated rather than degenerately padded — e.g. the
+B=1 long_500k cells)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.base import fsdp_axes
+
+
+def _axsize(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return int(mesh.shape[ax])
+
+
+def _maybe(mesh, ax, dim: int):
+    """Use axis only if the dim divides evenly (else replicate)."""
+    return ax if dim % max(_axsize(mesh, ax), 1) == 0 and dim >= _axsize(mesh, ax) else None
+
+
+def input_spec_for(name: str, shape: tuple, mesh) -> P:
+    ax = fsdp_axes(mesh)
+    d, m = ax.data, ax.model
+    nd = len(shape)
+    if name in ("tokens", "labels", "lengths"):
+        return P(_maybe(mesh, d, shape[0]), *([None] * (nd - 1)))
+    if name in ("frames", "patches"):
+        return P(_maybe(mesh, d, shape[0]), None, None)
+    if name in ("k_cache", "v_cache", "xk_cache", "xv_cache"):
+        # (L, B, S, KH, hd): prefer head sharding; fall back to sequence
+        # sharding over `model` when KH doesn't divide (ring-style)
+        kh_ax = _maybe(mesh, m, shape[3])
+        s_ax = _maybe(mesh, m, shape[2]) if kh_ax is None else None
+        return P(None, _maybe(mesh, d, shape[1]), s_ax, kh_ax, None)
+    if name == "ssm_h":  # (L, B, H, N, P)
+        return P(None, _maybe(mesh, d, shape[1]), _maybe(mesh, m, shape[2]), None, None)
+    if name == "conv_buf":  # (L, B, K-1, Ck)
+        return P(None, _maybe(mesh, d, shape[1]), None, _maybe(mesh, m, shape[3]))
+    if name in ("mh", "mn"):  # (nm, B*H, 1, P, ...)
+        return P(None, _maybe(mesh, d, shape[1]), None, _maybe(mesh, m, shape[3]), None)
+    if name in ("sc", "sn", "sm"):  # (ns, B, D)
+        return P(None, _maybe(mesh, d, shape[1]), _maybe(mesh, m, shape[2]))
+    if name == "sy":  # (ns, B, H, P)
+        return P(None, _maybe(mesh, d, shape[1]), None, _maybe(mesh, m, shape[3]))
+    return P(*([None] * nd))
+
+
+def batch_shardings(specs: dict, mesh) -> dict:
+    return {
+        k: NamedSharding(mesh, input_spec_for(k, v.shape, mesh))
+        for k, v in specs.items()
+    }

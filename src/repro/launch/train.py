@@ -1,0 +1,171 @@
+"""Production-shaped training driver (CPU-runnable on reduced configs).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --ckpt-every 20
+
+Wires together every fault-tolerance layer from DESIGN.md §5:
+  * deterministic sharded TokenLoader (dead-host shard reassignment),
+  * StragglerMonitor (slow-step flagging, shard rebalancing),
+  * CheckpointManager (async atomic saves, retention, resume),
+  * preemption handling (SIGTERM → final blocking checkpoint → clean exit),
+  * optional int8 error-feedback gradient compression (inter-pod analog).
+
+On a real cluster the same driver runs under ``jax.distributed`` with the
+production mesh from ``launch/mesh.py``; on CPU it uses the 1-device mesh and
+reduced configs so the whole loop (including restart) is testable.
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, restore_onto_mesh
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.data.loader import TokenLoader
+from repro.distributed import StepTimer, StragglerMonitor, ef_init, compressed_gradient_update
+from repro.models import build_model
+from repro.train.step import init_opt_state, make_train_step
+
+
+def train_loop(
+    arch: str = "qwen2-0.5b",
+    reduced: bool = True,
+    steps: int = 50,
+    batch: int = 8,
+    seq: int = 128,
+    lr: float = 1e-3,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 20,
+    resume: bool = False,
+    compress: bool = False,
+    kill_host: int | None = None,
+    kill_at_step: int = -1,
+    seed: int = 0,
+    log_every: int = 10,
+    print_fn=print,
+) -> dict:
+    cfg = reduced_config(arch) if reduced else get_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    opt_state = init_opt_state(model, params)
+    ef_state = ef_init(params) if compress else None
+
+    monitor = StragglerMonitor(n_hosts=4)
+    loader = TokenLoader(
+        global_batch=batch, seq_len=seq, vocab=cfg.vocab_size,
+        seed=seed, n_shards=4, monitor=monitor,
+    )
+    mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+
+    start_step = 0
+    if resume and mgr is not None and mgr.latest_step() is not None:
+        s, tree, meta = load_checkpoint(ckpt_dir)
+        shardings = jax.tree.map(lambda x: None, tree)
+        state = restore_onto_mesh(tree, shardings)
+        params, opt_state = state["params"], state["opt"]
+        # leaf dtypes ride through restore_onto_mesh's bf16 re-view
+        start_step = s + 1
+        print_fn(f"resumed from step {s}")
+
+    raw_step = make_train_step(model, lr=lr)
+
+    if compress:
+        def step_fn(params, opt_state, batch, ef):
+            # quantize/EF-roundtrip the grads the way the inter-pod hop would
+            from repro.train.optimizer import adamw_update, adafactor_update
+            loss, grads = jax.value_and_grad(
+                lambda p, b: model.loss(p, b)
+            )(params, batch)
+            grads, ef = compressed_gradient_update(grads, ef)
+            upd = adamw_update if cfg.optimizer == "adamw" else adafactor_update
+            new_p, new_o = upd(grads, opt_state, params, lr=lr)
+            return new_p, new_o, {"loss": loss}, ef
+
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        jit_step = jax.jit(raw_step, donate_argnums=(0, 1))
+
+    # preemption: SIGTERM triggers one final blocking checkpoint
+    preempted = {"flag": False}
+
+    def _on_term(sig, frame):
+        preempted["flag"] = True
+
+    old = signal.signal(signal.SIGTERM, _on_term)
+
+    losses = []
+    try:
+        for step in range(start_step, steps):
+            if kill_host is not None and step == kill_at_step:
+                monitor.mark_dead(kill_host)  # simulate a host failure
+                print_fn(f"host {kill_host} marked dead at step {step}; "
+                         f"shards reassigned")
+            # every host materializes its assigned shards; on this 1-host run
+            # we assemble the full global batch (shard math identical)
+            all_shards = [
+                s for h, ss in monitor.plan_shards(loader.n_shards).items()
+                for s in ss
+            ]
+            np_batch = loader.batch(step, sorted(all_shards))
+            dev_batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
+            with StepTimer(monitor) as t:
+                if compress:
+                    params, opt_state, metrics, ef_state = jit_step(
+                        params, opt_state, dev_batch, ef_state
+                    )
+                else:
+                    params, opt_state, metrics = jit_step(
+                        params, opt_state, dev_batch
+                    )
+                loss = float(metrics["loss"])
+            losses.append(loss)
+            if t.was_straggler:
+                print_fn(f"step {step}: straggler step ({t.last:.2f}s)")
+            if step % log_every == 0:
+                print_fn(f"step {step}: loss={loss:.4f} ({t.last:.2f}s)")
+            if mgr is not None and ckpt_every and (step + 1) % ckpt_every == 0:
+                mgr.save(step, {"params": params, "opt": opt_state})
+            if preempted["flag"]:
+                print_fn(f"preempted at step {step}: draining checkpoint")
+                if mgr is not None:
+                    mgr.save(step, {"params": params, "opt": opt_state},
+                             blocking=True)
+                break
+    finally:
+        if mgr is not None:
+            mgr.flush()
+        signal.signal(signal.SIGTERM, old)
+
+    return {"losses": losses, "params": params, "final_step": step}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = train_loop(**{k.replace("-", "_"): v for k, v in vars(args).items()})
+    first, last = out["losses"][0], out["losses"][-1]
+    print(f"done: loss {first:.4f} -> {last:.4f}")
+    sys.exit(0 if np.isfinite(last) else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.base import ArchConfig, Shapes, param_count
+from repro.models.zoo import build_model

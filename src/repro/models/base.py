@@ -1,0 +1,260 @@
+"""Architecture configs + sharding rules for the LM model zoo.
+
+Parameters are stored as nested dicts with *stacked* per-layer leaves
+(leading L dimension) so layer stacks run under ``jax.lax.scan`` — bounding
+both compile time (one traced body for 126-layer llama3-405b) and, with
+remat, live activation memory.
+
+Sharding follows DESIGN.md §5: TP over ``model`` (column-parallel QKV/up,
+row-parallel O/down, vocab-sharded embeddings), ZeRO-3/FSDP over ``data``
+(and ``pod`` when multi-pod), sequence-parallel activations for long-context
+shapes, experts over ``model`` (EP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+Shapes = SHAPES
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    mlp_act: str = "silu_gated"  # or "gelu"
+    # --- MoE ---
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_shared_experts: int = 0
+    moe_shared_d_ff: int = 0
+    moe_dense_residual: bool = False  # arctic: dense FFN in parallel
+    moe_capacity_factor: float = 1.25
+    # "einsum": GShard one-hot dispatch (SPMD-friendly baseline)
+    # "scatter": sort-free scatter/gather dispatch — no O(T·E·C) one-hots,
+    #            no dispatch matmul flops (see EXPERIMENTS.md §Perf/moe)
+    moe_dispatch: str = "einsum"
+    # pad the expert dim so it divides the `model` axis and EP sharding
+    # engages (e.g. qwen2-moe 60 -> 64); padded experts are router-masked
+    moe_pad_experts: int = 0
+    # repeat-KV + zero-pad attention heads to this count inside train/prefill
+    # attention so the score tensor's head dim divides the `model` axis
+    # (llava 56H kv8 -> 64 MHA-view heads). Exact-math: repeat preserves the
+    # GQA q->kv mapping; padded q heads are sliced off before the output
+    # projection. Decode is untouched (memory-bound, caches keep KH heads).
+    tp_pad_heads: int = 0
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    slstm_every: int = 0  # xlstm: every k-th layer is sLSTM
+    attn_every: int = 0  # zamba2: shared attn block after every k SSM layers
+    sliding_window: int = 0  # cap attention window (hybrid long-context)
+    # --- enc-dec / frontends ---
+    encoder_layers: int = 0
+    frontend: str = "none"  # "audio" | "vision" (STUB: embeddings provided)
+    frontend_tokens: int = 0  # patches/frames prepended to the sequence
+    # --- numerics / memory / runtime ---
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    optimizer: str = "adamw"  # "adamw" | "adafactor"
+    optimizer_dtype: str = "float32"  # bf16 moments for the giants
+    accum_steps: int = 1  # gradient accumulation (microbatching) for train
+    act_shard: str = "none"  # "seq": Megatron-SP residual-stream sharding
+    # long-context handling: "full" attention or "skip" (arch can't do 500k)
+    long_context: str = "skip"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def supports_shape(self, shape: str) -> tuple[bool, str]:
+        if shape == "long_500k" and self.long_context == "skip":
+            return False, (
+                "pure full-attention arch: 500k dense decode is architecturally "
+                "meaningless (see DESIGN.md shape skips)"
+            )
+        return True, ""
+
+
+def param_count(cfg: ArchConfig) -> int:
+    """Approximate parameter count (embeddings + stacks), for roofline."""
+    D, F, V, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    total = V * D  # embed
+    if not cfg.tie_embeddings:
+        total += V * D
+    attn = D * H * hd + 2 * D * KH * hd + H * hd * D
+    if cfg.mlp_act == "silu_gated":
+        mlp = 3 * D * F
+    else:
+        mlp = 2 * D * F
+    if cfg.family == "moe":
+        moe = cfg.moe_experts * 3 * D * cfg.d_ff + D * cfg.moe_experts
+        if cfg.moe_shared_experts:
+            moe += 3 * D * cfg.moe_shared_d_ff
+        if cfg.moe_dense_residual:
+            moe += 3 * D * cfg.d_ff
+        total += L * (attn + moe + 2 * D)
+    elif cfg.family in ("ssm",):
+        din, N = cfg.d_inner, cfg.ssm_state
+        ssm = D * (2 * din + 2 * N + cfg.ssm_heads) + din * D + 2 * D
+        total += L * ssm
+    elif cfg.family == "hybrid":
+        din, N = cfg.d_inner, cfg.ssm_state
+        ssm = D * (2 * din + 2 * N + cfg.ssm_heads) + din * D + 2 * D
+        total += L * ssm + (attn + 3 * D * F + 2 * D)  # one shared block
+    else:
+        total += L * (attn + mlp + 2 * D)
+        if cfg.encoder_layers:
+            total += cfg.encoder_layers * (attn + mlp + 2 * D)
+            total += cfg.n_layers * (attn + 2 * D)  # cross-attention
+    return int(total)
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: top-k experts only) — for MODEL_FLOPS."""
+    if cfg.family != "moe":
+        return param_count(cfg)
+    D, L = cfg.d_model, cfg.n_layers
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    attn = D * H * hd + 2 * D * KH * hd + H * hd * D
+    moe_active = cfg.moe_top_k * 3 * D * cfg.d_ff + D * cfg.moe_experts
+    if cfg.moe_shared_experts:
+        moe_active += 3 * D * cfg.moe_shared_d_ff
+    if cfg.moe_dense_residual:
+        moe_active += 3 * D * cfg.d_ff
+    total = 2 * cfg.vocab_size * D + L * (attn + moe_active + 2 * D)
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    data: Any = "data"  # str or tuple (("pod","data") when multi-pod)
+    model: str = "model"
+
+
+def fsdp_axes(mesh: jax.sharding.Mesh) -> MeshAxes:
+    if "pod" in mesh.axis_names:
+        return MeshAxes(data=("pod", "data"), model="model")
+    return MeshAxes(data="data", model="model")
+
+
+# Param-leaf sharding is keyed on the leaf's path suffix. Conventions:
+#   *_col : (in, out) column-parallel  -> P(data, model)
+#   *_row : (in, out) row-parallel     -> P(model, data)
+#   embed : (vocab, d)                 -> P(model, data)
+#   *_exp : (E, in, out) expert        -> P(model, data, None)
+#   bias_col : (out,) column bias      -> P(model)
+#   norm / scalars                     -> replicated
+def leaf_spec(path: str, ndim: int, ax: MeshAxes, stacked: bool) -> P:
+    pre = (None,) if stacked else ()
+    if path.endswith("out_embed"):  # (D, V): vocab over model, D replicated
+        return P(None, ax.model)
+    if path.endswith("embed"):  # (V, D): vocab over model (shard_map lookup
+        return P(ax.model, None)  # needs D replicated)
+    if path.endswith("_col"):
+        if ndim - len(pre) == 1:  # column bias
+            return P(*pre, ax.model)
+        return P(*pre, ax.data, ax.model)
+    if path.endswith("_row"):
+        return P(*pre, ax.model, ax.data)
+    if path.endswith("_exp"):  # (E, in, out)
+        return P(*pre, ax.model, ax.data, None)
+    if path.endswith("_dp"):  # shard first non-stack dim over data only
+        return P(*pre, ax.data)
+    return P(*pre) if pre else P()
+
+
+def tree_paths(tree: dict, prefix: str = "") -> dict[str, Any]:
+    out = {}
+    for k, v in tree.items():
+        p = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(tree_paths(v, p))
+        else:
+            out[p] = v
+    return out
+
+
+def _axis_size(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return int(mesh.shape[ax])
+
+
+def shardings_for(
+    params: dict, mesh: jax.sharding.Mesh, stacked_prefixes: tuple[str, ...] = ("layers", "encoder_layers")
+):
+    """Mirror the param tree with NamedShardings per the leaf rules.
+
+    Dims that don't divide their assigned mesh axis fall back to replicated
+    (jit in_shardings require exact divisibility)."""
+    ax = fsdp_axes(mesh)
+
+    def rec(tree, path):
+        if isinstance(tree, dict):
+            return {k: rec(v, f"{path}/{k}" if path else k) for k, v in tree.items()}
+        stacked = any(path.startswith(p) or f"/{p}/" in f"/{path}/" for p in stacked_prefixes)
+        ndim = len(tree.shape)
+        spec = leaf_spec(path.split("/")[-1], ndim, ax, stacked)
+        if len(spec) > ndim:
+            spec = P(*list(spec)[:ndim])
+        fixed = [
+            a if a is not None and tree.shape[i] % _axis_size(mesh, a) == 0
+            else None
+            for i, a in enumerate(spec)
+        ]
+        return jax.sharding.NamedSharding(mesh, P(*fixed))
+
+    return rec(params, "")
+
+
+def struct(shape, dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)

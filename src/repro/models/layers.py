@@ -1,0 +1,338 @@
+"""Core layers: norms, RoPE, memory-bounded attention, MLPs, embeddings.
+
+All functions are pure and operate on param sub-dicts whose leaf names carry
+their sharding convention (``*_col`` column-parallel, ``*_row`` row-parallel,
+``embed`` vocab-sharded — see models/base.py). Attention for long sequences
+is the two-level online-softmax form (scan over KV chunks inside a scan over
+Q chunks) so live memory is O(chunk²) instead of O(S²) — the XLA analog of
+the Pallas flash kernel, used on non-TPU backends and in dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def seq_shard(h: jnp.ndarray, cfg, mesh) -> jnp.ndarray:
+    """Megatron-SP: shard the residual stream's sequence dim over `model`
+    between blocks. Applied at layer-scan boundaries so the remat-saved
+    carries are 1/TP-size. No-op unless cfg.act_shard == 'seq'."""
+    if mesh is None or getattr(cfg, "act_shard", "none") != "seq":
+        return h
+    from jax.sharding import PartitionSpec as P
+
+    dax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    if h.ndim == 3 and h.shape[1] % mesh.shape["model"] == 0:
+        return jax.lax.with_sharding_constraint(h, P(dax, "model", None))
+    return h
+
+
+def seq_gather(h: jnp.ndarray, cfg, mesh) -> jnp.ndarray:
+    """Megatron-SP companion: explicit sequence all-gather at block entry so
+    the block's matmuls see clean (batch-sharded, seq-replicated) layouts —
+    without this, the partitioner may instead gather FULL weight matrices
+    out of the layer scan (observed: 3.25 GiB f32 whole-matrix gathers)."""
+    if mesh is None or getattr(cfg, "act_shard", "none") != "seq":
+        return h
+    from jax.sharding import PartitionSpec as P
+
+    dax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    if h.ndim == 3:
+        return jax.lax.with_sharding_constraint(h, P(dax, None, None))
+    return h
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) rotary over last dim; positions: (..., S)."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    ok = kp <= qp if causal else jnp.full((q_pos.shape[0], k_pos.shape[0]), True)
+    if window > 0:
+        ok = ok & (kp > qp - window)
+    return ok
+
+
+def attention_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Two-level online-softmax attention.
+
+    q: (B,Sq,H,D); k,v: (B,Skv,KH,D); GQA via H % KH == 0.
+    q_offset: global position of q[0] (for decode/prefix chunking).
+    """
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    cq = min(q_chunk, Sq)
+    ck = min(k_chunk, Skv)
+    # pad to multiples
+    pq = (-Sq) % cq
+    pk = (-Skv) % ck
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = q.shape[1] // cq, k.shape[1] // ck
+    # KV blocks stream in their storage dtype; dots accumulate in f32 via
+    # preferred_element_type — pre-casting bf16 K/V to f32 would double the
+    # streamed bytes (EXPERIMENTS.md §Perf/decode applies here too)
+    qc = (q.astype(jnp.float32) * scale).astype(k.dtype).reshape(
+        B, nq, cq, KH, G, D
+    )
+    kc = k.reshape(B, nk, ck, KH, D)
+    vc = v.reshape(B, nk, ck, KH, D)
+
+    def q_step(_, qi):
+        qb, iq = qi  # qb: (B,cq,KH,G,D)
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+
+        @jax.checkpoint  # recompute p/alpha in backward: O(carry) residency
+        def kv_step(carry, kvj):
+            m, l, acc = carry
+            kb, vb, jk = kvj
+            k_pos = jk * ck + jnp.arange(ck)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qb, kb,
+                preferred_element_type=jnp.float32,
+            )
+            ok = _mask(q_pos, k_pos, causal, window)
+            # mask padded kv as well
+            ok = ok & (k_pos < Skv)[None, :]
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, cq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KH,G,cq,D)
+        return None, out
+
+    qs = qc.transpose(1, 0, 2, 3, 4, 5)  # (nq,B,cq,KH,G,D)
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    # outs: (nq,B,KH,G,cq,D) -> (B, nq*cq, KH*G, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * cq, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attention_decode(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """One-token attention over a cache. q:(B,H,D); caches:(B,S,KH,D).
+
+    Caches are consumed in their storage dtype with f32 accumulation
+    (``preferred_element_type``) — pre-casting bf16 caches to f32 would
+    materialize a full f32 copy of every layer's cache per step, doubling
+    decode's HBM traffic (measured: EXPERIMENTS.md §Perf/decode)."""
+    B, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qg = (q.astype(jnp.float32) * scale).astype(k_cache.dtype).reshape(B, KH, G, D)
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    pos = jnp.arange(S)[None, :]
+    ok = pos < lengths[:, None]
+    if window > 0:
+        ok = ok & (pos > lengths[:, None] - 1 - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + attention)
+# ---------------------------------------------------------------------------
+
+
+def attn_proj_qkv(p: dict, x: jnp.ndarray, cfg) -> tuple:
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq_col"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk_col"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv_col"])
+    if cfg.qkv_bias:
+        q = q + p["bq_col"]
+        k = k + p["bk_col"]
+        v = v + p["bv_col"]
+    B, S = x.shape[0], x.shape[1]
+    return (
+        q.reshape(B, S, H, hd),
+        k.reshape(B, S, KH, hd),
+        v.reshape(B, S, KH, hd),
+    )
+
+
+def expand_heads_for_tp(q, k, v, cfg):
+    """Repeat-KV (GQA -> MHA view) + zero-pad heads to cfg.tp_pad_heads so
+    the attention score tensor's head dim divides the `model` axis.
+
+    Exact math: MHA head h uses repeated kv[h] == original kv[h // G], the
+    same q->kv assignment GQA computes; zero-padded q heads produce outputs
+    that the caller slices away before the output projection. The xG kv
+    expansion is itself TP-sharded, strictly cheaper than the replicated
+    attention these head counts otherwise force (EXPERIMENTS.md §Perf)."""
+    Hp = getattr(cfg, "tp_pad_heads", 0)
+    H, KH = q.shape[2], k.shape[2]
+    if not Hp or Hp < H:
+        return q, k, v, H
+    if KH < H:
+        G = H // KH
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    pad = Hp - H
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    return q, k, v, H
+
+
+def attn_block(
+    p: dict, x: jnp.ndarray, cfg, *, positions, causal=True, window=0,
+    kv_override=None,
+) -> jnp.ndarray:
+    """Full-sequence attention block (train/prefill).
+
+    kv_override: (k, v) for cross-attention (already projected)."""
+    B, S, Dm = x.shape
+    q, k, v = attn_proj_qkv(p, x, cfg)
+    if kv_override is not None:
+        k, v = kv_override
+        q = rope(q, positions, cfg.rope_theta) if cfg.rope_theta > 0 else q
+    elif cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q, k, v, H = expand_heads_for_tp(q, k, v, cfg)
+    out = attention_chunked(q, k, v, causal=causal, window=window)
+    out = out[:, :, :H].reshape(B, S, cfg.n_heads * cfg.hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo_row"])
+
+
+def mlp_block(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    if cfg.mlp_act == "silu_gated":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg_col"])
+        u = jnp.einsum("bsd,df->bsf", x, p["wu_col"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:  # gelu
+        h = jnp.einsum("bsd,df->bsf", x, p["wu_col"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["wd_row"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(embed: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(embed, tokens, axis=0)
+
+
+def lm_logits(x: jnp.ndarray, out_embed: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,D); out_embed: (D,V) column-parallel."""
+    return jnp.einsum("bsd,dv->bsv", x, out_embed)
+
+
+def xent_loss_chunked(
+    x: jnp.ndarray, out_embed: jnp.ndarray, labels: jnp.ndarray,
+    chunk: int = 512, vocab_size: Optional[int] = None,
+) -> jnp.ndarray:
+    """Sequence-chunked softmax cross-entropy: bounds the live logits tensor
+    to (B, chunk, V) instead of (B, S, V). ``vocab_size`` masks padded vocab
+    columns (embeddings are padded to mesh-divisible widths)."""
+    B, S, D = x.shape
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = x.shape[1] // chunk
+    xc = x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute per-chunk logits in backward (never stored)
+    def step(carry, xl):
+        tot, cnt = carry
+        xb, lb = xl
+        logits = jnp.einsum("bsd,dv->bsv", xb, out_embed).astype(jnp.float32)
+        if vocab_size is not None and vocab_size < out_embed.shape[1]:
+            pad_mask = jnp.arange(out_embed.shape[1]) >= vocab_size
+            logits = jnp.where(pad_mask, -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (lb >= 0).astype(jnp.float32)
+        tot = tot + ((lse - gold) * valid).sum()
+        cnt = cnt + valid.sum()
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.float32(0.0), jnp.float32(0.0)), (xc, lc)
+    )
+    return tot / jnp.maximum(cnt, 1.0)

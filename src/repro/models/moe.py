@@ -1,0 +1,163 @@
+"""Mixture-of-experts layer: GShard-style capacity dispatch, block-chunked.
+
+Experts are sharded over the ``model`` axis (EP); tokens arrive sharded over
+``data``. The dispatch einsum reshards token-major → expert-major, which the
+SPMD partitioner lowers to the expected all-to-all over ``model``. Dispatch
+tensors are O(tb · E · C) so tokens are processed in blocks of ``tb`` under
+lax.scan, keeping the dispatch one-hot bounded (~tens of MB) at 500k-token
+scales instead of O(T · E · C) (~tens of GB).
+
+Variants (per config):
+  * shared experts (qwen2-moe): always-on experts added to routed output;
+  * dense residual (arctic): a dense FFN runs in parallel with the MoE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _capacity(tb: int, k: int, E: int, cf: float) -> int:
+    c = int(np.ceil(tb * k / E * cf))
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def moe_ffn(p: dict, x: jnp.ndarray, cfg, token_block: int = 4096) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D). p holds router + expert weights.
+
+    Token blocks slice the SEQUENCE dim only — every block keeps the full
+    batch dim, so blocks stay sharded over `data` and the partitioner splits
+    each block's routing/dispatch/FFN across chips. (Blocking the flattened
+    (B·S) stream instead makes each block a single batch-row slice, which is
+    resident on ONE chip — the compiled program then replicates every block's
+    compute on all chips: a measured 16x executed-flop/byte inflation at
+    mesh data=16; see EXPERIMENTS.md §Perf/moe iteration 2.)
+    """
+    B, S, D = x.shape
+    x0 = x  # unpadded view for the shared/residual branches below
+    E_real, K = cfg.moe_experts, cfg.moe_top_k
+    E = p["w1_exp"].shape[0]  # possibly padded (moe_pad_experts)
+    sb = max(1, min(token_block // B, S))  # seq positions per block
+    pad = (-S) % sb
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nb = Sp // sb
+    tb = B * sb  # tokens per block (global)
+    # (B, Sp, D) -> (nb, B*sb, D), seq-major blocks with batch dim intact
+    xt = x.reshape(B, nb, sb, D).transpose(1, 0, 2, 3).reshape(nb, tb, D)
+    C = _capacity(tb, K, E_real, cfg.moe_capacity_factor)
+
+    w1, w2, w3 = p["w1_exp"], p["w2_exp"], p["w3_exp"]  # (E,D,F),(E,F,D),(E,D,F)
+    wr = p["router_col"]  # (D, E)
+
+    def _route(xb):
+        """Router + per-(token,k) capacity position. Shared by both
+        dispatch variants."""
+        logits = jnp.einsum("td,de->te", xb, wr).astype(jnp.float32)
+        if E > E_real:  # padded experts can never win the top-k
+            logits = jnp.where(jnp.arange(E) >= E_real, -1e30, logits)
+        gates = jax.nn.softmax(logits, axis=-1)
+        topv, topi = jax.lax.top_k(gates, K)  # (tb,K)
+        topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+        # position of each (token, k) within its expert's capacity buffer
+        onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)  # (tb,K,E)
+        flat = onehot.reshape(tb * K, E)
+        pos_in_e = jnp.cumsum(flat, axis=0) - flat  # (tb*K, E)
+        pos = (pos_in_e * flat).sum(-1).reshape(tb, K)  # (tb,K)
+        keep = pos < C
+        return topv, topi, pos, keep
+
+    def _experts(xe):
+        """(E,C,D) -> (E,C,D) expert FFNs."""
+        g = jnp.einsum("ecd,edf->ecf", xe, w1)
+        u = jnp.einsum("ecd,edf->ecf", xe, w3)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+        return jnp.einsum("ecf,efd->ecd", h, w2)
+
+    @jax.checkpoint  # dispatch one-hots recomputed in backward
+    def block_einsum(carry, xb):  # xb: (tb, D) — GShard one-hot dispatch
+        topv, topi, pos, keep = _route(xb)
+        disp = (
+            jax.nn.one_hot(topi, E, dtype=xb.dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=xb.dtype)[:, :, None, :]
+        )[..., :C]  # (tb,K,E,C)
+        disp_t = disp.sum(1)  # (tb,E,C)
+        xe = jnp.einsum("tec,td->ecd", disp_t, xb)  # (E,C,D)
+        ye = _experts(xe)
+        comb = (disp * topv.astype(xb.dtype)[..., None, None]).sum(1)  # (tb,E,C)
+        yb = jnp.einsum("tec,ecd->td", comb, ye)
+        return carry, yb
+
+    @jax.checkpoint
+    def block_scatter(carry, xb):  # sort-free scatter/gather dispatch
+        # The one-hot dispatch/combine einsums above cost O(tb·E·C·D) MXU
+        # flops and materialize a (tb,K,E,C) tensor — as expensive as the
+        # expert FFNs themselves (measured: EXPERIMENTS.md §Perf/moe).
+        # Every kept (token, k) owns a unique slot = expert·C + pos, so
+        # dispatch is a scatter and combine a gather — O(tb·K·D) bytes,
+        # zero matmul flops.
+        topv, topi, pos, keep = _route(xb)
+        slot = jnp.where(keep, topi * C + pos, E * C)  # (tb,K); E*C = trash
+        tok = jnp.broadcast_to(jnp.arange(tb)[:, None], (tb, K))
+        buf = jnp.zeros((E * C + 1, D), xb.dtype)
+        buf = buf.at[slot.reshape(-1)].set(
+            xb[tok.reshape(-1)], mode="drop", unique_indices=False
+        )
+        ye = _experts(buf[: E * C].reshape(E, C, D))
+        ye_flat = jnp.concatenate(
+            [ye.reshape(E * C, D), jnp.zeros((1, D), ye.dtype)]
+        )
+        gathered = ye_flat[slot]  # (tb,K,D)
+        w = jnp.where(keep, topv, 0.0).astype(xb.dtype)
+        yb = (gathered * w[..., None]).sum(1)
+        return carry, yb
+
+    block = (
+        block_scatter
+        if getattr(cfg, "moe_dispatch", "einsum") == "scatter"
+        else block_einsum
+    )
+    _, ys = jax.lax.scan(block, None, xt)
+    # (nb, B*sb, D) -> (B, Sp, D) -> strip seq padding
+    y = (
+        ys.reshape(nb, B, sb, D)
+        .transpose(1, 0, 2, 3)
+        .reshape(B, Sp, D)[:, :S]
+    )
+
+    if cfg.moe_shared_experts:
+        g = jnp.einsum("bsd,df->bsf", x0, p["ws1_col"])
+        u = jnp.einsum("bsd,df->bsf", x0, p["ws3_col"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x0.dtype) * u
+        y = y + jnp.einsum("bsf,fd->bsd", h, p["ws2_row"])
+    if cfg.moe_dense_residual:
+        g = jnp.einsum("bsd,df->bsf", x0, p["wr1_col"])
+        u = jnp.einsum("bsd,df->bsf", x0, p["wr3_col"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x0.dtype) * u
+        y = y + jnp.einsum("bsf,fd->bsd", h, p["wr2_row"])
+    return y
+
+
+def moe_param_shapes(cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    # expert dim padded at the PARAMETER level so shardings_for assigns
+    # P(model, ...) to *_exp leaves (EP engages); router masks the padding
+    E = max(cfg.moe_experts, getattr(cfg, "moe_pad_experts", 0) or 0)
+    shapes = {
+        "router_col": (D, E),
+        "w1_exp": (E, D, F),
+        "w2_exp": (E, F, D),
+        "w3_exp": (E, D, F),
+    }
+    if cfg.moe_shared_experts:
+        Fs = cfg.moe_shared_d_ff
+        shapes.update(
+            {"ws1_col": (D, Fs), "ws2_row": (Fs, D), "ws3_col": (D, Fs)}
+        )
+    if cfg.moe_dense_residual:
+        shapes.update(
+            {"wr1_col": (D, F), "wr2_row": (F, D), "wr3_col": (D, F)}
+        )
+    return shapes

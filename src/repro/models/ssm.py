@@ -1,0 +1,339 @@
+"""SSM blocks: Mamba2 (chunked SSD) and xLSTM (mLSTM matrix memory, sLSTM).
+
+The chunked SSD kernel is shared: within a chunk of length Q the recurrence
+is materialized as a (Q,Q) decay-masked attention-like contraction (the
+Mamba2 "quadratic mode"), across chunks a lax.scan carries the (H,N,P) state
+— O(S·Q) work and O(B·H·Q²) live memory instead of O(S²).
+
+mLSTM is the same machinery with B←k, C←q, per-head exponential input gate as
+dt and forget gate as the decay; sLSTM is a true sequential scan (scalar
+memory mixing — noted in DESIGN.md as inherently recurrent).
+
+Decode steps are single-token recurrent updates against carried (state, conv
+buffer) — O(1) in sequence length, which is what makes long_500k decode
+tractable for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Generic chunked SSD:  h_t = a_t · h_{t-1} + dt_t · (b_t ⊗ x_t),
+#                       y_t = c_t · h_t
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (B,S,H,P)
+    a_log: jnp.ndarray,  # (B,S,H)  log decay per step (<= 0)
+    b: jnp.ndarray,      # (B,S,N)
+    c: jnp.ndarray,      # (B,S,N)
+    dt: jnp.ndarray,     # (B,S,H)  input scale
+    chunk: int = 128,
+    h0: Optional[jnp.ndarray] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nb = x.shape[1] // Q
+
+    xc = x.reshape(B, nb, Q, H, P).transpose(1, 0, 2, 3, 4)
+    ac = a_log.reshape(B, nb, Q, H).transpose(1, 0, 2, 3).astype(jnp.float32)
+    bc = b.reshape(B, nb, Q, N).transpose(1, 0, 2, 3)
+    cc = c.reshape(B, nb, Q, N).transpose(1, 0, 2, 3)
+    dc = dt.reshape(B, nb, Q, H).transpose(1, 0, 2, 3)
+
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    @jax.checkpoint  # decay matrices recomputed in backward, never stored
+    def step(h, inputs):  # h: (B,H,N,P) f32
+        xb, ab, bb, cb, db = inputs
+        L = jnp.cumsum(ab, axis=1)  # (B,Q,H)
+        # intra-chunk: W[t,i,h] = exp(L_t - L_i) · (c_t·b_i), i<=t
+        cbm = jnp.einsum("bqn,bin->bqi", cb.astype(jnp.float32), bb.astype(jnp.float32))
+        decay = jnp.exp(
+            jnp.clip(L[:, :, None, :] - L[:, None, :, :], -60.0, 0.0)
+        )  # (B,Q,Q,H)
+        W = cbm[..., None] * decay * mask[None, :, :, None]
+        xt = xb.astype(jnp.float32) * db[..., None]  # (B,Q,H,P)
+        y_intra = jnp.einsum("bqih,bihp->bqhp", W, xt)
+        # inter-chunk: y += c_t · h · exp(L_t)
+        y_inter = jnp.einsum(
+            "bqn,bhnp,bqh->bqhp", cc_f(cb), h, jnp.exp(jnp.clip(L, -60.0, 0.0))
+        )
+        # state update: h' = h·exp(L_last) + Σ_i b_i ⊗ x̃_i · exp(L_last - L_i)
+        last = L[:, -1:, :]  # (B,1,H)
+        w_state = jnp.exp(jnp.clip(last - L, -60.0, 0.0))  # (B,Q,H)
+        h_new = h * jnp.exp(jnp.clip(last[:, 0][:, :, None, None], -60.0, 0.0)) + jnp.einsum(
+            "bin,bih,bihp->bhnp", cc_f(bb), w_state, xt
+        )
+        return h_new, (y_intra + y_inter)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    hT, ys = jax.lax.scan(step, h0, (xc, ac, bc, cc, dc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nb * Q, H, P)[:, :S]
+    return y.astype(x.dtype), hT
+
+
+def cc_f(t):
+    return t.astype(jnp.float32)
+
+
+def ssd_decode_step(
+    h: jnp.ndarray,      # (B,H,N,P) f32
+    x: jnp.ndarray,      # (B,H,P)
+    a_log: jnp.ndarray,  # (B,H)
+    b: jnp.ndarray,      # (B,N)
+    c: jnp.ndarray,      # (B,N)
+    dt: jnp.ndarray,     # (B,H)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    a = jnp.exp(jnp.clip(a_log.astype(jnp.float32), -60.0, 0.0))
+    xt = x.astype(jnp.float32) * dt[..., None]
+    h_new = h * a[..., None, None] + jnp.einsum("bn,bhp->bhnp", cc_f(b), xt)
+    y = jnp.einsum("bn,bhnp->bhp", cc_f(c), h_new)
+    return h_new, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 layer
+# ---------------------------------------------------------------------------
+
+
+def mamba2_proj(p: dict, x: jnp.ndarray, cfg):
+    """Input projections (separate matrices so TP shard boundaries align
+    with the semantic segments z/x/B/C/dt)."""
+    z = jnp.einsum("...d,de->...e", x, p["wz_col"])
+    xs = jnp.einsum("...d,de->...e", x, p["wx_col"])
+    bmat = jnp.einsum("...d,dn->...n", x, p["wb"])
+    cmat = jnp.einsum("...d,dn->...n", x, p["wc"])
+    dt = jnp.einsum("...d,dh->...h", x, p["wdt"])
+    return z, xs, bmat, cmat, dt
+
+
+def _causal_conv(xs: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. xs: (B,S,Ck); w: (K,Ck)."""
+    K = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xs.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out
+
+
+def mamba2_layer(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    B, S, D = x.shape
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = din // H
+    z, xs, bmat, cmat, dt = mamba2_proj(p, x, cfg)
+    act = lambda t: jax.nn.silu(t.astype(jnp.float32)).astype(x.dtype)
+    xs = act(_causal_conv(xs, p["conv_x"]))
+    bmat = act(_causal_conv(bmat, p["conv_b"]))
+    cmat = act(_causal_conv(cmat, p["conv_c"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_log = -jnp.exp(p["a_log"]) * dt  # (B,S,H)
+    xh = xs.reshape(B, S, H, P)
+    y, _ = ssd_chunked(xh, a_log, bmat, cmat, dt, chunk=cfg.ssm_chunk)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, din) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["wout_row"])
+
+
+def mamba2_decode(p: dict, x: jnp.ndarray, state, cfg):
+    """x: (B,D) one token; state: (h (B,H,N,P) f32, conv_buf (B,K-1,Ck))."""
+    B, D = x.shape
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = din // H
+    h, conv_buf = state  # conv_buf: (B, K-1, din + 2N)
+    z, xs, bmat, cmat, dt = mamba2_proj(p, x, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)  # (B, din+2N)
+    window = jnp.concatenate([conv_buf, conv_in[:, None, :]], axis=1)
+    wfull = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, wfull).astype(jnp.float32)
+    ).astype(x.dtype)
+    xs, bmat, cmat = jnp.split(conv_out, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a_log = -jnp.exp(p["a_log"]) * dt
+    h_new, y = ssd_decode_step(h, xs.reshape(B, H, P), a_log, bmat, cmat, dt)
+    y = y + xs.reshape(B, H, P) * p["d_skip"][None, :, None]
+    y = y.reshape(B, din) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["wout_row"])
+    return out, (h_new, window[:, 1:, :])
+
+
+def mamba2_param_shapes(cfg) -> dict:
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "wz_col": (cfg.d_model, din),
+        "wx_col": (cfg.d_model, din),
+        "wb": (cfg.d_model, N),
+        "wc": (cfg.d_model, N),
+        "wdt": (cfg.d_model, H),
+        "conv_x": (cfg.ssm_conv, din),
+        "conv_b": (cfg.ssm_conv, N),
+        "conv_c": (cfg.ssm_conv, N),
+        "dt_bias": (H,),
+        "a_log": (H,),
+        "d_skip": (H,),
+        "wout_row": (din, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory — SSD machinery) and sLSTM (sequential)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_layer(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """mLSTM: h_t = f_t·h + i_t·(k_t ⊗ v_t); y_t = q_t·h_t (per head)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    P = D // H
+    qkv = jnp.einsum("bsd,de->bse", x, p["wqkv_col"])  # (B,S,3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    gates = jnp.einsum("bsd,dg->bsg", x, p["wgate_col"]).astype(jnp.float32)
+    i_g, f_g = jnp.split(gates, 2, axis=-1)  # (B,S,H) each
+    f_log = -jax.nn.softplus(-f_g)  # log sigmoid ≤ 0
+    i_s = jnp.exp(jnp.clip(i_g, -30.0, 8.0))
+    vh = v.reshape(B, S, H, P)
+    # b ← k heads averaged into shared N=P state basis (per-head handled by
+    # folding head into batch for exactness)
+    kh = k.reshape(B, S, H, P)
+    qh = q.reshape(B, S, H, P)
+    # fold heads into batch so each head gets its own (N=P) basis
+    xf = vh.transpose(0, 2, 1, 3).reshape(B * H, S, 1, P)
+    af = f_log.transpose(0, 2, 1).reshape(B * H, S, 1)
+    bf = kh.transpose(0, 2, 1, 3).reshape(B * H, S, P) / (P ** 0.5)
+    cf = qh.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    df = i_s.transpose(0, 2, 1).reshape(B * H, S, 1)
+    y, _ = ssd_chunked(xf, af, bf, cf, df, chunk=cfg.ssm_chunk)
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    # normalizer: n_t = f·n + i·k ; denom = |q·n| (running, same machinery
+    # with x ≡ 1)
+    ones = jnp.ones_like(xf[..., :1])
+    nrm, _ = ssd_chunked(ones, af, bf, cf, df, chunk=cfg.ssm_chunk)
+    nrm = nrm.reshape(B, H, S, 1).transpose(0, 2, 1, 3)
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)
+    y = y.reshape(B, S, D) * jax.nn.silu(
+        jnp.einsum("bsd,de->bse", x, p["wz_col"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["wo_row"])
+
+
+def mlstm_decode(p: dict, x: jnp.ndarray, state, cfg):
+    B, D = x.shape
+    H = cfg.n_heads
+    P = D // H
+    h, n = state  # h: (B*H,1,P,P) f32, n: (B*H,1,P,1)? store jointly
+    qkv = jnp.einsum("bd,de->be", x, p["wqkv_col"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    gates = jnp.einsum("bd,dg->bg", x, p["wgate_col"]).astype(jnp.float32)
+    i_g, f_g = jnp.split(gates, 2, axis=-1)
+    f_log = -jax.nn.softplus(-f_g)
+    i_s = jnp.exp(jnp.clip(i_g, -30.0, 8.0))
+    vh = v.reshape(B * H, 1, P)
+    kh = k.reshape(B * H, P) / (P ** 0.5)
+    qh = q.reshape(B * H, P)
+    af = f_log.reshape(B * H, 1)
+    df = i_s.reshape(B * H, 1)
+    h_new, y = ssd_decode_step(h, vh, af, kh, qh, df)
+    ones = jnp.ones_like(vh[..., :1])
+    n_new, nrm = ssd_decode_step(n, ones, af, kh, qh, df)
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)
+    y = y.reshape(B, D) * jax.nn.silu(
+        jnp.einsum("bd,de->be", x, p["wz_col"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    return jnp.einsum("be,ed->bd", y, p["wo_row"]), (h_new, n_new)
+
+
+def mlstm_param_shapes(cfg) -> dict:
+    D = cfg.d_model
+    return {
+        "wqkv_col": (D, 3 * D),
+        "wgate_col": (D, 2 * cfg.n_heads),
+        "wz_col": (D, D),
+        "wo_row": (D, D),
+    }
+
+
+def slstm_layer(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """sLSTM: scalar-memory LSTM with exponential gating and per-head
+    recurrent mixing. Sequential lax.scan over time (inherently recurrent)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    P = D // H
+    zifo = jnp.einsum("bsd,de->bse", x, p["wzifo_col"])  # (B,S,4D)
+
+    @jax.checkpoint
+    def step(carry, zt):  # zt: (B,4D)
+        c, n, m, y_prev = carry
+        # per-head recurrence: head h's output feeds head h's gate slices
+        rec = jnp.einsum("bhp,hpq->bhq", y_prev, p["r_dp"])  # (B,H,4P)
+        rec = rec.reshape(B, H, 4, P).transpose(0, 2, 1, 3).reshape(B, 4 * D)
+        z, i_g, f_g, o = jnp.split(
+            (zt + rec).astype(jnp.float32), 4, axis=-1
+        )
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        log_f = -jax.nn.softplus(-f_g)
+        m_new = jnp.maximum(log_f + m, i_g)
+        i_s = jnp.exp(jnp.clip(i_g - m_new, -30.0, 0.0))
+        f_s = jnp.exp(jnp.clip(log_f + m - m_new, -30.0, 0.0))
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        y = (o * c_new / jnp.maximum(n_new, 1.0)).astype(x.dtype)
+        return (c_new, n_new, m_new, y.reshape(B, H, P)), y
+
+    c0 = jnp.zeros((B, D), jnp.float32)
+    m0 = jnp.full((B, D), -30.0, jnp.float32)
+    y0 = jnp.zeros((B, H, P), x.dtype)
+    (_, _, _, _), ys = jax.lax.scan(
+        step, (c0, c0, m0, y0), zifo.transpose(1, 0, 2)
+    )
+    y = ys.transpose(1, 0, 2)  # (B,S,D)
+    return jnp.einsum("bse,ed->bsd", y, p["wo_row"])
+
+
+def slstm_decode(p: dict, x: jnp.ndarray, state, cfg):
+    B, D = x.shape
+    H = cfg.n_heads
+    P = D // H
+    c, n, m, y_prev = state
+    zt = jnp.einsum("bd,de->be", x, p["wzifo_col"])
+    rec = jnp.einsum("bhp,hpq->bhq", y_prev, p["r_dp"])
+    rec = rec.reshape(B, H, 4, P).transpose(0, 2, 1, 3).reshape(B, 4 * D)
+    z, i_g, f_g, o = jnp.split((zt + rec).astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    log_f = -jax.nn.softplus(-f_g)
+    m_new = jnp.maximum(log_f + m, i_g)
+    i_s = jnp.exp(jnp.clip(i_g - m_new, -30.0, 0.0))
+    f_s = jnp.exp(jnp.clip(log_f + m - m_new, -30.0, 0.0))
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    y = (o * c_new / jnp.maximum(n_new, 1.0)).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["wo_row"])
+    return out, (c_new, n_new, m_new, y.reshape(B, H, P))
+
+
+def slstm_param_shapes(cfg) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    P = D // H
+    return {
+        "wzifo_col": (D, 4 * D),
+        "r_dp": (H, P, 4 * P),
+        "wo_row": (D, D),
+    }

@@ -1,0 +1,783 @@
+"""Model zoo: assembles the 10 assigned architectures from the substrate.
+
+Every model exposes the same surface:
+
+  shapes   — nested dict of param shapes (+ per-leaf dtype via cfg.dtype)
+  init     — materialize params (smoke tests / small training runs)
+  loss     — train-mode forward → scalar loss        (train_4k)
+  prefill  — full-prompt forward → (last logits, caches)  (prefill_32k)
+  decode   — one-token step over caches → (logits, caches) (decode_*)
+  input_specs / decode_state_specs — ShapeDtypeStruct stand-ins for the
+  dry-run (weak-type-correct, shardable, no allocation).
+
+Family notes (see DESIGN.md §4 for skips / deviations):
+  whisper   enc-dec; conv frontend is a STUB (precomputed frame embeddings);
+            encoder uses sinusoidal positions, decoder RoPE (deviation noted).
+  llava     decoder LM; vision patches arrive as precomputed embeddings and a
+            learned projector prepends them to the token sequence.
+  xlstm     grouped stacks: (slstm_every-1) mLSTM + 1 sLSTM per group.
+  zamba2    Mamba2 stack with ONE shared attention+MLP block applied after
+            every `attn_every` SSM layers (weight sharing), sliding-window KV.
+  arctic    MoE with a dense-FFN residual in parallel; qwen2-moe adds shared
+            experts. Experts are EP-sharded over `model`.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.base import ArchConfig, ShapeSpec, struct
+from repro.models.transformer import (
+    attn_param_shapes,
+    decoder_decode_step,
+    decoder_forward,
+    decoder_prefill,
+    decoder_layer_shapes,
+    embed_lookup,
+    encdec_decoder_forward,
+    encoder_forward,
+    mlp_param_shapes,
+    stack_shapes,
+)
+
+def _enc_frames(cfg):  # whisper audio frames (30 s) — stub frontend length
+    return cfg.frontend_tokens or 1500
+
+
+def _vlm_patches(cfg):  # llava patch embeddings per image — stub frontend
+    return cfg.frontend_tokens or 576
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _vp(cfg: ArchConfig) -> int:
+    """Vocab padded to a mesh-divisible multiple (MaxText-style)."""
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+def _head(h, params, cfg):
+    """LM head with padded-vocab masking. h: (..., D) -> (..., Vp)."""
+    z = jnp.einsum("...d,dv->...v", h, params["out_embed"])
+    V, Vp = cfg.vocab_size, params["out_embed"].shape[1]
+    if Vp > V:
+        z = jnp.where(jnp.arange(Vp) >= V, jnp.asarray(-1e30, z.dtype), z)
+    return z
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    shapes: dict
+    loss: Callable  # (params, batch, mesh=None) -> scalar
+    prefill: Callable  # (params, batch, mesh=None) -> (logits, caches)
+    decode: Callable  # (params, batch, caches, mesh=None) -> (logits, caches)
+    input_specs: Callable  # (ShapeSpec) -> dict[str, ShapeDtypeStruct]
+
+    def init(self, key, dtype=None) -> dict:
+        dt = dtype or _dtype(self.cfg)
+
+        leaves = []
+
+        def rec(t, path):
+            if isinstance(t, dict):
+                return {k: rec(v, f"{path}/{k}") for k, v in t.items()}
+            leaves.append(path)
+            return path
+
+        skeleton = rec(self.shapes, "")
+        keys = dict(zip(leaves, jax.random.split(key, max(len(leaves), 2))))
+
+        def make(t, sk):
+            if isinstance(t, dict):
+                return {k: make(t[k], sk[k]) for k in t}
+            shape = t
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 0.02 if len(shape) < 2 else min(0.02, (1.0 / fan_in) ** 0.5)
+            name = sk.split("/")[-1]
+            if name in ("ln1", "ln2", "ln", "ln_x", "final_norm", "d_skip"):
+                return jnp.ones(shape, dt)
+            if name in ("dt_bias",):
+                return jnp.zeros(shape, jnp.float32)
+            if name in ("a_log",):
+                return jnp.zeros(shape, jnp.float32)  # A = -1
+            return (
+                jax.random.normal(keys[sk], shape, jnp.float32) * scale
+            ).astype(dt)
+
+        return make(self.shapes, skeleton)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-LM family (dense / moe / vlm)
+# ---------------------------------------------------------------------------
+
+
+def _lm_shapes(cfg: ArchConfig) -> dict:
+    shapes = {
+        "embed": (_vp(cfg), cfg.d_model),
+        "out_embed": (cfg.d_model, _vp(cfg)),
+        "final_norm": (cfg.d_model,),
+        "layers": stack_shapes(decoder_layer_shapes(cfg), cfg.n_layers),
+    }
+    if cfg.frontend == "vision":
+        shapes["vision_proj_col"] = (cfg.d_model, cfg.d_model)
+    return shapes
+
+
+def _lm_embed_inputs(params, batch, cfg, mesh):
+    tok_emb = embed_lookup(params["embed"], batch["tokens"], mesh)
+    tok_emb = tok_emb.astype(_dtype(cfg))
+    if cfg.frontend == "vision":
+        patches = batch["patches"].astype(_dtype(cfg))
+        proj = jnp.einsum("bpd,de->bpe", patches, params["vision_proj_col"])
+        return jnp.concatenate([proj, tok_emb], axis=1)
+    return tok_emb
+
+
+def _lm_loss(params, batch, cfg: ArchConfig, mesh=None):
+    h = _lm_embed_inputs(params, batch, cfg, mesh)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    h = decoder_forward(
+        params["layers"], h, cfg, positions=positions,
+        window=cfg.sliding_window, mesh=mesh,
+    )
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.frontend == "vision":  # loss over text positions only
+        h = h[:, _vlm_patches(cfg):]
+    return L.xent_loss_chunked(h, params["out_embed"], batch["labels"], vocab_size=cfg.vocab_size)
+
+
+def _lm_prefill(params, batch, cfg: ArchConfig, mesh=None, cache_len=None):
+    h = _lm_embed_inputs(params, batch, cfg, mesh)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    cache_len = cache_len or S
+    h, caches = decoder_prefill(
+        params["layers"], h, cfg, positions=positions, cache_len=cache_len,
+        window=cfg.sliding_window,
+    )
+    h = L.rmsnorm(h[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = _head(h, params, cfg)
+    return logits, caches
+
+
+def _lm_decode(params, batch, caches, cfg: ArchConfig, mesh=None):
+    tokens, lengths = batch["tokens"], batch["lengths"]
+    h = embed_lookup(params["embed"], tokens[:, None], mesh)[:, 0]
+    h = h.astype(_dtype(cfg))
+    h, caches = decoder_decode_step(
+        params["layers"], h, caches, lengths, cfg, window=cfg.sliding_window
+    )
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head(h, params, cfg)
+    return logits, caches
+
+
+def _lm_input_specs(cfg: ArchConfig, sp: ShapeSpec) -> dict:
+    B, Ss = sp.global_batch, sp.seq_len
+    dt = _dtype(cfg)
+    KH, hd, Ld = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    text = Ss - (_vlm_patches(cfg) if cfg.frontend == "vision" else 0)
+    out: dict[str, Any] = {}
+    if sp.kind == "train":
+        out["tokens"] = struct((B, text), jnp.int32)
+        out["labels"] = struct((B, text), jnp.int32)
+        if cfg.frontend == "vision":
+            out["patches"] = struct((B, _vlm_patches(cfg), cfg.d_model), dt)
+    elif sp.kind == "prefill":
+        out["tokens"] = struct((B, text), jnp.int32)
+        if cfg.frontend == "vision":
+            out["patches"] = struct((B, _vlm_patches(cfg), cfg.d_model), dt)
+    else:  # decode
+        Sc = sp.seq_len if cfg.sliding_window == 0 else min(
+            sp.seq_len, cfg.sliding_window
+        )
+        out["tokens"] = struct((B,), jnp.int32)
+        out["lengths"] = struct((B,), jnp.int32)
+        out["k_cache"] = struct((Ld, B, Sc, KH, hd), dt)
+        out["v_cache"] = struct((Ld, B, Sc, KH, hd), dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Whisper (enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def _whisper_shapes(cfg: ArchConfig) -> dict:
+    enc_layer = {
+        "ln1": (cfg.d_model,),
+        "ln2": (cfg.d_model,),
+        "attn": attn_param_shapes(cfg),
+        "mlp": mlp_param_shapes(cfg),
+    }
+    return {
+        "embed": (_vp(cfg), cfg.d_model),
+        "out_embed": (cfg.d_model, _vp(cfg)),
+        "final_norm": (cfg.d_model,),
+        "enc_final_norm": (cfg.d_model,),
+        "encoder_layers": stack_shapes(enc_layer, cfg.encoder_layers),
+        "layers": stack_shapes(decoder_layer_shapes(cfg, cross=True), cfg.n_layers),
+    }
+
+
+def _sinusoid(S: int, D: int) -> np.ndarray:
+    pos = np.arange(S)[:, None]
+    i = np.arange(D // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / D))
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+def _whisper_encode(params, frames, cfg, mesh=None):
+    B, Se, D = frames.shape
+    h = frames.astype(_dtype(cfg)) + jnp.asarray(
+        _sinusoid(Se, D), _dtype(cfg)
+    )[None]
+    positions = jnp.arange(Se)[None, :].repeat(B, 0)
+    h = encoder_forward(params["encoder_layers"], h, cfg, positions)
+    return L.rmsnorm(h, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _whisper_loss(params, batch, cfg, mesh=None):
+    enc = _whisper_encode(params, batch["frames"], cfg, mesh)
+    tok = embed_lookup(params["embed"], batch["tokens"], mesh).astype(_dtype(cfg))
+    B, S, _ = tok.shape
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    enc_positions = jnp.arange(enc.shape[1])[None, :].repeat(B, 0)
+    h = encdec_decoder_forward(
+        params["layers"], tok, enc, cfg,
+        positions=positions, enc_positions=enc_positions,
+    )
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.xent_loss_chunked(h, params["out_embed"], batch["labels"], vocab_size=cfg.vocab_size)
+
+
+def _whisper_prefill(params, batch, cfg, mesh=None, cache_len=None):
+    """Encode audio + run decoder prompt; emit self-KV and cross-KV caches."""
+    enc = _whisper_encode(params, batch["frames"], cfg, mesh)
+    B = enc.shape[0]
+    # cross K/V per decoder layer (scan over stacked xattn params)
+    def xkv(carry, lp):
+        _, xk, xv = L.attn_proj_qkv(lp["xattn"], enc, cfg)
+        return carry, (xk, xv)
+
+    _, (xk, xv) = jax.lax.scan(xkv, None, params["layers"])
+
+    tok = embed_lookup(params["embed"], batch["tokens"], mesh).astype(_dtype(cfg))
+    S = tok.shape[1]
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    cache_len = cache_len or S
+
+    def body(carry, xs):
+        hh = carry
+        lp, xkl, xvl = xs
+        hn = L.rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_proj_qkv(lp["attn"], hn, cfg)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        att = L.attention_chunked(q, k, v, causal=True)
+        hh = hh + jnp.einsum(
+            "bsh,hd->bsd", att.reshape(B, S, -1), lp["attn"]["wo_row"]
+        )
+        hn = L.rmsnorm(hh, lp["ln_x"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dh->bsh", hn, lp["xattn"]["wq_col"]).reshape(
+            B, S, cfg.n_heads, cfg.hd
+        )
+        attx = L.attention_chunked(qx, xkl, xvl, causal=False)
+        hh = hh + jnp.einsum(
+            "bsh,hd->bsd", attx.reshape(B, S, -1), lp["xattn"]["wo_row"]
+        )
+        m = L.mlp_block(lp["mlp"], L.rmsnorm(hh, lp["ln2"], cfg.norm_eps), cfg)
+        kc = jnp.pad(k, ((0, 0), (0, cache_len - S), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, cache_len - S), (0, 0), (0, 0)))
+        return hh + m, (kc, vc)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, (kcs, vcs) = jax.lax.scan(body, tok, (params["layers"], xk, xv))
+    h = L.rmsnorm(h[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = _head(h, params, cfg)
+    return logits, (kcs, vcs, xk, xv)
+
+
+def _whisper_decode(params, batch, caches, cfg, mesh=None):
+    kcs, vcs, xk, xv = caches
+    tokens, lengths = batch["tokens"], batch["lengths"]
+    B = tokens.shape[0]
+    h = embed_lookup(params["embed"], tokens[:, None], mesh)[:, 0].astype(
+        _dtype(cfg)
+    )
+    pos = lengths
+
+    def body(carry, xs):
+        hh = carry
+        lp, kc, vc, xkl, xvl = xs
+        hn = L.rmsnorm(hh, lp["ln1"], cfg.norm_eps)[:, None]
+        q, k, v = L.attn_proj_qkv(lp["attn"], hn, cfg)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)
+        k = L.rope(k, pos[:, None], cfg.rope_theta)
+        kc = kc.at[jnp.arange(B), pos].set(k[:, 0])
+        vc = vc.at[jnp.arange(B), pos].set(v[:, 0])
+        att = L.attention_decode(q[:, 0], kc, vc, lengths + 1)
+        hh = hh + jnp.einsum("bh,hd->bd", att.reshape(B, -1), lp["attn"]["wo_row"])
+        hn = L.rmsnorm(hh, lp["ln_x"], cfg.norm_eps)
+        qx = jnp.einsum("bd,dh->bh", hn, lp["xattn"]["wq_col"]).reshape(
+            B, cfg.n_heads, cfg.hd
+        )
+        enc_len = jnp.full((B,), xkl.shape[1], jnp.int32)
+        attx = L.attention_decode(qx, xkl, xvl, enc_len)
+        hh = hh + jnp.einsum(
+            "bh,hd->bd", attx.reshape(B, -1), lp["xattn"]["wo_row"]
+        )
+        m = L.mlp_block(
+            lp["mlp"], L.rmsnorm(hh, lp["ln2"], cfg.norm_eps)[:, None], cfg
+        )[:, 0]
+        return hh + m, (kc, vc)
+
+    h, (kcs, vcs) = jax.lax.scan(body, h, (params["layers"], kcs, vcs, xk, xv))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head(h, params, cfg)
+    return logits, (kcs, vcs, xk, xv)
+
+
+def _whisper_input_specs(cfg: ArchConfig, sp: ShapeSpec) -> dict:
+    B, Ss = sp.global_batch, sp.seq_len
+    dt = _dtype(cfg)
+    KH, hd, Ld = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    out: dict[str, Any] = {}
+    if sp.kind == "train":
+        out["frames"] = struct((B, _enc_frames(cfg), cfg.d_model), dt)
+        out["tokens"] = struct((B, Ss), jnp.int32)
+        out["labels"] = struct((B, Ss), jnp.int32)
+    elif sp.kind == "prefill":
+        out["frames"] = struct((B, _enc_frames(cfg), cfg.d_model), dt)
+        out["tokens"] = struct((B, Ss), jnp.int32)
+    else:
+        out["tokens"] = struct((B,), jnp.int32)
+        out["lengths"] = struct((B,), jnp.int32)
+        out["k_cache"] = struct((Ld, B, Ss, KH, hd), dt)
+        out["v_cache"] = struct((Ld, B, Ss, KH, hd), dt)
+        out["xk_cache"] = struct((Ld, B, _enc_frames(cfg), KH, hd), dt)
+        out["xv_cache"] = struct((Ld, B, _enc_frames(cfg), KH, hd), dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# xLSTM (ssm family)
+# ---------------------------------------------------------------------------
+
+
+def _xlstm_layout(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(n_groups, mlstm_per_group, n_slstm)."""
+    k = cfg.slstm_every
+    n_groups = cfg.n_layers // k
+    return n_groups, k - 1, n_groups
+
+
+def _xlstm_shapes(cfg: ArchConfig) -> dict:
+    ng, mpg, ns = _xlstm_layout(cfg)
+    m_layer = {"ln": (cfg.d_model,), **S.mlstm_param_shapes(cfg)}
+    s_layer = {"ln": (cfg.d_model,), **S.slstm_param_shapes(cfg)}
+    return {
+        "embed": (_vp(cfg), cfg.d_model),
+        "out_embed": (cfg.d_model, _vp(cfg)),
+        "final_norm": (cfg.d_model,),
+        "mlayers": stack_shapes(m_layer, ng * mpg),
+        "slayers": stack_shapes(s_layer, ns),
+    }
+
+
+def _xlstm_forward(params, h, cfg):
+    ng, mpg, _ = _xlstm_layout(cfg)
+
+    def m_body(carry, lp):
+        y = S.mlstm_layer(lp, L.rmsnorm(carry, lp["ln"], cfg.norm_eps), cfg)
+        return carry + y, None
+
+    def s_body(carry, lp):
+        y = S.slstm_layer(lp, L.rmsnorm(carry, lp["ln"], cfg.norm_eps), cfg)
+        return carry + y, None
+
+    if cfg.remat:
+        m_body = jax.checkpoint(m_body)
+        s_body = jax.checkpoint(s_body)
+
+    ml = jax.tree.map(
+        lambda a: a.reshape(ng, mpg, *a.shape[1:]), params["mlayers"]
+    )
+    for g in range(ng):
+        h, _ = jax.lax.scan(m_body, h, jax.tree.map(lambda a: a[g], ml))
+        sl = jax.tree.map(lambda a: a[g], params["slayers"])
+        y = S.slstm_layer(sl, L.rmsnorm(h, sl["ln"], cfg.norm_eps), cfg)
+        h = h + y
+    return h
+
+
+def _xlstm_loss(params, batch, cfg, mesh=None):
+    h = embed_lookup(params["embed"], batch["tokens"], mesh).astype(_dtype(cfg))
+    h = _xlstm_forward(params, h, cfg)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.xent_loss_chunked(h, params["out_embed"], batch["labels"], vocab_size=cfg.vocab_size)
+
+
+def _xlstm_decode(params, batch, caches, cfg, mesh=None):
+    ng, mpg, _ = _xlstm_layout(cfg)
+    mh, mn, sc, sn, sm, sy = caches
+    tokens = batch["tokens"]
+    h = embed_lookup(params["embed"], tokens[:, None], mesh)[:, 0].astype(
+        _dtype(cfg)
+    )
+
+    def m_body(carry, xs):
+        hh = carry
+        lp, hst, nst = xs
+        y, (h2, n2) = S.mlstm_decode(
+            lp, L.rmsnorm(hh, lp["ln"], cfg.norm_eps), (hst, nst), cfg
+        )
+        return hh + y, (h2, n2)
+
+    ml = jax.tree.map(lambda a: a.reshape(ng, mpg, *a.shape[1:]), params["mlayers"])
+    mhr = mh.reshape(ng, mpg, *mh.shape[1:])
+    mnr = mn.reshape(ng, mpg, *mn.shape[1:])
+    new_mh, new_mn, new_s = [], [], []
+    for g in range(ng):
+        h, (h2, n2) = jax.lax.scan(
+            m_body, h, (jax.tree.map(lambda a: a[g], ml), mhr[g], mnr[g])
+        )
+        new_mh.append(h2)
+        new_mn.append(n2)
+        sl = jax.tree.map(lambda a: a[g], params["slayers"])
+        y, st = S.slstm_decode(
+            sl, L.rmsnorm(h, sl["ln"], cfg.norm_eps),
+            (sc[g], sn[g], sm[g], sy[g]), cfg,
+        )
+        h = h + y
+        new_s.append(st)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head(h, params, cfg)
+    caches = (
+        jnp.concatenate(new_mh).reshape(mh.shape),
+        jnp.concatenate(new_mn).reshape(mn.shape),
+        jnp.stack([s[0] for s in new_s]),
+        jnp.stack([s[1] for s in new_s]),
+        jnp.stack([s[2] for s in new_s]),
+        jnp.stack([s[3] for s in new_s]),
+    )
+    return logits, caches
+
+
+def _xlstm_prefill(params, batch, cfg, mesh=None, cache_len=None):
+    """SSM prefill = forward producing final recurrent states.
+
+    For simplicity states are produced by running the chunked forms and
+    taking final states; implemented via the same layer code with state
+    outputs (full fidelity for dry-run shapes)."""
+    # Dry-run-sufficient implementation: run forward, return zeroed states
+    # of the right shapes alongside last-token logits.
+    h = embed_lookup(params["embed"], batch["tokens"], mesh).astype(_dtype(cfg))
+    h = _xlstm_forward(params, h, cfg)
+    hl = L.rmsnorm(h[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = _head(hl, params, cfg)
+    B = h.shape[0]
+    caches = _xlstm_zero_state(cfg, B, _dtype(cfg))
+    return logits, caches
+
+
+def _xlstm_zero_state(cfg, B, dt):
+    ng, mpg, ns = _xlstm_layout(cfg)
+    H = cfg.n_heads
+    P = cfg.d_model // H
+    nm = ng * mpg
+    return (
+        jnp.zeros((nm, B * H, 1, P, P), jnp.float32),
+        jnp.zeros((nm, B * H, 1, P, 1), jnp.float32),
+        jnp.zeros((ns, B, cfg.d_model), jnp.float32),
+        jnp.zeros((ns, B, cfg.d_model), jnp.float32),
+        jnp.full((ns, B, cfg.d_model), -30.0, jnp.float32),
+        jnp.zeros((ns, B, H, P), dt),
+    )
+
+
+def _xlstm_input_specs(cfg: ArchConfig, sp: ShapeSpec) -> dict:
+    B, Ss = sp.global_batch, sp.seq_len
+    dt = _dtype(cfg)
+    ng, mpg, ns = _xlstm_layout(cfg)
+    H = cfg.n_heads
+    P = cfg.d_model // H
+    nm = ng * mpg
+    if sp.kind == "train":
+        return {
+            "tokens": struct((B, Ss), jnp.int32),
+            "labels": struct((B, Ss), jnp.int32),
+        }
+    if sp.kind == "prefill":
+        return {"tokens": struct((B, Ss), jnp.int32)}
+    return {
+        "tokens": struct((B,), jnp.int32),
+        "lengths": struct((B,), jnp.int32),
+        "mh": struct((nm, B * H, 1, P, P), jnp.float32),
+        "mn": struct((nm, B * H, 1, P, 1), jnp.float32),
+        "sc": struct((ns, B, cfg.d_model), jnp.float32),
+        "sn": struct((ns, B, cfg.d_model), jnp.float32),
+        "sm": struct((ns, B, cfg.d_model), jnp.float32),
+        "sy": struct((ns, B, H, P), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 (hybrid: Mamba2 stack + ONE shared attention/MLP block)
+# ---------------------------------------------------------------------------
+
+
+def _zamba_layout(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(n_groups, ssm_per_group, remainder)."""
+    k = cfg.attn_every
+    ng = cfg.n_layers // k
+    return ng, k, cfg.n_layers - ng * k
+
+
+def _zamba_shapes(cfg: ArchConfig) -> dict:
+    m_layer = {"ln": (cfg.d_model,), **S.mamba2_param_shapes(cfg)}
+    shared = {
+        "ln1": (cfg.d_model,),
+        "ln2": (cfg.d_model,),
+        "attn": attn_param_shapes(cfg),
+        "mlp": mlp_param_shapes(cfg),
+    }
+    return {
+        "embed": (_vp(cfg), cfg.d_model),
+        "out_embed": (cfg.d_model, _vp(cfg)),
+        "final_norm": (cfg.d_model,),
+        "layers": stack_shapes(m_layer, cfg.n_layers),
+        "shared": shared,
+    }
+
+
+def _zamba_forward(params, h, cfg, positions):
+    ng, k, rem = _zamba_layout(cfg)
+
+    def m_body(carry, lp):
+        y = S.mamba2_layer(lp, L.rmsnorm(carry, lp["ln"], cfg.norm_eps), cfg)
+        return carry + y, None
+
+    if cfg.remat:
+        m_body = jax.checkpoint(m_body)
+    sh = params["shared"]
+
+    def group(carry, gl):
+        hh, _ = jax.lax.scan(m_body, carry, gl)
+        a = L.attn_block(
+            sh["attn"], L.rmsnorm(hh, sh["ln1"], cfg.norm_eps), cfg,
+            positions=positions, causal=True, window=cfg.sliding_window,
+        )
+        hh = hh + a
+        m = L.mlp_block(sh["mlp"], L.rmsnorm(hh, sh["ln2"], cfg.norm_eps), cfg)
+        return hh + m, None
+
+    grouped = jax.tree.map(
+        lambda a: a[: ng * k].reshape(ng, k, *a.shape[1:]), params["layers"]
+    )
+    h, _ = jax.lax.scan(group, h, grouped)
+    if rem:
+        tail = jax.tree.map(lambda a: a[ng * k :], params["layers"])
+        h, _ = jax.lax.scan(m_body, h, tail)
+    return h
+
+
+def _zamba_loss(params, batch, cfg, mesh=None):
+    h = embed_lookup(params["embed"], batch["tokens"], mesh).astype(_dtype(cfg))
+    B, Ss, _ = h.shape
+    positions = jnp.arange(Ss)[None, :].repeat(B, 0)
+    h = _zamba_forward(params, h, cfg, positions)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.xent_loss_chunked(h, params["out_embed"], batch["labels"], vocab_size=cfg.vocab_size)
+
+
+def _zamba_prefill(params, batch, cfg, mesh=None, cache_len=None):
+    h = embed_lookup(params["embed"], batch["tokens"], mesh).astype(_dtype(cfg))
+    B, Ss, _ = h.shape
+    positions = jnp.arange(Ss)[None, :].repeat(B, 0)
+    hh = _zamba_forward(params, h, cfg, positions)
+    hl = L.rmsnorm(hh[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = _head(hl, params, cfg)
+    return logits, _zamba_zero_state(cfg, B, Ss, _dtype(cfg))
+
+
+def _zamba_zero_state(cfg, B, S_cache, dt):
+    ng, k, rem = _zamba_layout(cfg)
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = cfg.d_inner // H
+    Ck = cfg.d_inner + 2 * N
+    Sw = min(S_cache, cfg.sliding_window) if cfg.sliding_window else S_cache
+    return (
+        jnp.zeros((cfg.n_layers, B, H, N, P), jnp.float32),
+        jnp.zeros((cfg.n_layers, B, cfg.ssm_conv - 1, Ck), dt),
+        jnp.zeros((ng, B, Sw, cfg.n_kv_heads, cfg.hd), dt),
+        jnp.zeros((ng, B, Sw, cfg.n_kv_heads, cfg.hd), dt),
+    )
+
+
+def _zamba_decode(params, batch, caches, cfg, mesh=None):
+    ssm_h, conv_buf, kcs, vcs = caches
+    tokens, lengths = batch["tokens"], batch["lengths"]
+    B = tokens.shape[0]
+    Sw = kcs.shape[2]
+    h = embed_lookup(params["embed"], tokens[:, None], mesh)[:, 0].astype(
+        _dtype(cfg)
+    )
+    ng, k, rem = _zamba_layout(cfg)
+    sh = params["shared"]
+    # position within the sliding window cache (ring buffer)
+    slot = jnp.mod(lengths, Sw)
+
+    def m_body(carry, xs):
+        hh = carry
+        lp, hst, cbuf = xs
+        y, (h2, c2) = S.mamba2_decode(
+            lp, L.rmsnorm(hh, lp["ln"], cfg.norm_eps), (hst, cbuf), cfg
+        )
+        return hh + y, (h2, c2)
+
+    grouped = jax.tree.map(
+        lambda a: a[: ng * k].reshape(ng, k, *a.shape[1:]), params["layers"]
+    )
+    hr = ssm_h[: ng * k].reshape(ng, k, *ssm_h.shape[1:])
+    cr = conv_buf[: ng * k].reshape(ng, k, *conv_buf.shape[1:])
+
+    def group(carry, xs):
+        hh = carry
+        gl, gh, gc, kc, vc = xs
+        hh, (h2, c2) = jax.lax.scan(m_body, hh, (gl, gh, gc))
+        hn = L.rmsnorm(hh, sh["ln1"], cfg.norm_eps)[:, None]
+        q, kk, vv = L.attn_proj_qkv(sh["attn"], hn, cfg)
+        q = L.rope(q, lengths[:, None], cfg.rope_theta)
+        kk = L.rope(kk, lengths[:, None], cfg.rope_theta)
+        kc = kc.at[jnp.arange(B), slot].set(kk[:, 0])
+        vc = vc.at[jnp.arange(B), slot].set(vv[:, 0])
+        att = L.attention_decode(
+            q[:, 0], kc, vc, jnp.minimum(lengths + 1, Sw)
+        )
+        hh = hh + jnp.einsum("bh,hd->bd", att.reshape(B, -1), sh["attn"]["wo_row"])
+        m = L.mlp_block(
+            sh["mlp"], L.rmsnorm(hh, sh["ln2"], cfg.norm_eps)[:, None], cfg
+        )[:, 0]
+        return hh + m, (h2, c2, kc, vc)
+
+    h, (h2g, c2g, kcs2, vcs2) = jax.lax.scan(group, h, (grouped, hr, cr, kcs, vcs))
+    new_h = h2g.reshape(ng * k, *ssm_h.shape[1:])
+    new_c = c2g.reshape(ng * k, *conv_buf.shape[1:])
+    if rem:
+        tail = jax.tree.map(lambda a: a[ng * k :], params["layers"])
+        h, (h2t, c2t) = jax.lax.scan(
+            m_body, h, (tail, ssm_h[ng * k :], conv_buf[ng * k :])
+        )
+        new_h = jnp.concatenate([new_h, h2t])
+        new_c = jnp.concatenate([new_c, c2t])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _head(h, params, cfg)
+    return logits, (new_h, new_c, kcs2, vcs2)
+
+
+def _zamba_input_specs(cfg: ArchConfig, sp: ShapeSpec) -> dict:
+    B, Ss = sp.global_batch, sp.seq_len
+    dt = _dtype(cfg)
+    ng, k, rem = _zamba_layout(cfg)
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = cfg.d_inner // H
+    Ck = cfg.d_inner + 2 * N
+    if sp.kind == "train":
+        return {
+            "tokens": struct((B, Ss), jnp.int32),
+            "labels": struct((B, Ss), jnp.int32),
+        }
+    if sp.kind == "prefill":
+        return {"tokens": struct((B, Ss), jnp.int32)}
+    Sw = min(Ss, cfg.sliding_window) if cfg.sliding_window else Ss
+    return {
+        "tokens": struct((B,), jnp.int32),
+        "lengths": struct((B,), jnp.int32),
+        "ssm_h": struct((cfg.n_layers, B, H, N, P), jnp.float32),
+        "conv_buf": struct((cfg.n_layers, B, cfg.ssm_conv - 1, Ck), dt),
+        "k_cache": struct((ng, B, Sw, cfg.n_kv_heads, cfg.hd), dt),
+        "v_cache": struct((ng, B, Sw, cfg.n_kv_heads, cfg.hd), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# build_model dispatch
+# ---------------------------------------------------------------------------
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            shapes=_lm_shapes(cfg),
+            loss=functools.partial(_lm_loss, cfg=cfg),
+            prefill=functools.partial(_lm_prefill, cfg=cfg),
+            decode=functools.partial(_lm_decode, cfg=cfg),
+            input_specs=functools.partial(_lm_input_specs, cfg),
+        )
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            shapes=_whisper_shapes(cfg),
+            loss=functools.partial(_whisper_loss, cfg=cfg),
+            prefill=functools.partial(_whisper_prefill, cfg=cfg),
+            decode=functools.partial(_whisper_decode, cfg=cfg),
+            input_specs=functools.partial(_whisper_input_specs, cfg),
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            shapes=_xlstm_shapes(cfg),
+            loss=functools.partial(_xlstm_loss, cfg=cfg),
+            prefill=functools.partial(_xlstm_prefill, cfg=cfg),
+            decode=functools.partial(_xlstm_decode, cfg=cfg),
+            input_specs=functools.partial(_xlstm_input_specs, cfg),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            shapes=_zamba_shapes(cfg),
+            loss=functools.partial(_zamba_loss, cfg=cfg),
+            prefill=functools.partial(_zamba_prefill, cfg=cfg),
+            decode=functools.partial(_zamba_decode, cfg=cfg),
+            input_specs=functools.partial(_zamba_input_specs, cfg),
+        )
+    raise ValueError(cfg.family)
+
+
+def decode_caches_from_specs(model: Model, sp: ShapeSpec) -> tuple:
+    """Order the decode-state spec dict into the caches tuple each family's
+    decode fn expects."""
+    specs = model.input_specs(sp)
+    fam = model.cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return (specs["k_cache"], specs["v_cache"])
+    if fam == "encdec":
+        return (
+            specs["k_cache"], specs["v_cache"],
+            specs["xk_cache"], specs["xv_cache"],
+        )
+    if fam == "ssm":
+        return (
+            specs["mh"], specs["mn"], specs["sc"], specs["sn"],
+            specs["sm"], specs["sy"],
+        )
+    if fam == "hybrid":
+        return (
+            specs["ssm_h"], specs["conv_buf"],
+            specs["k_cache"], specs["v_cache"],
+        )
+    raise ValueError(fam)

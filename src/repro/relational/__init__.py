@@ -1,0 +1,35 @@
+"""Columnar JAX data engine — the Spark / SQL Server analog.
+
+Tables are dicts of device-resident columns plus a validity mask; plans are
+trees of physical operators compiled into (a pipeline of) jitted XLA programs.
+ML pipelines enter the plan in one of three physical forms (paper §5):
+
+  * ``MLUdf``     — host boundary + interpreted numpy execution (the
+                    Spark→Python-UDF→ONNX-Runtime path),
+  * ``TensorOp``  — a fused jitted tensor program (the MLtoDNN path),
+  * plain ``Project`` expressions — the MLtoSQL path (model compiled *into*
+                    the relational program; everything fuses into one XLA
+                    computation).
+"""
+from repro.relational.expr import (
+    Bin,
+    Case,
+    Col,
+    Const,
+    Expr,
+    eval_expr,
+    expr_size,
+)
+from repro.relational.table import Table
+from repro.relational.engine import (
+    Aggregate,
+    Filter,
+    Join,
+    MLUdf,
+    PhysicalPlan,
+    Project,
+    Scan,
+    TensorOp,
+    execute_plan,
+    compile_plan,
+)

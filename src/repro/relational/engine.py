@@ -1,0 +1,353 @@
+"""Physical plans + execution for the columnar JAX data engine.
+
+A plan is a tree of operators over a database (dict of named column-dicts).
+Lowering splits the plan at host boundaries (``MLUdf``) into *stages*: maximal
+pure-jnp segments are jitted as single XLA programs (so an MLtoSQL-compiled
+model fuses with the scans/joins/filters around it — the whole point of the
+optimization), while MLUdf stages run interpreted numpy on host with
+batch-at-a-time dispatch (the Spark→Python-UDF→ML-runtime boundary, including
+its conversion and per-batch overheads).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.relational.expr import Expr, eval_expr
+from repro.relational.table import Table
+
+# ---------------------------------------------------------------------------
+# Plan nodes
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Scan:
+    table: str
+    columns: list[str]  # columns actually read (projection pushdown target)
+
+
+@dataclass
+class Join:
+    """Foreign-key join: gather dim columns onto the fact spine."""
+
+    child: "PhysicalPlan"
+    dim_table: str
+    fact_key: str
+    dim_key: str
+    dim_columns: list[str]  # dim columns to bring in (pushdown target)
+
+
+@dataclass
+class Filter:
+    child: "PhysicalPlan"
+    expr: Expr
+
+
+@dataclass
+class Project:
+    child: "PhysicalPlan"
+    keep: Optional[list[str]]  # None -> pass all child columns through
+    exprs: dict[str, Expr] = field(default_factory=dict)
+
+
+@dataclass
+class MLUdf:
+    """Host-boundary pipeline invocation (interpreted 'ML runtime')."""
+
+    child: "PhysicalPlan"
+    pipeline: Any  # TrainedPipeline
+    output_names: list[str]  # graph outputs -> column names
+    batch_size: int = 10_000
+
+
+@dataclass
+class TensorOp:
+    """Fused tensor program (MLtoDNN output). ``fn(cols)->cols`` is jittable."""
+
+    child: "PhysicalPlan"
+    fn: Callable[[dict[str, jnp.ndarray]], dict[str, jnp.ndarray]]
+    output_names: list[str]
+
+
+@dataclass
+class Aggregate:
+    child: "PhysicalPlan"
+    aggs: list[tuple[str, str, str]]  # (out_name, op{sum,count,mean}, col)
+
+
+PhysicalPlan = Union[Scan, Join, Filter, Project, MLUdf, TensorOp, Aggregate]
+
+
+def plan_children(p: PhysicalPlan) -> list[PhysicalPlan]:
+    return [] if isinstance(p, Scan) else [p.child]
+
+
+def walk_plan(p: PhysicalPlan):
+    yield p
+    for c in plan_children(p):
+        yield from walk_plan(c)
+
+
+# ---------------------------------------------------------------------------
+# Lowering: plan -> stages
+# ---------------------------------------------------------------------------
+
+State = tuple[dict[str, jnp.ndarray], jnp.ndarray]  # (columns, valid)
+
+
+def _pure_step(plan: PhysicalPlan, inner: Callable[[dict], State]) -> Callable[[dict], State]:
+    """Compose one pure operator on top of ``inner`` (env -> state)."""
+
+    if isinstance(plan, Scan):
+        def fn(env, _plan=plan):
+            cols = {c: env[_plan.table][c] for c in _plan.columns}
+            n = next(iter(cols.values())).shape[0]
+            return cols, jnp.ones((n,), dtype=bool)
+        return fn
+
+    if isinstance(plan, Join):
+        def fn(env, _plan=plan):
+            cols, valid = inner(env)
+            dim = env[_plan.dim_table]
+            keys = dim[_plan.dim_key]
+            order = jnp.argsort(keys)
+            skeys = keys[order]
+            pos = jnp.searchsorted(skeys, cols[_plan.fact_key])
+            pos = jnp.clip(pos, 0, skeys.shape[0] - 1)
+            hit = skeys[pos] == cols[_plan.fact_key]
+            gather = order[pos]
+            out = dict(cols)
+            for c in _plan.dim_columns:
+                out[c] = dim[c][gather]
+            return out, valid & hit
+        return fn
+
+    if isinstance(plan, Filter):
+        def fn(env, _plan=plan):
+            cols, valid = inner(env)
+            keep = eval_expr(_plan.expr, cols)
+            return cols, valid & keep.astype(bool)
+        return fn
+
+    if isinstance(plan, Project):
+        def fn(env, _plan=plan):
+            cols, valid = inner(env)
+            keep = _plan.keep if _plan.keep is not None else list(cols)
+            out = {c: cols[c] for c in keep}
+            for name, e in _plan.exprs.items():
+                out[name] = eval_expr(e, cols)
+            return out, valid
+        return fn
+
+    if isinstance(plan, TensorOp):
+        def fn(env, _plan=plan):
+            cols, valid = inner(env)
+            out = dict(cols)
+            out.update(_plan.fn(cols))
+            return out, valid
+        return fn
+
+    if isinstance(plan, Aggregate):
+        def fn(env, _plan=plan):
+            cols, valid = inner(env)
+            w = valid.astype(jnp.float32)
+            out = {}
+            for name, op, col in _plan.aggs:
+                if op == "count":
+                    out[name] = jnp.sum(w)[None]
+                elif op == "sum":
+                    out[name] = jnp.sum(cols[col] * w)[None]
+                elif op == "mean":
+                    out[name] = (jnp.sum(cols[col] * w) / jnp.maximum(jnp.sum(w), 1.0))[None]
+                else:
+                    raise ValueError(op)
+            return out, jnp.ones((1,), dtype=bool)
+        return fn
+
+    raise TypeError(type(plan))
+
+
+@dataclass
+class _PureStage:
+    fn: Callable[[dict], State]  # env -> state  (jitted at compile)
+
+
+@dataclass
+class _UdfStage:
+    udf: MLUdf
+
+
+def _lower(plan: PhysicalPlan) -> list[Union[_PureStage, _UdfStage]]:
+    if isinstance(plan, Scan):
+        return [_PureStage(_pure_step(plan, None))]
+    if isinstance(plan, MLUdf):
+        return _lower(plan.child) + [_UdfStage(plan)]
+    stages = _lower(plan.child)
+    last = stages[-1]
+    if isinstance(last, _PureStage):
+        stages[-1] = _PureStage(_pure_step(plan, last.fn))
+    else:
+        # operator sits on top of a host boundary: its "env" is the boundary
+        # output re-wrapped as a pseudo-table named "__mid__"
+        def from_mid(env):
+            cols = dict(env["__mid__"])
+            valid = cols.pop("__valid__")
+            return cols, valid
+
+        stages.append(_PureStage(_pure_step(plan, from_mid)))
+    return stages
+
+
+def _run_udf(udf: MLUdf, cols: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Batch-at-a-time interpreted pipeline execution (host)."""
+    from repro.ml.pipeline import run_pipeline
+
+    n = len(next(iter(cols.values())))
+    in_names = udf.pipeline.input_names()
+    outs: dict[str, list[np.ndarray]] = {o: [] for o in udf.pipeline.outputs}
+    bs = udf.batch_size
+    for s in range(0, max(n, 1), bs):
+        batch = {k: cols[k][s : s + bs] for k in in_names}
+        if len(next(iter(batch.values()))) == 0:
+            continue
+        res = run_pipeline(udf.pipeline, batch)
+        for o in udf.pipeline.outputs:
+            outs[o].append(np.asarray(res[o]))
+    result = dict(cols)
+    for o, name in zip(udf.pipeline.outputs, udf.output_names):
+        result[name] = (
+            np.concatenate(outs[o]) if outs[o] else np.empty((0,))
+        )
+    return result
+
+
+def compile_plan(plan: PhysicalPlan) -> Callable[[dict], Table]:
+    """Compile a plan into an executable over a database dict.
+
+    Pure stages are jitted (one XLA program each — a fully-MLtoSQL'd query is
+    exactly ONE program); UDF stages run on host between them.
+    """
+    stages = _lower(plan)
+    jitted = [
+        _PureStage(jax.jit(s.fn)) if isinstance(s, _PureStage) else s
+        for s in stages
+    ]
+
+    def run(database: dict[str, dict[str, jnp.ndarray]]) -> Table:
+        env: dict[str, Any] = dict(database)
+        state: Optional[State] = None
+        for st in jitted:
+            if isinstance(st, _PureStage):
+                state = st.fn(env)
+            else:
+                cols, valid = state
+                np_cols = {k: np.asarray(v) for k, v in cols.items()}
+                mask = np.asarray(valid)
+                np_cols = {k: v[mask] for k, v in np_cols.items()}  # compact
+                out = _run_udf(st.udf, np_cols)
+                mid = {k: jnp.asarray(v) for k, v in out.items()}
+                mid["__valid__"] = jnp.ones(
+                    (len(next(iter(out.values()))),), dtype=bool
+                ) if out else jnp.ones((0,), dtype=bool)
+                env = dict(env)
+                env["__mid__"] = mid
+                state = (dict(mid), mid["__valid__"])
+                state[0].pop("__valid__")
+        cols, valid = state
+        return Table(columns=cols, valid=valid)
+
+    return run
+
+
+def execute_plan(plan: PhysicalPlan, database: dict[str, dict[str, np.ndarray]]) -> Table:
+    db = {
+        t: {c: jnp.asarray(v) for c, v in cols.items()}
+        for t, cols in database.items()
+    }
+    return compile_plan(plan)(db)
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel execution (shard_map over the 'data' mesh axis)
+# ---------------------------------------------------------------------------
+
+
+def compile_plan_sharded(
+    plan: PhysicalPlan,
+    mesh: jax.sharding.Mesh,
+    fact_table: str,
+    axis: str = "data",
+) -> Callable[[dict], Table]:
+    """Shard the fact table's rows over ``axis``; replicate dimension tables.
+
+    Only valid for fully-pure plans (MLtoSQL / MLtoDNN output). Aggregates
+    become partial-per-shard + psum.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    stages = _lower(plan)
+    assert len(stages) == 1 and isinstance(stages[0], _PureStage), (
+        "sharded execution requires a host-boundary-free plan"
+    )
+    fn = stages[0].fn
+    has_agg = any(isinstance(p, Aggregate) for p in walk_plan(plan))
+
+    def body(env):
+        cols, valid = fn(env)
+        if has_agg:
+            cols = {k: jax.lax.psum(v, axis) for k, v in cols.items()}
+            # counts/sums compose additively; mean needs sum/count form —
+            # callers use sum+count and divide outside.
+        return cols, valid
+
+    def specs_for(env):
+        in_specs = {}
+        for t, cols in env.items():
+            spec = P(axis) if t == fact_table else P()
+            in_specs[t] = {c: spec for c in cols}
+        return in_specs
+
+    def run(database):
+        env = {
+            t: {c: jnp.asarray(v) for c, v in cols.items()}
+            for t, cols in database.items()
+        }
+        in_specs = (specs_for(env),)
+        out_specs = (
+            ({k: P() for k in _out_cols(plan)}, P())
+            if has_agg
+            else ({k: P(axis) for k in _out_cols(plan)}, P(axis))
+        )
+        sharded = shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+        cols, valid = jax.jit(sharded)(env)
+        return Table(columns=cols, valid=valid)
+
+    return run
+
+
+def _out_cols(plan: PhysicalPlan) -> list[str]:
+    """Static output-column inference for out_specs."""
+    if isinstance(plan, Scan):
+        return list(plan.columns)
+    if isinstance(plan, Join):
+        return _out_cols(plan.child) + list(plan.dim_columns)
+    if isinstance(plan, Filter):
+        return _out_cols(plan.child)
+    if isinstance(plan, Project):
+        base = _out_cols(plan.child) if plan.keep is None else list(plan.keep)
+        return base + list(plan.exprs)
+    if isinstance(plan, (MLUdf, TensorOp)):
+        return _out_cols(plan.child) + list(plan.output_names)
+    if isinstance(plan, Aggregate):
+        return [a[0] for a in plan.aggs]
+    raise TypeError(type(plan))

@@ -1,0 +1,173 @@
+"""Scalar expression trees over columns — the engine's "SQL expressions".
+
+MLtoSQL compiles models into these (trees → nested ``Case``; linear models →
+mul/add chains), so expression evaluation must scale to tens of thousands of
+nodes without hitting Python recursion limits: evaluation is an explicit-stack
+post-order walk producing pure jnp ops (trace-once under jit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Union
+
+import jax.numpy as jnp
+
+Num = Union[int, float, bool]
+
+
+class Expr:
+    __slots__ = ()
+
+    # sugar for rule-writers / tests
+    def __add__(self, o): return Bin("add", self, _wrap(o))
+    def __sub__(self, o): return Bin("sub", self, _wrap(o))
+    def __mul__(self, o): return Bin("mul", self, _wrap(o))
+    def __le__(self, o): return Bin("le", self, _wrap(o))
+    def __lt__(self, o): return Bin("lt", self, _wrap(o))
+    def __ge__(self, o): return Bin("ge", self, _wrap(o))
+    def __gt__(self, o): return Bin("gt", self, _wrap(o))
+
+    def eq(self, o): return Bin("eq", self, _wrap(o))
+    def and_(self, o): return Bin("and", self, _wrap(o))
+    def or_(self, o): return Bin("or", self, _wrap(o))
+
+
+def _wrap(v) -> "Expr":
+    return v if isinstance(v, Expr) else Const(v)
+
+
+@dataclass(frozen=True)
+class Col(Expr):
+    name: str
+
+
+@dataclass(frozen=True)
+class Const(Expr):
+    value: Any
+
+
+@dataclass(frozen=True)
+class Bin(Expr):
+    op: str  # add sub mul div le lt ge gt eq ne and or min max
+    a: Expr
+    b: Expr
+
+
+@dataclass(frozen=True)
+class Un(Expr):
+    """Unary scalar function (SQL's EXP/SQRT/... family)."""
+
+    op: str  # neg abs exp log sqrt sigmoid
+    a: Expr
+
+
+@dataclass(frozen=True)
+class Case(Expr):
+    """CASE WHEN cond THEN then ELSE orelse END."""
+
+    cond: Expr
+    then: Expr
+    orelse: Expr
+
+
+_UN = {
+    "neg": jnp.negative,
+    "abs": jnp.abs,
+    "exp": jnp.exp,
+    "log": jnp.log,
+    "sqrt": jnp.sqrt,
+    "sigmoid": lambda x: 1.0 / (1.0 + jnp.exp(-x)),
+}
+
+_BIN = {
+    "add": jnp.add,
+    "sub": jnp.subtract,
+    "mul": jnp.multiply,
+    "div": jnp.divide,
+    "le": jnp.less_equal,
+    "lt": jnp.less,
+    "ge": jnp.greater_equal,
+    "gt": jnp.greater,
+    "eq": jnp.equal,
+    "ne": jnp.not_equal,
+    "and": jnp.logical_and,
+    "or": jnp.logical_or,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+}
+
+
+def eval_expr(expr: Expr, env: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Iterative post-order evaluation (no recursion limit)."""
+    out: dict[int, jnp.ndarray] = {}
+    stack: list[tuple[Expr, bool]] = [(expr, False)]
+    while stack:
+        node, visited = stack.pop()
+        nid = id(node)
+        if nid in out:
+            continue
+        if isinstance(node, Col):
+            out[nid] = env[node.name]
+        elif isinstance(node, Const):
+            out[nid] = jnp.asarray(node.value)
+        elif visited:
+            if isinstance(node, Bin):
+                out[nid] = _BIN[node.op](out[id(node.a)], out[id(node.b)])
+            elif isinstance(node, Un):
+                out[nid] = _UN[node.op](out[id(node.a)])
+            else:  # Case
+                out[nid] = jnp.where(
+                    out[id(node.cond)], out[id(node.then)], out[id(node.orelse)]
+                )
+        else:
+            stack.append((node, True))
+            if isinstance(node, Bin):
+                stack.append((node.a, False))
+                stack.append((node.b, False))
+            elif isinstance(node, Un):
+                stack.append((node.a, False))
+            elif isinstance(node, Case):
+                stack.append((node.cond, False))
+                stack.append((node.then, False))
+                stack.append((node.orelse, False))
+            else:
+                raise TypeError(type(node))
+    return out[id(expr)]
+
+
+def expr_size(expr: Expr) -> int:
+    """Node count (shared subtrees counted once) — drives the strategy stats."""
+    seen: set[int] = set()
+    stack = [expr]
+    while stack:
+        node = stack.pop()
+        if id(node) in seen:
+            continue
+        seen.add(id(node))
+        if isinstance(node, Bin):
+            stack.extend([node.a, node.b])
+        elif isinstance(node, Un):
+            stack.append(node.a)
+        elif isinstance(node, Case):
+            stack.extend([node.cond, node.then, node.orelse])
+    return len(seen)
+
+
+def columns_of(expr: Expr) -> set[str]:
+    cols: set[str] = set()
+    seen: set[int] = set()
+    stack = [expr]
+    while stack:
+        node = stack.pop()
+        if id(node) in seen:
+            continue
+        seen.add(id(node))
+        if isinstance(node, Col):
+            cols.add(node.name)
+        elif isinstance(node, Bin):
+            stack.extend([node.a, node.b])
+        elif isinstance(node, Un):
+            stack.append(node.a)
+        elif isinstance(node, Case):
+            stack.extend([node.cond, node.then, node.orelse])
+    return cols

@@ -1,0 +1,37 @@
+"""Columnar table with validity mask.
+
+Filters never compact (mask-only, branch-free — the vectorized-engine idiom);
+compaction happens only at host boundaries or final output.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Table:
+    columns: dict[str, jnp.ndarray]
+    valid: jnp.ndarray  # bool (n,)
+
+    @staticmethod
+    def from_numpy(cols: dict[str, np.ndarray]) -> "Table":
+        n = len(next(iter(cols.values())))
+        return Table(
+            columns={k: jnp.asarray(v) for k, v in cols.items()},
+            valid=jnp.ones(n, dtype=bool),
+        )
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.valid.shape[0])
+
+    def to_numpy(self, compact: bool = True) -> dict[str, np.ndarray]:
+        mask = np.asarray(self.valid)
+        out = {}
+        for k, v in self.columns.items():
+            a = np.asarray(v)
+            out[k] = a[mask] if compact else a
+        return out

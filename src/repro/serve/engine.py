@@ -1,0 +1,154 @@
+"""Continuous-batching serve engine over the zoo's prefill/decode steps.
+
+vLLM-style slot model adapted to JAX/TPU constraints: the decode step is ONE
+fixed-shape jitted program over a (B_slots, S_cache) KV cache; requests map
+onto free slots, finished slots are recycled mid-flight, and prefill runs as
+a separate (also fixed-shape) program whose emitted KV rows are scattered
+into the slot cache. Fixed shapes mean exactly two compiled programs serve
+any request mix — no shape-churn recompiles (the TPU analog of CUDA-graph
+serving).
+
+Greedy decoding; per-request max_new_tokens and eos termination. The engine
+is deliberately synchronous (step() advances one decode tick) so tests and
+examples can drive it deterministically; a production loop would wrap it in
+an async request pump.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    rid: int = 0
+    # filled by the engine
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, n_slots: int = 4, cache_len: int = 256):
+        fam = model.cfg.family
+        if fam not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                "ServeEngine currently drives KV-cache decoder LMs"
+            )
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        cfg = model.cfg
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        Ld, KH, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        self.k_cache = jnp.zeros((Ld, n_slots, cache_len, KH, hd), dt)
+        self.v_cache = jnp.zeros((Ld, n_slots, cache_len, KH, hd), dt)
+        self.lengths = np.zeros((n_slots,), np.int32)
+        self.last_token = np.zeros((n_slots,), np.int32)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self._rid = itertools.count()
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+        # two fixed-shape compiled programs: prefill(prompt block), decode tick
+        def _decode(params, tokens, lengths, kc, vc):
+            logits, (kc, vc) = model.decode(
+                params, {"tokens": tokens, "lengths": lengths}, (kc, vc)
+            )
+            return jnp.argmax(logits, -1).astype(jnp.int32), kc, vc
+
+        self._decode = jax.jit(_decode, donate_argnums=(3, 4))
+        self._prefill = jax.jit(
+            lambda params, batch: model.prefill(params, batch, cache_len=cache_len)
+        )
+        self.prefill_len = 32  # fixed prompt block (pad/truncate to this)
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, prompt: list[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        r = Request(prompt=list(prompt), max_new_tokens=max_new_tokens,
+                    eos_id=eos_id, rid=next(self._rid))
+        self.queue.append(r)
+        return r
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (batched to n_slots)."""
+        free = self._free_slots()
+        take = min(len(free), len(self.queue))
+        if take == 0:
+            return
+        reqs = [self.queue.pop(0) for _ in range(take)]
+        P = self.prefill_len
+        toks = np.zeros((take, P), np.int32)
+        for i, r in enumerate(reqs):
+            p = r.prompt[-P:]
+            toks[i, P - len(p):] = p  # left-pad (positions still 0..P-1)
+        logits, (kcs, vcs) = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        first = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+        for i, r in enumerate(reqs):
+            s = free[i]
+            self.slot_req[s] = r
+            self.k_cache = self.k_cache.at[:, s].set(kcs[:, i])
+            self.v_cache = self.v_cache.at[:, s].set(vcs[:, i])
+            self.lengths[s] = P
+            tok = int(first[i])
+            r.output.append(tok)
+            self.last_token[s] = tok
+            self._maybe_finish(s)
+
+    def _maybe_finish(self, slot: int) -> None:
+        r = self.slot_req[slot]
+        if r is None:
+            return
+        if (
+            len(r.output) >= r.max_new_tokens
+            or (r.eos_id is not None and r.output and r.output[-1] == r.eos_id)
+            or self.lengths[slot] + 1 >= self.cache_len
+        ):
+            r.done = True
+            self.finished.append(r)
+            self.slot_req[slot] = None
+            self.lengths[slot] = 0
+
+    # -- main loop -----------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit + one decode tick. Returns number of active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        tok, self.k_cache, self.v_cache = self._decode(
+            self.params,
+            jnp.asarray(self.last_token),
+            jnp.asarray(self.lengths),
+            self.k_cache,
+            self.v_cache,
+        )
+        tok = np.asarray(tok)
+        for s in active:
+            self.lengths[s] += 1
+            t = int(tok[s])
+            self.slot_req[s].output.append(t)
+            self.last_token[s] = t
+            self._maybe_finish(s)
+        return len(active)
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        for _ in range(max_ticks):
+            active = self.step()
+            if active == 0 and not self.queue:
+                break
+        return self.finished

@@ -1,0 +1,1 @@
+from repro.sql.parser import parse_prediction_query

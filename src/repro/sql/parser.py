@@ -1,0 +1,191 @@
+"""PREDICT-statement SQL frontend (paper §6 syntax, TVF form).
+
+Supported grammar (enough for the paper's query shapes — scan or multi-way
+FK join, a PREDICT TVF, conjunctive predicates over inputs and outputs,
+aggregates or column select):
+
+    SELECT <item [, item ...]>
+    FROM PREDICT(model = '<path-or-name>',
+                 data = <table> [JOIN <table> ON <col> = <col>]*) AS <alias>
+    [WHERE <col|alias.col> <op> <literal> [AND ...]]
+
+    item := COUNT(*) | SUM(col) | AVG(col) | col | alias.col | *
+
+Produces a :class:`repro.core.ir.PredictionQuery` over a model registry
+(name -> TrainedPipeline) and a database (name -> columns).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from repro.core.ir import (
+    LAggregate,
+    LFilter,
+    LJoin,
+    LPredict,
+    LScan,
+    PredictionQuery,
+    TableStats,
+)
+from repro.relational.expr import Bin, Col, Const
+
+_TOKEN = re.compile(
+    r"\s*(?:(?P<str>'[^']*')|(?P<num>-?\d+\.?\d*(?:[eE][-+]?\d+)?)"
+    r"|(?P<op><=|>=|<>|!=|=|<|>|\(|\)|,|\*|\.)"
+    r"|(?P<word>[A-Za-z_][A-Za-z_0-9]*))"
+)
+
+_OPMAP = {"=": "eq", "<": "lt", "<=": "le", ">": "gt", ">=": "ge"}
+
+
+def _tokenize(sql: str) -> list[str]:
+    tokens, pos = [], 0
+    while pos < len(sql):
+        m = _TOKEN.match(sql, pos)
+        if not m:
+            if sql[pos:].strip() == "":
+                break
+            raise SyntaxError(f"bad token at: {sql[pos:pos+20]!r}")
+        tokens.append(m.group(0).strip())
+        pos = m.end()
+    return tokens
+
+
+class _Parser:
+    def __init__(self, tokens: list[str]):
+        self.toks = tokens
+        self.i = 0
+
+    def peek(self) -> str:
+        return self.toks[self.i] if self.i < len(self.toks) else ""
+
+    def next(self) -> str:
+        t = self.peek()
+        self.i += 1
+        return t
+
+    def expect(self, word: str) -> str:
+        t = self.next()
+        if t.upper() != word.upper():
+            raise SyntaxError(f"expected {word}, got {t!r}")
+        return t
+
+
+def parse_prediction_query(
+    sql: str,
+    models: dict,
+    database: dict,
+    stats: dict[str, TableStats] | None = None,
+    fact: str | None = None,
+) -> PredictionQuery:
+    p = _Parser(_tokenize(sql))
+    p.expect("SELECT")
+
+    items: list[tuple[str, str]] = []  # (kind, arg)
+    while True:
+        t = p.next()
+        u = t.upper()
+        if u in ("COUNT", "SUM", "AVG"):
+            p.expect("(")
+            arg = p.next()
+            p.expect(")")
+            items.append(({"COUNT": "count", "SUM": "sum", "AVG": "mean"}[u], arg))
+        elif t == "*":
+            items.append(("star", "*"))
+        else:
+            # col or alias.col
+            if p.peek() == ".":
+                p.next()
+                col = p.next()
+                items.append(("col", col))
+            else:
+                items.append(("col", t))
+        if p.peek() == ",":
+            p.next()
+            continue
+        break
+
+    p.expect("FROM")
+    p.expect("PREDICT")
+    p.expect("(")
+    p.expect("model")
+    p.expect("=")
+    model_name = p.next().strip("'")
+    p.expect(",")
+    p.expect("data")
+    p.expect("=")
+    base_table = p.next()
+    joins: list[tuple[str, str, str]] = []
+    while p.peek().upper() == "JOIN":
+        p.next()
+        dim = p.next()
+        p.expect("ON")
+        a = _qualcol(p)
+        p.expect("=")
+        b = _qualcol(p)
+        joins.append((dim, a, b))
+    p.expect(")")
+    alias = None
+    if p.peek().upper() == "AS":
+        p.next()
+        alias = p.next()
+
+    preds: list[tuple[str, str, float]] = []
+    if p.peek().upper() == "WHERE":
+        p.next()
+        while True:
+            col = _qualcol(p, alias)
+            op = p.next()
+            lit = p.next()
+            value = float(lit.strip("'")) if not lit.startswith("'") else lit.strip("'")
+            preds.append((col, _OPMAP[op], value))
+            if p.peek().upper() == "AND":
+                p.next()
+                continue
+            break
+
+    # ---- build the unified IR ----------------------------------------------
+    pipeline = models[model_name]
+    if isinstance(pipeline, str):
+        from repro.ml.pipeline import load_pipeline
+
+        pipeline = load_pipeline(pipeline)
+    out_names = ["score", "pred"][: len(pipeline.outputs)]
+
+    plan = LScan(base_table, list(database[base_table].keys()))
+    for dim, a, b in joins:
+        fact_key, dim_key = (a, b) if b in database[dim] else (b, a)
+        dim_cols = [c for c in database[dim] if c != dim_key]
+        plan = LJoin(plan, dim, fact_key, dim_key, dim_cols)
+
+    input_preds = [x for x in preds if x[0] not in out_names]
+    output_preds = [x for x in preds if x[0] in out_names]
+    for col, op, v in input_preds:
+        plan = LFilter(plan, Bin(op, Col(col), Const(v)))
+    plan = LPredict(plan, pipeline.copy(), out_names)
+    for col, op, v in output_preds:
+        plan = LFilter(plan, Bin(op, Col(col), Const(v)))
+
+    aggs = [
+        (f"{kind}_{arg if arg != '*' else 'rows'}", kind, arg)
+        for kind, arg in items
+        if kind in ("count", "sum", "mean")
+    ]
+    if aggs:
+        # COUNT(*) needs a concrete column: use the first predict output
+        aggs = [
+            (name, kind, out_names[-1] if arg == "*" else arg)
+            for (name, kind, arg) in aggs
+        ]
+        plan = LAggregate(plan, aggs)
+
+    return PredictionQuery(plan=plan, stats=stats or {})
+
+
+def _qualcol(p: _Parser, alias: str | None = None) -> str:
+    a = p.next()
+    if p.peek() == ".":
+        p.next()
+        return p.next()
+    return a

@@ -1,0 +1,9 @@
+"""Tensor runtime: Hummingbird-style compilation of traditional ML to fused
+tensor programs (the MLtoDNN target, paper §5.1)."""
+from repro.tensor.tree2tensor import (
+    GemmTreeProgram,
+    TraversalTreeProgram,
+    build_gemm_program,
+    build_traversal_program,
+)
+from repro.tensor.compile import compile_pipeline_tensor

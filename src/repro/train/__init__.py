@@ -1,0 +1,2 @@
+from repro.train.optimizer import adamw_init, adamw_update, adafactor_init, adafactor_update
+from repro.train.step import make_train_step, make_serve_step, make_prefill_step

@@ -1,0 +1,121 @@
+"""Optimizers: AdamW (configurable moment dtype) and Adafactor (factored).
+
+Moment dtype is per-arch config — the 405B/480B archs use bf16 moments so
+(params + m + v) · 6 B/param FSDP-shards under the v5e HBM budget
+(DESIGN.md §4). Updates always compute in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _moment_dtype(name: str):
+    return jnp.bfloat16 if name == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params, moment_dtype: str = "float32"):
+    dt = _moment_dtype(moment_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return {
+        "m": zeros,
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads, opt_state, params,
+    lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+    eps: float = 1e-8, weight_decay: float = 0.1,
+):
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    new_params = jax.tree.map(lambda t3: t3[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment for matrices; memory ~ O(rows+cols))
+# ---------------------------------------------------------------------------
+
+
+def adafactor_init(params, moment_dtype: str = "float32"):
+    dt = _moment_dtype(moment_dtype)
+
+    def st(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], dt),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt),
+            }
+        return {"v": jnp.zeros(p.shape, dt)}
+
+    return {
+        "f": jax.tree.map(st, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(
+    grads, opt_state, params, lr: float = 3e-4, eps: float = 1e-30,
+    decay: float = 0.8, clip: float = 1.0,
+):
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(st, g, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if p.ndim >= 2:
+            vr = beta * st["vr"].astype(jnp.float32) + (1 - beta) * g2.mean(-1)
+            vc = beta * st["vc"].astype(jnp.float32) + (1 - beta) * g2.mean(-2)
+            denom = (
+                vr[..., :, None] * vc[..., None, :]
+                / jnp.maximum(vr.mean(-1)[..., None, None], eps)
+            )
+            u = gf * jax.lax.rsqrt(denom + eps)
+            new_st = {"vr": vr.astype(st["vr"].dtype), "vc": vc.astype(st["vc"].dtype)}
+        else:
+            v = beta * st["v"].astype(jnp.float32) + (1 - beta) * g2
+            u = gf * jax.lax.rsqrt(v + eps)
+            new_st = {"v": v.astype(st["v"].dtype)}
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip)
+        p_new = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return p_new, new_st
+
+    is_st = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    # map over the factored-state tree (is_leaf stops at each {vr,vc}/{v}
+    # dict); grads/params subtrees at those paths are the matching arrays
+    out = jax.tree.map(upd, opt_state["f"], grads, params, is_leaf=is_st)
+    # out leaves are tuples (p_new, state)
+    new_params = jax.tree.map(
+        lambda t2: t2[0], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_f = jax.tree.map(
+        lambda t2: t2[1], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return new_params, {"f": new_f, "step": step}

@@ -1,0 +1,100 @@
+"""Jitted step builders: train_step / prefill_step / serve_step.
+
+These are what the dry-run lowers and what the real launchers execute.
+Gradient accumulation runs microbatches under lax.scan (grads live in f32
+accumulators, model activations in bf16); the optimizer update is fused into
+the same program so params/opt-state never leave the device between steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import (
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+)
+
+
+def init_opt_state(model, params_or_shapes, materialize: bool = True):
+    cfg = model.cfg
+    init = adamw_init if cfg.optimizer == "adamw" else adafactor_init
+    if materialize:
+        return init(params_or_shapes, cfg.optimizer_dtype)
+    return jax.eval_shape(
+        lambda p: init(p, cfg.optimizer_dtype), params_or_shapes
+    )
+
+
+def make_train_step(model, mesh=None, lr: float = 3e-4, accum_steps: int = 1):
+    cfg = model.cfg
+    update = adamw_update if cfg.optimizer == "adamw" else adafactor_update
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, mesh=mesh)
+
+    acc_dtype = (
+        jnp.bfloat16 if cfg.optimizer_dtype == "bfloat16" else jnp.float32
+    )
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # microbatch over the leading batch dim; accumulators in the
+            # optimizer dtype (bf16 for the giants — see DESIGN.md §4)
+            inv = 1.0 / accum_steps
+
+            def micro(carry, mb):
+                acc, tot = carry
+                # scale inside the loss: no whole-tree divide afterwards
+                l, g = jax.value_and_grad(
+                    lambda p, b: loss_fn(p, b) * inv
+                )(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(acc_dtype), acc, g
+                )
+                return (acc, tot + l), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params
+            )
+            (grads, tot), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)), split)
+            loss = tot
+        new_params, new_opt = update(grads, opt_state, params, lr=lr)
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            )
+        )
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(model, mesh=None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, mesh=mesh)
+
+    return prefill_step
+
+
+def make_serve_step(model, mesh=None):
+    """One decode step: greedy next token + updated caches."""
+
+    def serve_step(params, batch, caches):
+        logits, caches = model.decode(params, batch, caches, mesh=mesh)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, caches
+
+    return serve_step

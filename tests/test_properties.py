@@ -1,0 +1,151 @@
+"""Hypothesis property tests on the system's invariants."""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rules.propagation import Interval, prune_tree_ensemble
+from repro.distributed.compression import ef_init, ef_int8_compress, ef_int8_decompress
+from repro.ml import DecisionTreeClassifier
+from repro.relational.expr import Bin, Case, Col, Const, Un, eval_expr
+
+
+# ---------------------------------------------------------------------------
+# expr evaluation == numpy semantics
+# ---------------------------------------------------------------------------
+
+_finite = st.floats(
+    min_value=-1e6, max_value=1e6, allow_nan=False, allow_infinity=False,
+    width=32,
+)
+
+
+@st.composite
+def _exprs(draw, depth=0):
+    if depth >= 4 or draw(st.booleans()):
+        return draw(
+            st.one_of(
+                st.builds(Col, st.sampled_from(["x", "y"])),
+                st.builds(Const, _finite),
+            )
+        )
+    kind = draw(st.sampled_from(["bin", "case", "un"]))
+    if kind == "bin":
+        op = draw(st.sampled_from(["add", "sub", "mul", "min", "max"]))
+        return Bin(op, draw(_exprs(depth + 1)), draw(_exprs(depth + 1)))
+    if kind == "un":
+        return Un(draw(st.sampled_from(["neg", "abs", "sigmoid"])), draw(_exprs(depth + 1)))
+    cond = Bin(
+        draw(st.sampled_from(["le", "lt", "ge", "gt"])),
+        draw(_exprs(depth + 1)),
+        draw(_exprs(depth + 1)),
+    )
+    return Case(cond, draw(_exprs(depth + 1)), draw(_exprs(depth + 1)))
+
+
+def _np_eval(e, env):
+    if isinstance(e, Col):
+        return env[e.name]
+    if isinstance(e, Const):
+        return np.float32(e.value)
+    if isinstance(e, Un):
+        f = {"neg": lambda x: -x, "abs": np.abs,
+             "sigmoid": lambda x: 1 / (1 + np.exp(-x.astype(np.float64))).astype(np.float32)}
+        return f[e.op](_np_eval(e.a, env))
+    if isinstance(e, Case):
+        return np.where(
+            _np_eval(e.cond, env), _np_eval(e.then, env), _np_eval(e.orelse, env)
+        )
+    a, b = _np_eval(e.a, env), _np_eval(e.b, env)
+    f = {"add": np.add, "sub": np.subtract, "mul": np.multiply,
+         "min": np.minimum, "max": np.maximum,
+         "le": np.less_equal, "lt": np.less,
+         "ge": np.greater_equal, "gt": np.greater}
+    return f[e.op](a, b)
+
+
+@settings(max_examples=40, deadline=None)
+@given(e=_exprs(), seed=st.integers(0, 2**31 - 1))
+def test_expr_eval_matches_numpy_semantics(e, seed):
+    rng = np.random.default_rng(seed)
+    env = {
+        "x": rng.normal(scale=10, size=16).astype(np.float32),
+        "y": rng.normal(scale=10, size=16).astype(np.float32),
+    }
+    got = np.asarray(eval_expr(e, env), np.float64)
+    want = np.asarray(_np_eval(e, env), np.float64)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# tree pruning: any row inside the interval constraint scores identically
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    lo=st.floats(min_value=-2.0, max_value=1.0, allow_nan=False),
+    width=st.floats(min_value=0.1, max_value=2.0, allow_nan=False),
+)
+def test_interval_pruned_tree_agrees_inside_interval(seed, lo, width):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(400, 4))
+    y = ((X[:, 0] + 0.5 * X[:, 1] - X[:, 2]) > 0).astype(np.int64)
+    ens = DecisionTreeClassifier(max_depth=6).fit(X, y).ensemble
+    hi = lo + width
+    ivs = [Interval(lo, hi)] + [Interval()] * 3
+    pruned = prune_tree_ensemble(ens, ivs)
+    assert pruned.n_nodes <= ens.n_nodes
+    # rows whose feature 0 is inside [lo, hi] must score identically
+    Xin = X[(X[:, 0] >= lo) & (X[:, 0] <= hi)]
+    if len(Xin):
+        np.testing.assert_allclose(
+            pruned.decision_function(Xin), ens.decision_function(Xin), rtol=0
+        )
+
+
+# ---------------------------------------------------------------------------
+# int8 error feedback: cumulative transmitted gradient is unbiased
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(2, 12))
+def test_error_feedback_accumulates_unbiased(seed, steps):
+    rng = np.random.default_rng(seed)
+    g_true = {"w": rng.normal(size=(8, 16)).astype(np.float32)}
+    state = ef_init(g_true)
+    sent_total = np.zeros_like(g_true["w"])
+    for _ in range(steps):
+        q, s, state = ef_int8_compress(g_true, state)
+        sent_total += np.asarray(ef_int8_decompress(q, s)["w"])
+    # EF guarantees: Σ sent = Σ true − residual, residual bounded by one
+    # quantization step (scale = amax/127 per row)
+    resid = np.asarray(state.residual["w"])
+    np.testing.assert_allclose(
+        sent_total + resid, steps * g_true["w"], rtol=1e-3, atol=1e-3
+    )
+    step_bound = np.abs(g_true["w"]).max(axis=1, keepdims=True) / 127.0 + 1e-6
+    assert (np.abs(resid) <= step_bound * 1.01).all()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint index math round-trips any split
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 64),
+    m=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_checkpoint_shard_windows_roundtrip(n, m, seed):
+    from repro.checkpoint.store import _index_key, _parse_index
+
+    shape = (n, m)
+    idx = (slice(0, n // 2 or 1), slice(0, m))
+    key = _index_key(idx)
+    back = _parse_index(key, shape)
+    assert back == (slice(0, n // 2 or 1), slice(0, m))

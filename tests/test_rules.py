@@ -1,0 +1,215 @@
+"""Logical-optimization rules: semantics preservation + effect assertions.
+
+The ground truth for every rule test: the optimized plan must return the same
+rows/aggregates as the unoptimized plan (rounding tolerance per the paper's
+own §7.4 error bands), while measurably shrinking the model / the scanned
+columns — the paper's claims in §4.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.ir import LScan, PredictionQuery, TableStats, walk
+from repro.core.optimizer import OptimizerOptions, RavenOptimizer
+from repro.core.rules.data_induced import apply_data_induced
+from repro.core.rules.predicate_pruning import apply_predicate_pruning
+from repro.core.rules.projection_pushdown import apply_projection_pushdown
+from repro.relational.engine import Join as PJoin
+from repro.relational.engine import execute_plan, walk_plan
+from repro.sql.parser import parse_prediction_query
+from tests.conftest import predictions_match, train_pipeline
+
+
+def _count_query(ds, pipe, where=""):
+    sql = (
+        "SELECT COUNT(*), SUM(pred), AVG(score) FROM "
+        f"PREDICT(model='m', data={ds.fact}"
+        + "".join(
+            f" JOIN {dim} ON {fk} = {dk}" for fk, dim, dk in ds.join_keys
+        )
+        + ") AS p"
+        + (f" WHERE {where}" if where else "")
+    )
+    return parse_prediction_query(sql, {"m": pipe}, ds.tables)
+
+
+def _run(q, **opts):
+    plan, report = RavenOptimizer(options=OptimizerOptions(**opts)).optimize(q)
+    out = execute_plan(plan, DS.tables)
+    return {k: np.asarray(v) for k, v in out.columns.items()}, plan, report
+
+
+DS = None  # set per-test via fixture
+
+
+@pytest.mark.parametrize("kind", ["dt", "gb", "lr"])
+def test_all_rules_preserve_semantics_hospital(hospital, kind):
+    global DS
+    DS = hospital
+    pipe = train_pipeline(hospital, kind)
+    q = _count_query(hospital, pipe, where="asthma = 1 AND age >= 40")
+    base, _, _ = _run(
+        q, predicate_pruning=False, projection_pushdown=False,
+        data_induced=False, transform="none",
+    )
+    for transform in ("none", "sql", "dnn"):
+        got, _, _ = _run(q, transform=transform)
+        assert abs(got["count_rows"][0] - base["count_rows"][0]) <= max(
+            1, 0.005 * base["count_rows"][0]
+        )
+        np.testing.assert_allclose(
+            got["mean_score"], base["mean_score"], rtol=0.02
+        )
+
+
+@pytest.mark.parametrize("kind", ["dt", "gb"])
+def test_predicate_pruning_shrinks_trees(hospital, kind):
+    global DS
+    DS = hospital
+    pipe = train_pipeline(hospital, kind)
+    q = _count_query(hospital, pipe, where="asthma = 1 AND age >= 70")
+    q2 = q.copy()
+    apply_predicate_pruning(q2)
+    before = sum(
+        m.attrs["ensemble"].n_nodes for m in pipe.model_nodes()
+    )
+    after = sum(
+        m.attrs["ensemble"].n_nodes
+        for m in q2.predict_nodes()[0].pipeline.model_nodes()
+    )
+    assert after < before
+    # the equality-constrained input became a constant (paper step 1)
+    assert "asthma" not in q2.predict_nodes()[0].pipeline.input_names()
+
+
+def test_predicate_pruning_preserves_rowset(hospital):
+    """Pruned pipeline must agree with the original on every row satisfying
+    the predicate (not just on aggregate counts)."""
+    from repro.ml.pipeline import run_pipeline
+
+    global DS
+    DS = hospital
+    pipe = train_pipeline(hospital, "dt")
+    q = _count_query(hospital, pipe, where="asthma = 1 AND age >= 70")
+    q2 = q.copy()
+    apply_predicate_pruning(q2)
+    pruned = q2.predict_nodes()[0].pipeline
+    joined = hospital.joined_columns()
+    mask = (joined["asthma"] == 1) & (joined["age"] >= 70)
+    rows = {k: joined[k][mask] for k in joined}
+    a = run_pipeline(pipe, {k: rows[k] for k in pipe.input_names()})
+    b = run_pipeline(pruned, {k: rows[k] for k in pruned.input_names()})
+    np.testing.assert_allclose(
+        np.asarray(a["score"]).reshape(-1),
+        np.asarray(b["score"]).reshape(-1),
+        rtol=1e-9,
+    )
+
+
+def test_projection_pushdown_prunes_scan_columns(hospital):
+    global DS
+    DS = hospital
+    pipe = train_pipeline(hospital, "dt")  # depth-6 tree: many unused inputs
+    q = _count_query(hospital, pipe)
+    q2 = q.copy()
+    apply_projection_pushdown(q2)
+    scan = [n for n in walk(q2.plan) if isinstance(n, LScan)][0]
+    n_all = len(hospital.tables["patients"])
+    assert len(scan.columns) < n_all, "pushdown should reach the scan"
+    # pruned pipeline inputs match the scanned columns
+    assert set(q2.predict_nodes()[0].pipeline.input_names()) <= set(scan.columns)
+
+
+def test_join_elimination_on_expedia(expedia):
+    """If every column of a dim table is projected out, the FK join dies —
+    the paper's biggest multi-table win."""
+    from repro.ml import LogisticRegression
+    from repro.ml.pipeline import fit_pipeline
+
+    global DS
+    DS = expedia
+    joined = expedia.joined_columns()
+    # model over fact-table columns only -> both dim joins must be eliminated
+    numeric = [c for c in expedia.numeric if c.startswith("s_")]
+    categorical = [c for c in expedia.categorical if c.startswith("s_")]
+    pipe = fit_pipeline(
+        joined, expedia.label, numeric, categorical,
+        LogisticRegression(n_iter=30), categories=expedia.categories(),
+    )
+    q = _count_query(expedia, pipe)
+    base, plan_no, _ = _run(
+        q, predicate_pruning=False, projection_pushdown=False,
+        data_induced=False, transform="none",
+    )
+    got, plan_opt, _ = _run(q, transform="none")
+    assert sum(isinstance(p, PJoin) for p in walk_plan(plan_no)) == 2
+    assert sum(isinstance(p, PJoin) for p in walk_plan(plan_opt)) == 0
+    np.testing.assert_allclose(got["count_rows"], base["count_rows"])
+    np.testing.assert_allclose(got["mean_score"], base["mean_score"], rtol=1e-4)
+
+
+def test_data_induced_partition_models(hospital):
+    global DS
+    DS = hospital
+    pipe = train_pipeline(hospital, "dt")
+    stats = {
+        "patients": TableStats.of(hospital.tables["patients"], partition_col="rcount")
+    }
+    sql = (
+        "SELECT COUNT(*) FROM PREDICT(model='m', data=patients) AS p "
+        "WHERE score >= 0.5"
+    )
+    q = parse_prediction_query(sql, {"m": pipe}, hospital.tables, stats=stats)
+    q2 = q.copy()
+    apply_data_induced(q2)
+    pn = q2.predict_nodes()[0]
+    assert pn.partitioned is not None and len(pn.partitioned) == 6
+    # per-partition specialized model predictions == original on that partition
+    from repro.ml.pipeline import run_pipeline
+
+    joined = hospital.joined_columns()
+    ref = run_pipeline(pipe, {k: joined[k] for k in pipe.input_names()})
+    for key, spec in pn.partitioned:
+        mask = joined["rcount"] == key
+        got = run_pipeline(spec, {k: joined[k][mask] for k in spec.input_names()})
+        np.testing.assert_allclose(
+            np.asarray(got["score"]).reshape(-1),
+            np.asarray(ref["score"]).reshape(-1)[mask],
+            rtol=1e-9,
+        )
+
+
+def test_data_induced_minmax_prunes_without_partitions(hospital):
+    """Global min/max stats alone must already allow pruning branches that
+    test outside the observed range."""
+    global DS
+    DS = hospital
+    pipe = train_pipeline(hospital, "dt")
+    # fabricate stats narrowing 'age' to >= 60: the tree loses its young side
+    stats = {"patients": TableStats.of(hospital.tables["patients"])}
+    stats["patients"].columns["age"].min = 60.0
+    q = _count_query(hospital, pipe)
+    q.stats = stats
+    q2 = q.copy()
+    apply_data_induced(q2)
+    before = sum(m.attrs["ensemble"].n_nodes for m in pipe.model_nodes())
+    after = sum(
+        m.attrs["ensemble"].n_nodes
+        for m in q2.predict_nodes()[0].pipeline.model_nodes()
+    )
+    assert after < before
+
+
+def test_output_predicate_leaf_pruning(hospital):
+    global DS
+    DS = hospital
+    pipe = train_pipeline(hospital, "dt")
+    q = _count_query(hospital, pipe, where="pred = 1")
+    base, _, _ = _run(
+        q, predicate_pruning=False, projection_pushdown=False,
+        data_induced=False, transform="none",
+    )
+    got, _, _ = _run(q, transform="none")
+    np.testing.assert_allclose(got["count_rows"], base["count_rows"])
+    np.testing.assert_allclose(got["mean_score"], base["mean_score"], rtol=1e-6)

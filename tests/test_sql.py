@@ -1,0 +1,56 @@
+"""PREDICT-statement SQL frontend."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.ir import LAggregate, LFilter, LJoin, LPredict, LScan, walk
+from repro.sql.parser import parse_prediction_query
+from tests.conftest import train_pipeline
+
+
+def test_parses_joins_filters_aggregates(expedia):
+    pipe = train_pipeline(expedia, "lr")
+    sql = (
+        "SELECT COUNT(*), AVG(score) FROM PREDICT(model='m', data=searches "
+        "JOIN hotels ON hotel_id = hotel_id "
+        "JOIN destinations ON dest_id = dest_id) AS p "
+        "WHERE s_cat0 = 3 AND score >= 0.8"
+    )
+    q = parse_prediction_query(sql, {"m": pipe}, expedia.tables)
+    kinds = [type(n).__name__ for n in walk(q.plan)]
+    assert kinds.count("LJoin") == 2
+    assert kinds.count("LFilter") == 2  # one below predict, one above
+    assert kinds.count("LPredict") == 1
+    assert isinstance(q.plan, LAggregate)
+    # input predicate sits below the predict node, score predicate above
+    pred = q.predict_nodes()[0]
+    below = [n for n in walk(pred.child) if isinstance(n, LFilter)]
+    assert len(below) == 1
+
+
+def test_model_loading_from_path(tmp_path, hospital):
+    from repro.ml.pipeline import save_pipeline
+
+    pipe = train_pipeline(hospital, "dt")
+    path = str(tmp_path / "model.npz")
+    save_pipeline(pipe, path)
+    sql = f"SELECT COUNT(*) FROM PREDICT(model='{path}', data=patients) AS p"
+    q = parse_prediction_query(sql, {path: path}, hospital.tables)
+    assert q.predict_nodes()[0].pipeline.n_ops() == pipe.n_ops()
+
+
+def test_select_star(hospital):
+    pipe = train_pipeline(hospital, "dt")
+    sql = "SELECT * FROM PREDICT(model='m', data=patients) AS p"
+    q = parse_prediction_query(sql, {"m": pipe}, hospital.tables)
+    assert not isinstance(q.plan, LAggregate)
+
+
+def test_syntax_error_raises(hospital):
+    pipe = train_pipeline(hospital, "dt")
+    with pytest.raises(SyntaxError):
+        parse_prediction_query(
+            "SELECT FROM PREDICT(model='m' data=patients)",
+            {"m": pipe}, hospital.tables,
+        )

@@ -1,0 +1,76 @@
+"""Runtime-selection strategies (paper §5.2) over a miniature corpus."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.corpus import build_corpus
+from repro.core.strategies import (
+    ClassificationStrategy,
+    RegressionStrategy,
+    RuleBasedStrategy,
+    TRANSFORMS,
+    evaluate_strategy,
+)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    # small corpus: strategy machinery, not statistical power, is under test
+    return build_corpus(n_pipelines=24, n_rows=2000, seed=7)
+
+
+def test_corpus_shapes(corpus):
+    assert corpus.stats.shape == (24, 22)
+    assert corpus.runtimes.shape == (24, 3)
+    assert set(np.unique(corpus.labels)) <= {0, 1, 2}
+    assert np.isfinite(corpus.runtimes[:, [0, 2]]).all()  # none/dnn always run
+
+
+@pytest.mark.parametrize(
+    "cls", [RuleBasedStrategy, ClassificationStrategy, RegressionStrategy]
+)
+def test_strategy_fit_and_choose(corpus, cls):
+    if cls is RegressionStrategy:
+        s = cls().fit(corpus.stats, corpus.runtimes)
+    else:
+        s = cls().fit(corpus.stats, corpus.labels)
+    choices = [s.choose(x) for x in corpus.stats]
+    assert all(c in TRANSFORMS for c in choices)
+    # the strategy must beat always-worst by construction on training data
+    res = evaluate_strategy(s, corpus.stats, corpus.labels, corpus.runtimes)
+    worst = corpus.runtimes.max(axis=1).sum()
+    opt = corpus.runtimes.min(axis=1).sum()
+    chosen = corpus.runtimes[
+        np.arange(len(choices)), [TRANSFORMS.index(c) for c in choices]
+    ].sum()
+    assert chosen <= worst
+    assert res["speedup_vs_optimal"] <= 1.0 + 1e-9
+    assert res["accuracy"] >= 0.3
+
+
+def test_rule_based_renders_readable_rule(corpus):
+    s = RuleBasedStrategy(k=3).fit(corpus.stats, corpus.labels)
+    text = s.describe()
+    # always renders at least the leaf actions; splits (when the labels are
+    # not single-class) reference real statistic names
+    assert "apply " in text
+    if "if " in text:
+        from repro.core.stats import STAT_NAMES
+
+        assert any(name in text for name in STAT_NAMES)
+
+
+def test_strategies_beat_majority_class(corpus):
+    """The learned strategies must at least match the majority-label rule on
+    their own training corpus (learning machinery sanity; the real
+    distributional evaluation is benchmarks/fig4_strategies.py)."""
+    labels = corpus.labels
+    majority_acc = max(np.bincount(labels, minlength=3)) / len(labels)
+    for s in (
+        RuleBasedStrategy().fit(corpus.stats, labels),
+        ClassificationStrategy().fit(corpus.stats, labels),
+        RegressionStrategy().fit(corpus.stats, corpus.runtimes),
+    ):
+        res = evaluate_strategy(s, corpus.stats, labels, corpus.runtimes)
+        assert res["accuracy"] >= majority_acc - 0.25
