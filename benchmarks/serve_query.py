@@ -1,0 +1,126 @@
+"""Serving-layer benchmark: cold per-call execution vs the warm cached path.
+
+Measures the MLtoSQL-lowered hospital query under three regimes:
+
+  percall — compile_plan(cache=False) + execute on every request: the
+            pre-serving behavior (re-lower, re-jit, re-trace per call).
+  cached  — execute_plan through the module-level compiled-plan cache
+            (compile once, jit reuses shape-specialized programs).
+  served  — PredictionQueryServer with power-of-two row buckets and
+            micro-batched submits: the steady-state hot path.
+
+Reports throughput (rows/s), per-request latency, and XLA recompile counts;
+the served/percall ratio is the headline (target: >= 5x warm speedup).
+
+    PYTHONPATH=src:. python benchmarks/serve_query.py [--quick]
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import build_query, make_dataset, train_model
+from repro.core.optimizer import OptimizerOptions, RavenOptimizer
+from repro.relational.engine import (
+    PLAN_CACHE_STATS,
+    clear_plan_cache,
+    compile_plan,
+    execute_plan,
+)
+from repro.data.datasets import make_hospital
+from repro.serve import PredictionQueryServer
+
+import jax
+
+
+def _request_sizes(n_requests: int, seed: int = 0) -> list[int]:
+    """Mixed request sizes, the shape churn a real endpoint sees."""
+    rng = np.random.default_rng(seed)
+    return [int(n) for n in rng.integers(200, 4096, size=n_requests)]
+
+
+def run(quick: bool = False):
+    n_requests = 8 if quick else 24
+    sizes = _request_sizes(n_requests)
+    train, _ = make_dataset("hospital", 20_000)
+    pipe = train_model(train, "gb")
+    query = build_query(train, pipe, agg="*", where="score >= 0.6")
+    batches = [make_hospital(n, seed=100 + i).tables["patients"]
+               for i, n in enumerate(sizes)]
+    total_rows = sum(sizes)
+
+    plan, _ = RavenOptimizer(
+        options=OptimizerOptions(transform="sql")
+    ).optimize(query)
+
+    def tables_for(batch):
+        t = dict(train.tables)
+        t["patients"] = batch
+        return t
+
+    # -- percall: compile + execute from scratch every request ---------------
+    clear_plan_cache()
+    t0 = time.perf_counter()
+    for b in batches:
+        out = compile_plan(plan, cache=False)(
+            {t: {c: np.asarray(v) for c, v in cols.items()}
+             for t, cols in tables_for(b).items()}
+        )
+        jax.block_until_ready(out.columns)
+    t_percall = time.perf_counter() - t0
+    percall_traces = PLAN_CACHE_STATS.traces
+
+    # -- cached: execute_plan through the compiled-plan cache ----------------
+    clear_plan_cache()
+    execute_plan(plan, tables_for(batches[0]))  # warm the compile
+    t0 = time.perf_counter()
+    for b in batches:
+        jax.block_until_ready(execute_plan(plan, tables_for(b)).columns)
+    t_cached = time.perf_counter() - t0
+    cached_traces = PLAN_CACHE_STATS.traces
+
+    # -- served: bucketed + micro-batched server -----------------------------
+    clear_plan_cache()
+    srv = PredictionQueryServer(options=OptimizerOptions(transform="sql"))
+    srv.register("hospital", query, train.tables)
+    srv.execute("hospital", batches[0])  # warm one bucket
+    warm_traces = srv.recompiles()
+    t0 = time.perf_counter()
+    reqs = [srv.submit("hospital", b) for b in batches]
+    srv.flush()
+    t_served = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+
+    rows = {
+        "requests": n_requests,
+        "rows": total_rows,
+        "percall_s": t_percall,
+        "cached_s": t_cached,
+        "served_s": t_served,
+        "percall_rows_s": total_rows / t_percall,
+        "cached_rows_s": total_rows / t_cached,
+        "served_rows_s": total_rows / t_served,
+        "percall_recompiles": percall_traces,
+        "cached_recompiles": cached_traces,
+        "served_recompiles_after_warmup": srv.recompiles() - warm_traces,
+        "speedup_cached": t_percall / t_cached,
+        "speedup_served": t_percall / t_served,
+    }
+    print("serve_query,variant,seconds,rows_per_s,recompiles")
+    print(f"serve_query,percall,{t_percall:.3f},{rows['percall_rows_s']:.0f},"
+          f"{percall_traces}")
+    print(f"serve_query,cached,{t_cached:.3f},{rows['cached_rows_s']:.0f},"
+          f"{cached_traces}")
+    print(f"serve_query,served,{t_served:.3f},{rows['served_rows_s']:.0f},"
+          f"{srv.recompiles() - warm_traces} (after warmup)")
+    print(f"serve_query,speedup,served vs percall = "
+          f"{rows['speedup_served']:.1f}x, cached vs percall = "
+          f"{rows['speedup_cached']:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--quick" in sys.argv)

@@ -10,6 +10,7 @@ from repro.core.ir import (
     LogicalPlan,
     PredictionQuery,
     TableStats,
+    plan_fingerprint,
     walk,
 )
 from repro.core.optimizer import OptimizerOptions, RavenOptimizer

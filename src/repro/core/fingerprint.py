@@ -1,0 +1,136 @@
+"""Canonical content hashing for plans, pipelines, and statistics.
+
+The serving layer caches optimized plans and compiled stage executables, so it
+needs a *stable* identity for a plan: two structurally identical plans must
+hash equal, and any change to an operator, expression, model weight, or
+statistic must change the hash. This module feeds a canonical byte stream into
+sha256:
+
+  * scalars/strings/bytes — tagged by type, so ``1`` ≠ ``1.0`` ≠ ``"1"``;
+  * numpy arrays — dtype + shape + raw bytes;
+  * dataclasses (plan nodes, ``TableStats``, ``TreeEnsemble``, …) — class
+    name + fields in declaration order;
+  * ``Expr`` trees — hashed iteratively with per-node digest memoization
+    (MLtoSQL emits tens of thousands of nodes; recursion would overflow, and
+    shared sub-DAGs would blow up exponentially without the memo);
+  * callables and other opaque objects — hashed by ``id()`` and recorded in
+    ``pins``. Identity-hashed fingerprints are only valid while the object is
+    alive, so any cache keyed on them must keep a strong reference to every
+    pinned object (id reuse after GC would otherwise alias two different
+    closures to one fingerprint).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any
+
+import numpy as np
+
+
+def fingerprint(*objs: Any, pins: list | None = None) -> str:
+    """Canonical sha256 hex digest of ``objs``.
+
+    ``pins`` (if given) collects every object that was hashed by identity;
+    the caller must keep those alive for as long as the fingerprint is used
+    as a cache key.
+    """
+    h = hashlib.sha256()
+    sink = pins if pins is not None else []
+    for o in objs:
+        _feed(h, o, sink)
+    return h.hexdigest()
+
+
+def _feed(h, obj: Any, pins: list) -> None:
+    # Expr first: it is a dataclass, but deep chains need the iterative path
+    from repro.relational.expr import Expr
+
+    if isinstance(obj, Expr):
+        h.update(b"E")
+        h.update(bytes.fromhex(_expr_digest(obj, pins)))
+        return
+    if obj is None:
+        h.update(b"N")
+    elif isinstance(obj, bool):
+        h.update(b"B1" if obj else b"B0")
+    elif isinstance(obj, (int, np.integer)):
+        h.update(b"I" + str(int(obj)).encode())
+    elif isinstance(obj, (float, np.floating)):
+        h.update(b"F" + np.float64(obj).tobytes())
+    elif isinstance(obj, str):
+        h.update(b"S" + obj.encode() + b"\x00")
+    elif isinstance(obj, bytes):
+        h.update(b"Y" + obj + b"\x00")
+    elif isinstance(obj, np.ndarray):
+        h.update(b"A" + str(obj.dtype).encode() + str(obj.shape).encode())
+        h.update(np.ascontiguousarray(obj).tobytes())
+    elif isinstance(obj, (list, tuple)):
+        h.update(b"L" if isinstance(obj, list) else b"T")
+        h.update(str(len(obj)).encode())
+        for v in obj:
+            _feed(h, v, pins)
+    elif isinstance(obj, dict):
+        h.update(b"D" + str(len(obj)).encode())
+        for k in sorted(obj, key=repr):
+            _feed(h, k, pins)
+            _feed(h, obj[k], pins)
+    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        h.update(b"C" + type(obj).__name__.encode() + b"\x00")
+        for f in dataclasses.fields(obj):
+            _feed(h, getattr(obj, f.name), pins)
+    elif hasattr(obj, "__array__"):  # jax arrays and friends
+        _feed(h, np.asarray(obj), pins)
+    else:
+        # opaque (callables, foreign objects): identity hash — see module doc
+        h.update(b"O" + str(id(obj)).encode())
+        pins.append(obj)
+
+
+def _expr_digest(expr, pins: list) -> str:
+    """Bottom-up digest of an Expr DAG (explicit stack, memoized by id)."""
+    from repro.relational.expr import Bin, Case, Col, Const, Un
+
+    memo: dict[int, str] = {}
+    stack: list[tuple[Any, bool]] = [(expr, False)]
+    while stack:
+        node, visited = stack.pop()
+        nid = id(node)
+        if nid in memo:
+            continue
+        if isinstance(node, Col):
+            memo[nid] = hashlib.sha256(b"Col" + node.name.encode()).hexdigest()
+        elif isinstance(node, Const):
+            hh = hashlib.sha256(b"Const")
+            _feed(hh, node.value, pins)
+            memo[nid] = hh.hexdigest()
+        elif visited:
+            hh = hashlib.sha256()
+            if isinstance(node, Bin):
+                hh.update(b"Bin" + node.op.encode())
+                hh.update(bytes.fromhex(memo[id(node.a)]))
+                hh.update(bytes.fromhex(memo[id(node.b)]))
+            elif isinstance(node, Un):
+                hh.update(b"Un" + node.op.encode())
+                hh.update(bytes.fromhex(memo[id(node.a)]))
+            elif isinstance(node, Case):
+                hh.update(b"Case")
+                hh.update(bytes.fromhex(memo[id(node.cond)]))
+                hh.update(bytes.fromhex(memo[id(node.then)]))
+                hh.update(bytes.fromhex(memo[id(node.orelse)]))
+            else:
+                raise TypeError(type(node))
+            memo[nid] = hh.hexdigest()
+        else:
+            stack.append((node, True))
+            if isinstance(node, Bin):
+                stack.extend([(node.a, False), (node.b, False)])
+            elif isinstance(node, Un):
+                stack.append((node.a, False))
+            elif isinstance(node, Case):
+                stack.extend(
+                    [(node.cond, False), (node.then, False), (node.orelse, False)]
+                )
+            else:
+                raise TypeError(type(node))
+    return memo[id(expr)]

@@ -17,6 +17,7 @@ from typing import Any, Optional, Union
 
 import numpy as np
 
+from repro.core.fingerprint import fingerprint
 from repro.ml.pipeline import TrainedPipeline
 from repro.relational.expr import Expr
 
@@ -158,6 +159,12 @@ def walk(p: LogicalPlan):
         yield from walk(c)
 
 
+def plan_fingerprint(p: LogicalPlan, pins: Optional[list] = None) -> str:
+    """Canonical content hash of a logical plan (operators, expressions,
+    pipeline weights). Structurally identical plans hash equal."""
+    return fingerprint(p, pins=pins)
+
+
 @dataclass
 class PredictionQuery:
     """The unified IR instance for one prediction query."""
@@ -167,6 +174,11 @@ class PredictionQuery:
 
     def predict_nodes(self) -> list[LPredict]:
         return [n for n in walk(self.plan) if isinstance(n, LPredict)]
+
+    def fingerprint(self) -> str:
+        """Hash of (plan, stats): the optimizer's output is a pure function
+        of both, so this keys the serving layer's optimized-plan cache."""
+        return fingerprint(self.plan, self.stats)
 
     def copy(self) -> "PredictionQuery":
         import copy as _copy

@@ -234,9 +234,14 @@ class RegressionStrategy:
                 targets.append(np.log(max(y_runtimes[i, tid], 1e-9)))
         Xa = np.asarray(rows)
         ya = np.asarray(targets)
+        # Grow the tree on mean-centered targets: the grad-mode split gain
+        # G²/(H+λ) is regularized, so a large common offset (log-runtimes sit
+        # far from 0) makes every split cost ~μ² and the tree degenerates to
+        # a single leaf. The mean becomes the ensemble's base_score.
+        base = float(ya.mean())
         tree = _grow_tree(
             Xa,
-            (ya, np.ones_like(ya)),
+            (ya - base, np.ones_like(ya)),
             max_depth=self.max_depth,
             min_samples_split=2,
             max_bins=32,
@@ -244,7 +249,7 @@ class RegressionStrategy:
             max_features=None,
             mode="grad",
         )
-        self.ensemble = _concat_trees([tree], np.ones(1), 0.0, "none", Xa.shape[1])
+        self.ensemble = _concat_trees([tree], np.ones(1), base, "none", Xa.shape[1])
         return self
 
     def choose(self, stats: np.ndarray) -> str:

@@ -134,10 +134,14 @@ def parse_hlo(text: str) -> dict[str, Computation]:
         tail = rest[om.end() - 2:]  # from '(' of the operand list
         pm = _OPERANDS_RE.match(tail)
         operand_str = pm.group(1) if pm else ""
-        operands = [
-            o.strip() for o in re.split(r",(?![^\[]*\])", operand_str)
-            if o.strip().startswith("%")
-        ]
+        # operands print either bare ("%x") or type-prefixed
+        # ("f32[64,128]{1,0} %x") depending on the dump flavor: keep the
+        # %name token either way
+        operands = []
+        for o in re.split(r",(?![^\[]*\])", operand_str):
+            nm = re.search(r"%[\w.\-]+", o)
+            if nm:
+                operands.append(nm.group(0))
         attrs = tail[pm.end():] if pm else tail
         instr = Instr(
             m.group("name"), type_str, opcode, operands, attrs,

@@ -302,10 +302,33 @@ def fit_pipeline(
 # (De)serialization — the on-disk "model format" (npz + json header)
 # ---------------------------------------------------------------------------
 
+try:  # orjson is an optional speedup (see requirements-optional.txt)
+    import orjson as _json_impl
+
+    def _json_dumps(obj) -> bytes:
+        # OPT_SERIALIZE_NUMPY: accept numpy scalars in node attrs, matching
+        # the stdlib fallback's _json_default behavior
+        return _json_impl.dumps(obj, option=_json_impl.OPT_SERIALIZE_NUMPY)
+
+    def _json_loads(data: bytes):
+        return _json_impl.loads(data)
+
+except ModuleNotFoundError:
+    import json as _json_impl
+
+    def _json_default(o):
+        if isinstance(o, np.generic):
+            return o.item()
+        raise TypeError(f"not JSON-serializable: {type(o)}")
+
+    def _json_dumps(obj) -> bytes:
+        return _json_impl.dumps(obj, default=_json_default).encode()
+
+    def _json_loads(data: bytes):
+        return _json_impl.loads(data.decode())
+
 
 def save_pipeline(pipeline: TrainedPipeline, path: str) -> None:
-    import orjson
-
     arrays: dict[str, np.ndarray] = {}
     meta_nodes = []
     for i, n in enumerate(pipeline.nodes):
@@ -332,15 +355,13 @@ def save_pipeline(pipeline: TrainedPipeline, path: str) -> None:
         "outputs": pipeline.outputs,
         "nodes": meta_nodes,
     }
-    arrays["__meta__"] = np.frombuffer(orjson.dumps(meta), dtype=np.uint8)
+    arrays["__meta__"] = np.frombuffer(_json_dumps(meta), dtype=np.uint8)
     np.savez(path, **arrays)
 
 
 def load_pipeline(path: str) -> TrainedPipeline:
-    import orjson
-
     data = np.load(path, allow_pickle=False)
-    meta = orjson.loads(bytes(data["__meta__"].tobytes()))
+    meta = _json_loads(bytes(data["__meta__"].tobytes()))
     nodes = []
     for i, nm in enumerate(meta["nodes"]):
         attrs: dict[str, Any] = {}

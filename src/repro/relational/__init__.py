@@ -23,13 +23,17 @@ from repro.relational.expr import (
 from repro.relational.table import Table
 from repro.relational.engine import (
     Aggregate,
+    CompiledPlan,
     Filter,
     Join,
     MLUdf,
     PhysicalPlan,
+    PLAN_CACHE_STATS,
     Project,
     Scan,
     TensorOp,
+    clear_plan_cache,
     execute_plan,
     compile_plan,
+    plan_fingerprint,
 )

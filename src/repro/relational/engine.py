@@ -100,6 +100,9 @@ def walk_plan(p: PhysicalPlan):
 
 State = tuple[dict[str, jnp.ndarray], jnp.ndarray]  # (columns, valid)
 
+# env key carrying the initial fact-spine validity mask (padded serving)
+ROW_VALID_KEY = "__row_valid__"
+
 
 def _pure_step(plan: PhysicalPlan, inner: Callable[[dict], State]) -> Callable[[dict], State]:
     """Compose one pure operator on top of ``inner`` (env -> state)."""
@@ -108,7 +111,11 @@ def _pure_step(plan: PhysicalPlan, inner: Callable[[dict], State]) -> Callable[[
         def fn(env, _plan=plan):
             cols = {c: env[_plan.table][c] for c in _plan.columns}
             n = next(iter(cols.values())).shape[0]
-            return cols, jnp.ones((n,), dtype=bool)
+            # the serving layer pads batches to a shape bucket and marks the
+            # pad rows invalid up front via ROW_VALID_KEY
+            rv = env.get(ROW_VALID_KEY)
+            valid = jnp.ones((n,), dtype=bool) if rv is None else rv.astype(bool)
+            return cols, valid
         return fn
 
     if isinstance(plan, Join):
@@ -227,22 +234,81 @@ def _run_udf(udf: MLUdf, cols: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
     return result
 
 
-def compile_plan(plan: PhysicalPlan) -> Callable[[dict], Table]:
-    """Compile a plan into an executable over a database dict.
+def plan_fingerprint(plan: PhysicalPlan, pins: Optional[list] = None) -> str:
+    """Canonical content hash of a physical plan.
 
-    Pure stages are jitted (one XLA program each — a fully-MLtoSQL'd query is
-    exactly ONE program); UDF stages run on host between them.
+    Structurally identical plans (same operators, expressions, pipeline
+    weights) hash equal, so compiled artifacts are reusable across plan
+    objects. Opaque callables (``TensorOp.fn``) hash by identity and are
+    reported via ``pins``; the compiled-plan cache keeps those alive so a
+    fingerprint can never alias a dead closure's recycled id.
     """
-    stages = _lower(plan)
-    jitted = [
-        _PureStage(jax.jit(s.fn)) if isinstance(s, _PureStage) else s
-        for s in stages
-    ]
+    from repro.core.fingerprint import fingerprint
 
-    def run(database: dict[str, dict[str, jnp.ndarray]]) -> Table:
+    return fingerprint(plan, pins=pins)
+
+
+@dataclass
+class CacheStats:
+    """Module-level compiled-plan cache accounting."""
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    traces: int = 0  # XLA (re)compiles: stage tracings across all entries
+
+    def snapshot(self) -> dict[str, int]:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "evictions": self.evictions, "traces": self.traces,
+        }
+
+
+PLAN_CACHE_STATS = CacheStats()
+_PLAN_CACHE: "dict[str, CompiledPlan]" = {}  # insertion-ordered: LRU via re-insert
+PLAN_CACHE_CAPACITY = 64
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    PLAN_CACHE_STATS.hits = PLAN_CACHE_STATS.misses = 0
+    PLAN_CACHE_STATS.evictions = PLAN_CACHE_STATS.traces = 0
+
+
+@dataclass
+class CompiledPlan:
+    """Reusable compiled artifact for one physical plan.
+
+    ``stages`` holds the jitted pure-stage executables (jit specializes per
+    input shape bucket internally; ``traces`` counts those specializations —
+    i.e. actual XLA compiles). ``pins`` keeps identity-hashed plan components
+    alive while this entry can be looked up.
+    """
+
+    fingerprint: str
+    stages: list
+    pins: list = field(default_factory=list)
+    traces: int = 0
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def is_pure(self) -> bool:
+        """One jitted XLA program, no host boundary (MLtoSQL/MLtoDNN output)."""
+        return all(isinstance(s, _PureStage) for s in self.stages)
+
+    def __call__(
+        self,
+        database: dict[str, dict[str, jnp.ndarray]],
+        row_valid: Optional[jnp.ndarray] = None,
+    ) -> Table:
         env: dict[str, Any] = dict(database)
+        if row_valid is not None:
+            env[ROW_VALID_KEY] = jnp.asarray(row_valid, dtype=bool)
         state: Optional[State] = None
-        for st in jitted:
+        for st in self.stages:
             if isinstance(st, _PureStage):
                 state = st.fn(env)
             else:
@@ -262,15 +328,65 @@ def compile_plan(plan: PhysicalPlan) -> Callable[[dict], Table]:
         cols, valid = state
         return Table(columns=cols, valid=valid)
 
-    return run
+
+def _build_compiled(plan: PhysicalPlan, fingerprint: str, pins: list) -> CompiledPlan:
+    compiled = CompiledPlan(fingerprint=fingerprint, stages=[], pins=pins)
+    for s in _lower(plan):
+        if isinstance(s, _PureStage):
+            def traced(env, _fn=s.fn):
+                # python side effects run at trace time only: this counts
+                # actual XLA compiles (one per new env shape/dtype structure)
+                compiled.traces += 1
+                PLAN_CACHE_STATS.traces += 1
+                return _fn(env)
+
+            compiled.stages.append(_PureStage(jax.jit(traced)))
+        else:
+            compiled.stages.append(s)
+    return compiled
 
 
-def execute_plan(plan: PhysicalPlan, database: dict[str, dict[str, np.ndarray]]) -> Table:
+def compile_plan(plan: PhysicalPlan, cache: bool = True) -> CompiledPlan:
+    """Compile a plan into a reusable executable over a database dict.
+
+    Pure stages are jitted (one XLA program each — a fully-MLtoSQL'd query is
+    exactly ONE program); UDF stages run on host between them. Compiled
+    artifacts are cached in a module-level LRU keyed by plan fingerprint, so
+    repeated compile/execute of an identical plan reuses both the lowered
+    stages and jit's shape-specialized XLA programs instead of re-jitting
+    per call. ``cache=False`` forces a fresh compile (the pre-cache,
+    compile-per-call behavior — kept for benchmarks and tests).
+    """
+    if not cache:
+        pins: list = []
+        return _build_compiled(plan, plan_fingerprint(plan, pins=pins), pins)
+    pins = []
+    fp = plan_fingerprint(plan, pins=pins)
+    entry = _PLAN_CACHE.get(fp)
+    if entry is not None:
+        PLAN_CACHE_STATS.hits += 1
+        _PLAN_CACHE.pop(fp)  # LRU: re-insert as most recent
+        _PLAN_CACHE[fp] = entry
+        return entry
+    PLAN_CACHE_STATS.misses += 1
+    entry = _build_compiled(plan, fp, pins)
+    _PLAN_CACHE[fp] = entry
+    while len(_PLAN_CACHE) > PLAN_CACHE_CAPACITY:
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+        PLAN_CACHE_STATS.evictions += 1
+    return entry
+
+
+def execute_plan(
+    plan: PhysicalPlan,
+    database: dict[str, dict[str, np.ndarray]],
+    row_valid: Optional[np.ndarray] = None,
+) -> Table:
     db = {
         t: {c: jnp.asarray(v) for c, v in cols.items()}
         for t, cols in database.items()
     }
-    return compile_plan(plan)(db)
+    return compile_plan(plan)(db, row_valid=row_valid)
 
 
 # ---------------------------------------------------------------------------

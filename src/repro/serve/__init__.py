@@ -1,3 +1,18 @@
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.query_server import (
+    PredictionQueryServer,
+    QueryRequest,
+    RegisteredQuery,
+    ServerStats,
+    row_bucket,
+)
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = [
+    "Request",
+    "ServeEngine",
+    "PredictionQueryServer",
+    "QueryRequest",
+    "RegisteredQuery",
+    "ServerStats",
+    "row_bucket",
+]

@@ -1,0 +1,328 @@
+"""Serving layer for prediction queries: optimize once, execute hot.
+
+Raven's premise is that a prediction query is optimized *once* and then served
+at high request rates, yet ``execute_plan`` alone re-derives everything per
+call. ``PredictionQueryServer`` closes that gap:
+
+  * ``register`` runs the :class:`RavenOptimizer` once per (query, stats)
+    — structurally identical registrations share the optimized physical plan
+    via the canonical query fingerprint — and compiles the plan into reusable
+    stage executables through the engine's fingerprint-keyed plan cache.
+  * Incoming batches are padded to a power-of-two row bucket with a validity
+    mask (the engine's filters, joins, and aggregates are mask-aware), so any
+    mix of request sizes hits at most ``log2(max_rows)`` compiled XLA
+    programs per query instead of recompiling per shape.
+  * ``submit``/``flush`` micro-batch: pending requests against the same query
+    coalesce into one padded execution, with per-request result slicing off
+    the shared fact spine.
+
+The server is deliberately synchronous (like :class:`ServeEngine`): ``submit``
+enqueues, ``flush`` drains, so tests and examples drive it deterministically;
+a production loop would wrap it in an async request pump.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fingerprint import fingerprint
+from repro.core.ir import PredictionQuery
+from repro.core.optimizer import OptimizationReport, OptimizerOptions, RavenOptimizer
+from repro.relational.engine import (
+    Aggregate,
+    CompiledPlan,
+    PhysicalPlan,
+    Scan,
+    compile_plan,
+    walk_plan,
+)
+from repro.relational.table import Table
+
+
+def row_bucket(n: int, min_bucket: int = 64) -> int:
+    """Smallest power-of-two bucket holding ``n`` rows (≥ ``min_bucket``)."""
+    b = max(int(min_bucket), 1)
+    while b < n:
+        b <<= 1
+    return b
+
+
+@dataclass
+class QueryRequest:
+    """One submitted batch; ``result`` is filled by ``flush``."""
+
+    rid: int
+    query: str
+    columns: dict[str, np.ndarray]
+    n_rows: int
+    result: Optional[dict[str, np.ndarray]] = None
+    done: bool = False
+
+
+@dataclass
+class ServerStats:
+    queries_registered: int = 0
+    plan_cache_hits: int = 0    # optimizer runs avoided via query fingerprint
+    plan_cache_misses: int = 0
+    bucket_hits: int = 0        # executions landing on an already-seen
+    bucket_misses: int = 0      # (query, schema, bucket) combination
+    batches_executed: int = 0
+    requests_served: int = 0
+    coalesced_requests: int = 0  # requests that shared a batch with others
+    rows_in: int = 0
+    rows_padded: int = 0
+
+    def snapshot(self) -> dict[str, int]:
+        return dict(self.__dict__)
+
+
+@dataclass
+class RegisteredQuery:
+    name: str
+    query_fingerprint: str
+    plan: PhysicalPlan
+    report: OptimizationReport
+    compiled: CompiledPlan
+    database: dict[str, dict[str, jnp.ndarray]]  # dims resident on device
+    fact_table: str
+    scan_columns: list[str]
+    fact_dtypes: dict[str, np.dtype]
+    has_aggregate: bool
+
+    @property
+    def recompiles(self) -> int:
+        """XLA stage tracings attributable to this query's compiled plan."""
+        return self.compiled.traces
+
+
+class PredictionQueryServer:
+    def __init__(
+        self,
+        strategy=None,
+        options: Optional[OptimizerOptions] = None,
+        *,
+        min_bucket: int = 64,
+        max_bucket: int = 1 << 20,
+    ):
+        self.optimizer = RavenOptimizer(strategy=strategy, options=options)
+        self.min_bucket = min_bucket
+        self.max_bucket = max_bucket
+        self.stats = ServerStats()
+        self.queries: dict[str, RegisteredQuery] = {}
+        self._optimized: dict[str, tuple[PhysicalPlan, OptimizationReport]] = {}
+        self._pins: list[Any] = []  # keeps identity-hashed objects alive
+        self._seen_buckets: set[tuple[str, tuple, int]] = set()
+        self._rid = itertools.count()
+        self._pending: list[QueryRequest] = []
+
+    # -- registration --------------------------------------------------------
+
+    def register(
+        self,
+        name: str,
+        query: PredictionQuery,
+        database: dict[str, dict[str, np.ndarray]],
+        fact_table: Optional[str] = None,
+    ) -> RegisteredQuery:
+        """Optimize + compile ``query`` and make it servable under ``name``.
+
+        ``database`` supplies the dimension tables (kept device-resident) and
+        the fact table's schema; serve-time batches replace the fact rows.
+        """
+        qfp = fingerprint(
+            query.plan, query.stats, self.optimizer.options,
+            self.optimizer.strategy, pins=self._pins,
+        )
+        cached = self._optimized.get(qfp)
+        if cached is not None:
+            self.stats.plan_cache_hits += 1
+            plan, report = cached
+        else:
+            self.stats.plan_cache_misses += 1
+            plan, report = self.optimizer.optimize(query)
+            self._optimized[qfp] = (plan, report)
+        compiled = compile_plan(plan)
+
+        scans = [p for p in walk_plan(plan) if isinstance(p, Scan)]
+        if fact_table is None:
+            fact_table = scans[0].table
+        if fact_table not in database:
+            raise KeyError(f"fact table '{fact_table}' missing from database")
+        scan_columns = [c for s in scans if s.table == fact_table for c in s.columns]
+        db = {
+            t: {c: jnp.asarray(v) for c, v in cols.items()}
+            for t, cols in database.items()
+            if t != fact_table
+        }
+        reg = RegisteredQuery(
+            name=name,
+            query_fingerprint=qfp,
+            plan=plan,
+            report=report,
+            compiled=compiled,
+            database=db,
+            fact_table=fact_table,
+            scan_columns=scan_columns,
+            fact_dtypes={
+                c: np.asarray(database[fact_table][c]).dtype
+                for c in scan_columns
+            },
+            has_aggregate=any(isinstance(p, Aggregate) for p in walk_plan(plan)),
+        )
+        self.queries[name] = reg
+        self.stats.queries_registered += 1
+        return reg
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, name: str, columns: dict[str, np.ndarray]) -> QueryRequest:
+        """Enqueue one batch of fact rows for ``name``; run via ``flush``."""
+        reg = self.queries[name]
+        missing = [c for c in reg.scan_columns if c not in columns]
+        if missing:
+            raise KeyError(f"batch for '{name}' missing columns {missing}")
+        # normalize dtypes to the registered schema so every bucket-sized
+        # batch maps onto the same compiled program
+        cols = {
+            c: np.asarray(columns[c]).astype(reg.fact_dtypes[c], copy=False)
+            for c in reg.scan_columns
+        }
+        lengths = {len(v) for v in cols.values()}
+        if len(lengths) > 1:
+            raise ValueError(
+                f"batch for '{name}' has ragged columns: "
+                f"{ {c: len(v) for c, v in cols.items()} }"
+            )
+        n = lengths.pop() if lengths else 0
+        req = QueryRequest(
+            rid=next(self._rid), query=name, columns=cols, n_rows=n,
+        )
+        self._pending.append(req)
+        self.stats.rows_in += n
+        return req
+
+    def flush(self) -> list[QueryRequest]:
+        """Execute all pending requests (coalescing per query) and return
+        them with results filled."""
+        pending, self._pending = self._pending, []
+        by_query: dict[str, list[QueryRequest]] = {}
+        for r in pending:
+            by_query.setdefault(r.query, []).append(r)
+        for name, reqs in by_query.items():
+            reg = self.queries[name]
+            if reg.compiled.is_pure and not reg.has_aggregate:
+                for group in self._coalesce(reqs):
+                    self._run_group(reg, group)
+            else:
+                # aggregates fold the whole spine into one row, and host
+                # (UDF) boundaries compact data-dependently: neither can be
+                # sliced back per request, so these run one batch at a time
+                for r in reqs:
+                    self._run_group(reg, [r])
+        self.stats.requests_served += len(pending)
+        return pending
+
+    def execute(
+        self, name: str, columns: dict[str, np.ndarray]
+    ) -> dict[str, np.ndarray]:
+        """One-shot convenience: submit + flush + return the result."""
+        req = self.submit(name, columns)
+        self.flush()
+        return req.result
+
+    # -- internals -----------------------------------------------------------
+
+    def _coalesce(self, reqs: list[QueryRequest]) -> list[list[QueryRequest]]:
+        """Pack pending requests into shared executions ≤ ``max_bucket``."""
+        groups: list[list[QueryRequest]] = []
+        cur: list[QueryRequest] = []
+        cur_rows = 0
+        for r in reqs:
+            if cur and cur_rows + r.n_rows > self.max_bucket:
+                groups.append(cur)
+                cur, cur_rows = [], 0
+            cur.append(r)
+            cur_rows += r.n_rows
+        if cur:
+            groups.append(cur)
+        return groups
+
+    def _execute_padded(
+        self, reg: RegisteredQuery, fact_np: dict[str, np.ndarray], n: int
+    ) -> "Table":
+        """Pad ``n`` fact rows to their bucket and run the compiled plan."""
+        bucket = row_bucket(n, self.min_bucket)
+        fact: dict[str, jnp.ndarray] = {}
+        for c in reg.scan_columns:
+            col = fact_np[c]
+            if len(col) < bucket:
+                pad = np.zeros(bucket - len(col), dtype=col.dtype)
+                col = np.concatenate([col, pad])
+            fact[c] = jnp.asarray(col)
+        row_valid = np.arange(bucket) < n
+
+        schema = tuple((c, str(reg.fact_dtypes[c])) for c in reg.scan_columns)
+        key = (reg.compiled.fingerprint, schema, bucket)
+        if key in self._seen_buckets:
+            self.stats.bucket_hits += 1
+        else:
+            self.stats.bucket_misses += 1
+            self._seen_buckets.add(key)
+
+        db = dict(reg.database)
+        db[reg.fact_table] = fact
+        table = reg.compiled(db, row_valid=jnp.asarray(row_valid))
+        self.stats.batches_executed += 1
+        self.stats.rows_padded += bucket - n
+        return table
+
+    def _run_group(self, reg: RegisteredQuery, group: list[QueryRequest]) -> None:
+        n = sum(r.n_rows for r in group)
+        if reg.compiled.is_pure and not reg.has_aggregate:
+            cat = {
+                c: np.concatenate([r.columns[c] for r in group])
+                if len(group) > 1 else group[0].columns[c]
+                for c in reg.scan_columns
+            }
+            # row-aligned output lets a spine wider than max_bucket run as
+            # max_bucket-sized chunks, keeping the compiled-program count
+            # bounded by log2(max_bucket / min_bucket) + 1 per query
+            out_cols: dict[str, list[np.ndarray]] = {}
+            out_valid: list[np.ndarray] = []
+            for off in range(0, max(n, 1), self.max_bucket):
+                span = min(self.max_bucket, n - off) if n else 0
+                chunk = {c: v[off:off + span] for c, v in cat.items()}
+                table = self._execute_padded(reg, chunk, span)
+                valid = np.asarray(table.valid)[:span]
+                out_valid.append(valid)
+                for k, v in table.columns.items():
+                    out_cols.setdefault(k, []).append(np.asarray(v)[:span])
+            cols = {k: np.concatenate(v) for k, v in out_cols.items()}
+            valid = np.concatenate(out_valid)
+            if len(group) > 1:
+                self.stats.coalesced_requests += len(group)
+            # output rows align 1:1 with the fact spine: slice each request's
+            # span, then compact by its validity slice
+            off = 0
+            for r in group:
+                sl = slice(off, off + r.n_rows)
+                m = valid[sl]
+                r.result = {k: v[sl][m] for k, v in cols.items()}
+                r.done = True
+                off += r.n_rows
+        else:
+            # aggregates fold the spine into one row and UDF boundaries
+            # compact data-dependently: no chunking, whole batch at once
+            assert len(group) == 1
+            req = group[0]
+            table = self._execute_padded(reg, req.columns, req.n_rows)
+            req.result = table.to_numpy(compact=True)
+            req.done = True
+
+    def recompiles(self) -> int:
+        """Total XLA stage compiles across all registered queries."""
+        return sum(r.compiled.traces for r in self.queries.values())

@@ -2,7 +2,10 @@
 from __future__ import annotations
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.rules.propagation import Interval, prune_tree_ensemble
 from repro.distributed.compression import ef_init, ef_int8_compress, ef_int8_decompress
