@@ -1,13 +1,16 @@
-"""Serving-layer benchmark: cold per-call execution vs the warm cached path.
+"""Serving-layer benchmark: cold per-call execution vs the warm cached path,
+driven through the session front door (connect -> sql -> prepare -> serve).
 
 Measures the MLtoSQL-lowered hospital query under three regimes:
 
   percall — compile_plan(cache=False) + execute on every request: the
             pre-serving behavior (re-lower, re-jit, re-trace per call).
-  cached  — execute_plan through the module-level compiled-plan cache
-            (compile once, jit reuses shape-specialized programs).
-  served  — PredictionQueryServer with power-of-two row buckets and
-            micro-batched submits: the steady-state hot path.
+  cached  — PreparedQuery one-shot calls through the module-level
+            compiled-plan cache (compile once, jit reuses shape-specialized
+            programs).
+  served  — PreparedQuery.serve(): power-of-two row buckets and
+            micro-batched submits on the session server — the steady-state
+            hot path.
 
 Reports throughput (rows/s), per-request latency, and XLA recompile counts;
 the served/percall ratio is the headline (target: >= 5x warm speedup).
@@ -20,18 +23,16 @@ import time
 
 import numpy as np
 
-from benchmarks.common import build_query, make_dataset, train_model
-from repro.core.optimizer import OptimizerOptions, RavenOptimizer
+import jax
+
+import repro as raven
+from benchmarks.common import make_dataset, train_model
+from repro.data.datasets import make_hospital
 from repro.relational.engine import (
     PLAN_CACHE_STATS,
     clear_plan_cache,
     compile_plan,
-    execute_plan,
 )
-from repro.data.datasets import make_hospital
-from repro.serve import PredictionQueryServer
-
-import jax
 
 
 def _request_sizes(n_requests: int, seed: int = 0) -> list[int]:
@@ -45,50 +46,52 @@ def run(quick: bool = False):
     sizes = _request_sizes(n_requests)
     train, _ = make_dataset("hospital", 20_000)
     pipe = train_model(train, "gb")
-    query = build_query(train, pipe, agg="*", where="score >= 0.6")
     batches = [make_hospital(n, seed=100 + i).tables["patients"]
                for i, n in enumerate(sizes)]
     total_rows = sum(sizes)
 
-    plan, _ = RavenOptimizer(
-        options=OptimizerOptions(transform="sql")
-    ).optimize(query)
-
-    def tables_for(batch):
-        t = dict(train.tables)
-        t["patients"] = batch
-        return t
+    db = raven.connect(train.tables, stats="auto")
+    db.register_model("m", pipe)
+    sql = (
+        "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+        "WHERE score >= :t"
+    )
+    prep = db.sql(sql).prepare(transform="sql", params={"t": 0.6})
 
     # -- percall: compile + execute from scratch every request ---------------
     clear_plan_cache()
     t0 = time.perf_counter()
     for b in batches:
-        out = compile_plan(plan, cache=False)(
+        db_np = dict(train.tables)
+        db_np["patients"] = b
+        out = compile_plan(prep.plan, cache=False)(
             {t: {c: np.asarray(v) for c, v in cols.items()}
-             for t, cols in tables_for(b).items()}
+             for t, cols in db_np.items()},
+            params=prep.params,
         )
         jax.block_until_ready(out.columns)
     t_percall = time.perf_counter() - t0
     percall_traces = PLAN_CACHE_STATS.traces
 
-    # -- cached: execute_plan through the compiled-plan cache ----------------
+    # -- cached: one-shot PreparedQuery calls through the plan cache ---------
     clear_plan_cache()
-    execute_plan(plan, tables_for(batches[0]))  # warm the compile
+    prep = db.sql(sql).prepare(transform="sql", params={"t": 0.6})
+    prep(batches[0])  # warm the compile
     t0 = time.perf_counter()
     for b in batches:
-        jax.block_until_ready(execute_plan(plan, tables_for(b)).columns)
+        prep(b)
     t_cached = time.perf_counter() - t0
     cached_traces = PLAN_CACHE_STATS.traces
 
-    # -- served: bucketed + micro-batched server -----------------------------
+    # -- served: bucketed + micro-batched session server ---------------------
     clear_plan_cache()
-    srv = PredictionQueryServer(options=OptimizerOptions(transform="sql"))
-    srv.register("hospital", query, train.tables)
-    srv.execute("hospital", batches[0])  # warm one bucket
-    warm_traces = srv.recompiles()
+    prep = db.sql(sql).prepare(transform="sql", params={"t": 0.6}).serve("hot")
+    prep.submit(batches[0])
+    db.flush()  # warm one bucket
+    warm_traces = db.server.recompiles()
     t0 = time.perf_counter()
-    reqs = [srv.submit("hospital", b) for b in batches]
-    srv.flush()
+    reqs = [prep.submit(b) for b in batches]
+    db.flush()
     t_served = time.perf_counter() - t0
     assert all(r.done for r in reqs)
 
@@ -103,7 +106,7 @@ def run(quick: bool = False):
         "served_rows_s": total_rows / t_served,
         "percall_recompiles": percall_traces,
         "cached_recompiles": cached_traces,
-        "served_recompiles_after_warmup": srv.recompiles() - warm_traces,
+        "served_recompiles_after_warmup": db.server.recompiles() - warm_traces,
         "speedup_cached": t_percall / t_cached,
         "speedup_served": t_percall / t_served,
     }
@@ -113,7 +116,7 @@ def run(quick: bool = False):
     print(f"serve_query,cached,{t_cached:.3f},{rows['cached_rows_s']:.0f},"
           f"{cached_traces}")
     print(f"serve_query,served,{t_served:.3f},{rows['served_rows_s']:.0f},"
-          f"{srv.recompiles() - warm_traces} (after warmup)")
+          f"{db.server.recompiles() - warm_traces} (after warmup)")
     print(f"serve_query,speedup,served vs percall = "
           f"{rows['speedup_served']:.1f}x, cached vs percall = "
           f"{rows['speedup_cached']:.1f}x")

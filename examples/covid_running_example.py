@@ -1,23 +1,27 @@
 """The paper's running example (Fig. 2–3), end to end, with every
 optimization stage shown: predicate-based model pruning, model-projection
-pushdown, data-induced per-partition models, and runtime selection.
+pushdown, data-induced per-partition models, and runtime selection — driven
+through the session front door, with EXPLAIN showing the chosen plan.
 
     PYTHONPATH=src python examples/covid_running_example.py
+
+Set RAVEN_EXAMPLE_N to shrink the dataset (used by the examples smoke test).
 """
+import os
 import time
 
 import numpy as np
 
-from repro.core.ir import TableStats
-from repro.core.optimizer import OptimizerOptions, RavenOptimizer
+import repro as raven
+from repro.core.optimizer import OptimizerOptions
 from repro.core.rules.predicate_pruning import apply_predicate_pruning
 from repro.core.rules.projection_pushdown import apply_projection_pushdown
 from repro.data.datasets import make_hospital
 from repro.ml import DecisionTreeClassifier, fit_pipeline
-from repro.relational.engine import execute_plan
-from repro.sql.parser import parse_prediction_query
 
-ds = make_hospital(200_000)
+N = int(os.environ.get("RAVEN_EXAMPLE_N", 200_000))
+
+ds = make_hospital(N)
 joined = ds.joined_columns()
 
 # "find asthma patients likely in the high-risk COVID group"
@@ -25,19 +29,21 @@ pipe = fit_pipeline(
     joined, ds.label, ds.numeric, ds.categorical,
     DecisionTreeClassifier(max_depth=10), categories=ds.categories(),
 )
-sql = """
+
+db = raven.connect(
+    ds.tables, stats="auto", partition_cols={"patients": "rcount"}
+)
+db.register_model("M", pipe)
+query = db.sql("""
     SELECT COUNT(*) FROM PREDICT(model = 'M', data = patients) AS p
     WHERE asthma = 1 AND score >= 0.5
-"""
-stats = {"patients": TableStats.of(ds.tables["patients"],
-                                   partition_col="rcount")}
-query = parse_prediction_query(sql, {"M": pipe}, ds.tables, stats=stats)
+""")
 
 print("== unified IR built ==")
 print(f"  pipeline: {pipe.n_ops()} ops / {len(pipe.inputs)} inputs / "
       f"{pipe.model_nodes()[0].attrs['ensemble'].n_nodes} tree nodes")
 
-q1 = query.copy()
+q1 = query.ir.copy()
 apply_predicate_pruning(q1)
 p1 = q1.predict_nodes()[0].pipeline
 print("== after predicate-based model pruning (asthma=1 -> constant; tree "
@@ -55,30 +61,23 @@ print("== after model-projection pushdown ==")
 print(f"  model inputs -> {len(p2.inputs)}; scan reads "
       f"{len(scan.columns)}/{len(ds.tables['patients'])} columns")
 
-print("== execution: no-opt vs Raven (all rules + MLtoSQL) ==")
-for label, opts in [
-    ("no-opt        ", OptimizerOptions(predicate_pruning=False,
-                                        projection_pushdown=False,
-                                        data_induced=False,
-                                        transform="none")),
-    ("raven (none)  ", OptimizerOptions(transform="none")),
-    ("raven (sql)   ", OptimizerOptions(transform="sql")),
-    ("raven (dnn)   ", OptimizerOptions(transform="dnn")),
+print("== EXPLAIN (all rules + MLtoSQL) ==")
+print(query.prepare(transform="sql").explain())
+
+print("== execution: no-opt vs Raven (all rules + each runtime) ==")
+for label, kwargs in [
+    ("no-opt        ", dict(options=OptimizerOptions(
+        predicate_pruning=False, projection_pushdown=False,
+        data_induced=False, transform="none"))),
+    ("raven (none)  ", dict(transform="none")),
+    ("raven (sql)   ", dict(transform="sql")),
+    ("raven (dnn)   ", dict(transform="dnn")),
 ]:
-    plan, report = RavenOptimizer(options=opts).optimize(query)
-    import jax
-    import jax.numpy as jnp
-
-    from repro.relational.engine import compile_plan
-
-    runner = compile_plan(plan)
-    db = {t: {c: jnp.asarray(v) for c, v in cols.items()}
-          for t, cols in ds.tables.items()}
-    runner(db)  # warm
+    prep = query.prepare(**kwargs)
+    prep()  # warm
     t0 = time.perf_counter()
-    out = runner(db)
-    jax.block_until_ready(out.columns)
+    out = prep()
     dt = time.perf_counter() - t0
-    n = float(np.asarray(out.columns["count_rows"])[0])
-    notes = f"  [{report.notes[0]}]" if report.notes else ""
+    n = float(np.asarray(out["count_rows"])[0])
+    notes = f"  [{prep.report.notes[0]}]" if prep.report.notes else ""
     print(f"  {label} count={n:8.0f}  {dt*1e3:8.1f} ms{notes}")

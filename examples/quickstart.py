@@ -1,45 +1,63 @@
-"""Quickstart: train a pipeline, write a PREDICT query, let Raven optimize it.
+"""Quickstart: connect, register a model, write a PREDICT query, prepare it,
+read the EXPLAIN, execute, and re-bind the threshold — all through the
+session front door.
 
     PYTHONPATH=src python examples/quickstart.py
-"""
-import numpy as np
 
-from repro.core.optimizer import OptimizerOptions, RavenOptimizer
-from repro.core.ir import TableStats
+Set RAVEN_EXAMPLE_N to shrink the dataset (used by the examples smoke test).
+"""
+import os
+
+import repro as raven
+from repro.core.optimizer import OptimizerOptions
 from repro.data.datasets import make_hospital
 from repro.ml import GradientBoostingClassifier, fit_pipeline
-from repro.relational.engine import execute_plan
-from repro.sql.parser import parse_prediction_query
+
+N = int(os.environ.get("RAVEN_EXAMPLE_N", 50_000))
 
 # 1. data + trained pipeline (scaler + one-hot + gradient boosting)
-ds = make_hospital(50_000)
-joined = ds.joined_columns()
+ds = make_hospital(N)
 pipe = fit_pipeline(
-    joined, ds.label, ds.numeric, ds.categorical,
+    ds.joined_columns(), ds.label, ds.numeric, ds.categorical,
     GradientBoostingClassifier(n_estimators=20, max_depth=3),
     categories=ds.categories(),
 )
 print(f"trained pipeline: {pipe.n_ops()} ops, {len(pipe.inputs)} inputs")
 
-# 2. a prediction query (SQL Server PREDICT-TVF syntax, paper §6)
-sql = """
+# 2. one front door: session owns tables, stats, models
+db = raven.connect(ds.tables, stats="auto")
+db.register_model("covid_risk", pipe)
+
+# 3. a prediction query (SQL Server PREDICT-TVF syntax, paper §6) with a
+#    named :threshold parameter
+query = db.sql("""
     SELECT COUNT(*), AVG(score)
     FROM PREDICT(model = 'covid_risk', data = patients) AS p
-    WHERE asthma = 1 AND score >= 0.5
-"""
-query = parse_prediction_query(
-    sql, {"covid_risk": pipe}, ds.tables,
-    stats={"patients": TableStats.of(ds.tables["patients"])},
-)
+    WHERE asthma = 1 AND score >= :threshold
+""")
 
-# 3. optimize + execute: unoptimized vs Raven
-for label, opts in [
-    ("no-opt", OptimizerOptions(predicate_pruning=False,
-                                projection_pushdown=False,
-                                data_induced=False, transform="none")),
-    ("raven ", OptimizerOptions()),  # logical rules + default physical pick
-]:
-    plan, report = RavenOptimizer(options=opts).optimize(query)
-    out = execute_plan(plan, ds.tables)
-    cols = {k: float(np.asarray(v)[0]) for k, v in out.columns.items()}
-    print(f"{label}: {cols}  notes={report.notes}")
+# ... the fluent builder produces the identical IR (same fingerprint):
+built = (
+    db.table("patients").predict("covid_risk")
+    .where("asthma = 1").where("score >= :threshold")
+    .select("COUNT(*)", "AVG(score)")
+)
+assert built.fingerprint() == query.fingerprint()
+
+# 4. prepare: optimizer runs once; EXPLAIN shows the logical -> physical story
+prep = query.prepare(params={"threshold": 0.5})
+print(prep.explain())
+
+# 5. execute: unoptimized baseline vs Raven
+noopt = query.prepare(
+    params={"threshold": 0.5},
+    options=OptimizerOptions(predicate_pruning=False,
+                             projection_pushdown=False,
+                             data_induced=False, transform="none"),
+)
+print(f"no-opt: { {k: float(v[0]) for k, v in noopt().items()} }")
+print(f"raven : { {k: float(v[0]) for k, v in prep().items()} }")
+
+# 6. re-bind the threshold: same plan, same compiled program, new answer
+prep.bind(threshold=0.8)
+print(f"raven (threshold=0.8): { {k: float(v[0]) for k, v in prep().items()} }")

@@ -1,65 +1,74 @@
-"""Prediction-query serving driver: register a query once, serve it hot.
+"""Prediction-query serving through the session front door: prepare once,
+serve hot.
 
-A hospital risk query is optimized with MLtoSQL (model compiled into the
-relational program), registered with the PredictionQueryServer, and then
+A hospital risk query is prepared with MLtoSQL (model compiled into the
+relational program), served via the session-owned PredictionQueryServer, and
 driven with a stream of mixed-size request batches. Power-of-two row buckets
 + validity-mask padding mean the whole stream runs on a handful of compiled
-XLA programs; micro-batched submits coalesce into shared executions.
+XLA programs; micro-batched submits coalesce into shared executions; the
+:threshold parameter re-binds mid-stream without a single recompile.
 
     PYTHONPATH=src python examples/serve_query.py
+
+Set RAVEN_EXAMPLE_N to shrink the workload (used by the examples smoke test).
 """
+import os
 import time
 
 import numpy as np
 
-from repro.core.ir import TableStats
-from repro.core.optimizer import OptimizerOptions
+import repro as raven
 from repro.data.datasets import make_hospital
 from repro.ml import GradientBoostingClassifier
 from repro.ml.pipeline import fit_pipeline
-from repro.serve import PredictionQueryServer
-from repro.sql.parser import parse_prediction_query
+
+N = int(os.environ.get("RAVEN_EXAMPLE_N", 8192))
 
 print("training a GBDT on the hospital dataset...")
-ds = make_hospital(8192, seed=1)
+ds = make_hospital(N, seed=1)
 pipe = fit_pipeline(
     ds.joined_columns(), ds.label, ds.numeric, ds.categorical,
     GradientBoostingClassifier(n_estimators=10, max_depth=3),
     categories=ds.categories(),
 )
 
-sql = (
-    "SELECT * FROM PREDICT(model='m', data=patients) AS p "
-    "WHERE score >= 0.6"
-)
-query = parse_prediction_query(
-    sql, {"m": pipe}, ds.tables,
-    stats={"patients": TableStats.of(ds.tables["patients"])},
-)
+db = raven.connect(ds.tables, stats="auto")
+db.register_model("m", pipe)
 
-srv = PredictionQueryServer(options=OptimizerOptions(transform="sql"))
-reg = srv.register("risk", query, ds.tables)
-print(f"registered 'risk': pure={reg.compiled.is_pure} "
-      f"(one fused XLA program), notes={reg.report.notes}")
+prep = db.sql(
+    "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+    "WHERE score >= :t"
+).prepare(transform="sql", params={"t": 0.6}).serve(name="risk")
+print(f"served 'risk': pure={prep.compiled.is_pure} "
+      f"(one fused XLA program), notes={prep.report.notes}")
 
 rng = np.random.default_rng(0)
-sizes = [int(n) for n in rng.integers(100, 3000, size=20)]
+sizes = [int(n) for n in rng.integers(max(2, N // 80), max(4, N // 3), size=20)]
 batches = [make_hospital(n, seed=50 + i).tables["patients"]
            for i, n in enumerate(sizes)]
 
 print("warmup (compiles the first shape bucket)...")
-srv.execute("risk", batches[0])
-warm = srv.recompiles()
+prep.submit(batches[0])
+db.flush()
+warm = db.server.recompiles()
 
 print(f"serving {len(batches)} mixed-size batches ({sum(sizes)} rows)...")
 t0 = time.perf_counter()
-reqs = [srv.submit("risk", b) for b in batches]
-srv.flush()
+reqs = [prep.submit(b) for b in batches]
+db.flush()
 dt = time.perf_counter() - t0
 
 flagged = sum(len(r.result["score"]) for r in reqs)
 print(f"served {len(reqs)} requests / {sum(sizes)} rows in {dt*1e3:.1f} ms "
       f"({sum(sizes)/dt:.0f} rows/s); {flagged} rows passed score >= 0.6")
-print(f"XLA recompiles after warmup: {srv.recompiles() - warm}")
-print(f"server stats: {srv.stats.snapshot()}")
+print(f"XLA recompiles after warmup: {db.server.recompiles() - warm}")
+
+print("re-binding :t = 0.9 (no re-optimize, no recompile)...")
+before = db.server.recompiles()
+prep.bind(t=0.9)
+req = prep.submit(batches[0])
+db.flush()
+print(f"rows passing at 0.9: {len(req.result['score'])}; "
+      f"new recompiles: {db.server.recompiles() - before}")
+print(f"server stats: {db.server.stats.snapshot()}")
 assert all(r.done for r in reqs)

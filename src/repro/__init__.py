@@ -1,0 +1,51 @@
+"""Raven-style end-to-end optimization of ML prediction queries.
+
+The front door (conventionally imported as ``raven``)::
+
+    import repro as raven
+
+    db = raven.connect(tables, stats="auto")
+    db.register_model("risk", pipe)
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='risk', data=patients) WHERE score >= :t"
+    ).prepare(transform="sql", params={"t": 0.6})
+    print(prep.explain())
+    out = prep(batch)            # one-shot
+    prep.serve()                 # bucketed, cached serving
+    req = prep.submit(batch)
+    db.flush()
+
+Lower layers (``repro.core``, ``repro.sql``, ``repro.relational``,
+``repro.serve``) remain importable directly for rule-level work.
+"""
+from repro.errors import (
+    RavenError,
+    SQLSyntaxError,
+    UnboundParameterError,
+    UnknownColumnError,
+    UnknownModelError,
+    UnknownParameterError,
+    UnknownTableError,
+)
+from repro.session import (
+    PreparedQuery,
+    Query,
+    QueryBuilder,
+    Session,
+    connect,
+)
+
+__all__ = [
+    "connect",
+    "Session",
+    "Query",
+    "QueryBuilder",
+    "PreparedQuery",
+    "RavenError",
+    "SQLSyntaxError",
+    "UnknownModelError",
+    "UnknownTableError",
+    "UnknownColumnError",
+    "UnboundParameterError",
+    "UnknownParameterError",
+]

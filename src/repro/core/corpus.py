@@ -94,11 +94,16 @@ def _train_one(spec: dict, rng, n_rows: int = 1024) -> TrainedPipeline:
 
 
 def _measure(pipe: TrainedPipeline, n_rows: int, rng, repeats: int = 2) -> np.ndarray:
-    """Wall-time per transform on a measurement batch (median of repeats)."""
+    """Wall-time per transform on a measurement batch (median of repeats).
+
+    The sql/dnn variants run through the engine's fingerprint-keyed
+    compiled-plan cache (the same path serving uses), so re-measuring a
+    pipeline reuses the compiled stages — zero re-traces on repeat.
+    """
     import jax
 
     from repro.core.rules.ml_to_sql import MLtoSQLUnsupported, compile_pipeline_to_sql
-    from repro.relational.expr import eval_expr
+    from repro.relational.engine import Project, Scan, TensorOp, compile_plan
     from repro.tensor.compile import compile_pipeline_tensor
 
     batch = {}
@@ -118,34 +123,35 @@ def _measure(pipe: TrainedPipeline, n_rows: int, rng, repeats: int = 2) -> np.nd
         ts.append(time.perf_counter() - t0)
     times[0] = float(np.median(ts[1:]))
 
-    # sql: compiled expressions under jit (fused engine path)
-    try:
-        comp = compile_pipeline_to_sql(pipe)
-        env = {k: np.asarray(v, np.float32) for k, v in batch.items()}
-        fn = jax.jit(
-            lambda e, _exprs=comp.exprs: {
-                o: eval_expr(x, e) for o, x in _exprs.items()
-            }
-        )
+    scan = Scan("batch", list(pipe.input_names()))
+    db = {
+        "batch": {
+            k: jax.numpy.asarray(np.asarray(v, np.float32))
+            for k, v in batch.items()
+        }
+    }
+
+    def timed(plan) -> float:
+        compiled = compile_plan(plan)  # cache hit on re-measure: no re-trace
         ts = []
         for _ in range(repeats + 1):
             t0 = time.perf_counter()
-            jax.block_until_ready(fn(env))
+            jax.block_until_ready(compiled(db).columns)
             ts.append(time.perf_counter() - t0)
-        times[1] = float(np.median(ts[1:]))
+        return float(np.median(ts[1:]))
+
+    # sql: compiled expressions fused into the engine (one XLA program)
+    try:
+        comp = compile_pipeline_to_sql(pipe)
+        times[1] = timed(Project(scan, [], dict(comp.exprs)))
     except MLtoSQLUnsupported:
         pass
 
-    # dnn: tensor program under jit
+    # dnn: tensor program fused into the engine
     comp = compile_pipeline_tensor(pipe)
-    env = {k: np.asarray(v, np.float32) for k, v in batch.items()}
-    fn = jax.jit(comp.fn)
-    ts = []
-    for _ in range(repeats + 1):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(env))
-        ts.append(time.perf_counter() - t0)
-    times[2] = float(np.median(ts[1:]))
+    times[2] = timed(
+        Project(TensorOp(scan, comp.fn, list(pipe.outputs)), list(pipe.outputs))
+    )
     return times
 
 

@@ -82,6 +82,13 @@ def _feed(h, obj: Any, pins: list) -> None:
     elif hasattr(obj, "__array__"):  # jax arrays and friends
         _feed(h, np.asarray(obj), pins)
     else:
+        # opaque objects carrying a canonical content token (e.g. MLtoDNN
+        # TensorOp closures stamped by the tensor compiler) hash by that
+        # token: content-stable across processes, nothing to pin
+        token = getattr(obj, "__fingerprint_token__", None)
+        if isinstance(token, str):
+            h.update(b"K" + token.encode() + b"\x00")
+            return
         # opaque (callables, foreign objects): identity hash — see module doc
         h.update(b"O" + str(id(obj)).encode())
         pins.append(obj)
@@ -89,7 +96,7 @@ def _feed(h, obj: Any, pins: list) -> None:
 
 def _expr_digest(expr, pins: list) -> str:
     """Bottom-up digest of an Expr DAG (explicit stack, memoized by id)."""
-    from repro.relational.expr import Bin, Case, Col, Const, Un
+    from repro.relational.expr import Bin, Case, Col, Const, Param, Un
 
     memo: dict[int, str] = {}
     stack: list[tuple[Any, bool]] = [(expr, False)]
@@ -100,6 +107,10 @@ def _expr_digest(expr, pins: list) -> str:
             continue
         if isinstance(node, Col):
             memo[nid] = hashlib.sha256(b"Col" + node.name.encode()).hexdigest()
+        elif isinstance(node, Param):
+            # by *name* only: binding a different value must not change the
+            # plan fingerprint (prepared queries re-bind without re-compiling)
+            memo[nid] = hashlib.sha256(b"Param" + node.name.encode()).hexdigest()
         elif isinstance(node, Const):
             hh = hashlib.sha256(b"Const")
             _feed(hh, node.value, pins)

@@ -165,6 +165,63 @@ def plan_fingerprint(p: LogicalPlan, pins: Optional[list] = None) -> str:
     return fingerprint(p, pins=pins)
 
 
+def plan_params(p: LogicalPlan) -> set[str]:
+    """Names of every ``:param`` placeholder the logical plan references."""
+    from repro.relational.expr import params_of
+
+    names: set[str] = set()
+    for node in walk(p):
+        if isinstance(node, LFilter):
+            names |= params_of(node.expr)
+        elif isinstance(node, LProject):
+            for e in node.exprs.values():
+                names |= params_of(e)
+    return names
+
+
+def format_logical_plan(p: LogicalPlan, indent: int = 0) -> str:
+    """Indented one-node-per-line rendering of a logical plan (EXPLAIN)."""
+    from repro.relational.expr import format_expr
+
+    pad = "  " * indent
+    if isinstance(p, LScan):
+        cols = ", ".join(p.columns)
+        line = f"{pad}Scan[{p.table}] cols=({cols})"
+        return line
+    if isinstance(p, LJoin):
+        line = (
+            f"{pad}Join[{p.dim_table}] on {p.fact_key}={p.dim_key} "
+            f"bring=({', '.join(p.dim_columns)})"
+        )
+        return line + "\n" + format_logical_plan(p.child, indent + 1)
+    if isinstance(p, LFilter):
+        line = f"{pad}Filter[{format_expr(p.expr)}]"
+        return line + "\n" + format_logical_plan(p.child, indent + 1)
+    if isinstance(p, LProject):
+        exprs = ", ".join(f"{k}={format_expr(e)}" for k, e in p.exprs.items())
+        line = f"{pad}Project[keep=({', '.join(p.keep or [])}) {exprs}]"
+        return line + "\n" + format_logical_plan(p.child, indent + 1)
+    if isinstance(p, LPredict):
+        part = (
+            f", partitioned over {p.partition_col} "
+            f"({len(p.partitioned)} models)"
+            if p.partitioned
+            else ""
+        )
+        line = (
+            f"{pad}Predict[{p.pipeline.n_ops()} ops, "
+            f"{len(p.pipeline.inputs)} inputs -> "
+            f"({', '.join(p.output_names)}); "
+            f"runtime={p.transform or 'unassigned'}{part}]"
+        )
+        return line + "\n" + format_logical_plan(p.child, indent + 1)
+    if isinstance(p, LAggregate):
+        aggs = ", ".join(f"{n}={op}({c})" for n, op, c in p.aggs)
+        line = f"{pad}Aggregate[{aggs}]"
+        return line + "\n" + format_logical_plan(p.child, indent + 1)
+    raise TypeError(type(p))
+
+
 @dataclass
 class PredictionQuery:
     """The unified IR instance for one prediction query."""
@@ -174,6 +231,10 @@ class PredictionQuery:
 
     def predict_nodes(self) -> list[LPredict]:
         return [n for n in walk(self.plan) if isinstance(n, LPredict)]
+
+    def params(self) -> set[str]:
+        """Names of the query's ``:param`` placeholders."""
+        return plan_params(self.plan)
 
     def fingerprint(self) -> str:
         """Hash of (plan, stats): the optimizer's output is a pure function

@@ -48,7 +48,18 @@ from repro.relational.engine import (
     Scan,
     TensorOp,
 )
-from repro.relational.expr import Bin, Case, Col, Const, Expr, Un, columns_of
+from repro.core.fingerprint import fingerprint
+from repro.relational.expr import (
+    Bin,
+    Case,
+    Col,
+    Const,
+    Expr,
+    Param,
+    Un,
+    columns_of,
+    format_expr,
+)
 
 
 @dataclass
@@ -172,6 +183,14 @@ class RavenOptimizer:
                             for o, n in zip(_o, _n)
                         }
 
+                    # canonical content token: the closure's behaviour is a
+                    # pure function of (pipeline, outputs, strategy), so two
+                    # MLtoDNN lowerings of the same pipeline — even in
+                    # different processes — fingerprint identically
+                    fn.__fingerprint_token__ = fingerprint(
+                        "mltodnn", p.pipeline, outs, names,
+                        opt.tensor_strategy, opt.use_pallas,
+                    )
                     return TensorOp(child, fn, names)
                 except MLtoDNNUnsupported as e:
                     report.notes.append(f"MLtoDNN fallback: {e}")
@@ -258,7 +277,7 @@ def _is_threshold_filter(e: Expr, score_col: str) -> bool:
         and e.op in ("ge", "gt", "le", "lt")
         and isinstance(e.a, Col)
         and e.a.name == score_col
-        and isinstance(e.b, Const)
+        and isinstance(e.b, (Const, Param))
     ):
         return True
     return score_col not in columns_of(e)
@@ -285,6 +304,46 @@ def _score_visible(plan: LogicalPlan, score_col: str) -> bool:
     return False
 
 
+def format_physical_plan(p: PhysicalPlan, indent: int = 0) -> str:
+    """Indented rendering of a lowered physical plan (EXPLAIN output).
+
+    Scans show the columns that survived projection pushdown; Projects show
+    compiled model expressions (summarized when large); Filters show rewritten
+    thresholds (logit-space constants / ``logit(:param)`` wrappers).
+    """
+    from repro.relational.engine import plan_children
+
+    pad = "  " * indent
+    if isinstance(p, Scan):
+        line = f"{pad}Scan[{p.table}] cols=({', '.join(p.columns)})"
+    elif isinstance(p, Join):
+        line = (
+            f"{pad}Join[{p.dim_table}] on {p.fact_key}={p.dim_key} "
+            f"bring=({', '.join(p.dim_columns)})"
+        )
+    elif isinstance(p, Filter):
+        line = f"{pad}Filter[{format_expr(p.expr)}]"
+    elif isinstance(p, Project):
+        exprs = ", ".join(f"{k}={format_expr(e)}" for k, e in p.exprs.items())
+        keep = "*" if p.keep is None else f"({', '.join(p.keep)})"
+        line = f"{pad}Project[keep={keep}{'; ' + exprs if exprs else ''}]"
+    elif isinstance(p, MLUdf):
+        line = (
+            f"{pad}MLUdf[{p.pipeline.n_ops()}-op pipeline -> "
+            f"({', '.join(p.output_names)}); host boundary, "
+            f"batch={p.batch_size}]"
+        )
+    elif isinstance(p, TensorOp):
+        line = f"{pad}TensorOp[fused tensor program -> ({', '.join(p.output_names)})]"
+    elif isinstance(p, Aggregate):
+        aggs = ", ".join(f"{n}={op}({c})" for n, op, c in p.aggs)
+        line = f"{pad}Aggregate[{aggs}]"
+    else:
+        raise TypeError(type(p))
+    kids = plan_children(p)
+    return "\n".join([line] + [format_physical_plan(c, indent + 1) for c in kids])
+
+
 def rewrite_score_filters(
     plan: LogicalPlan, score_col: str, to_space: str
 ) -> None:
@@ -305,10 +364,14 @@ def _rewrite_expr(e: Expr, score_col: str) -> Expr:
         and e.op in ("ge", "gt", "le", "lt")
         and isinstance(e.a, Col)
         and e.a.name == score_col
-        and isinstance(e.b, Const)
     ):
-        p = min(max(float(e.b.value), 1e-9), 1 - 1e-9)
-        return Bin(e.op, e.a, Const(float(math.log(p / (1 - p)))))
+        if isinstance(e.b, Const):
+            p = min(max(float(e.b.value), 1e-9), 1 - 1e-9)
+            return Bin(e.op, e.a, Const(float(math.log(p / (1 - p)))))
+        if isinstance(e.b, Param):
+            # bound value arrives at run time: defer the prob->logit map
+            # into the compiled program (same clipping as the static path)
+            return Bin(e.op, e.a, Un("logit", e.b))
     if isinstance(e, Bin) and e.op in ("and", "or"):
         return Bin(e.op, _rewrite_expr(e.a, score_col), _rewrite_expr(e.b, score_col))
     return e

@@ -57,10 +57,19 @@ def extract_constraints(expr: Expr) -> Optional[dict[str, Interval]]:
     def visit(e: Expr) -> bool:
         if isinstance(e, Bin) and e.op == "and":
             return visit(e.a) and visit(e.b)
+        if isinstance(e, Bin) and e.op == "ne":
+            # an inequation carries no interval information, but it must not
+            # reject the whole conjunction (sound: pruning with a superset
+            # of the satisfying rows)
+            return True
         if isinstance(e, Bin) and e.op in ("le", "lt", "ge", "gt", "eq"):
+            from repro.relational.expr import Param
+
             a, b, op = e.a, e.b, e.op
             if isinstance(a, Const) and isinstance(b, Col):
                 a, b, op = b, a, _FLIP[op]
+            if isinstance(a, Col) and isinstance(b, Param):
+                return True  # value unknown until bind time: no interval info
             if not (isinstance(a, Col) and isinstance(b, Const)):
                 return False
             v = float(b.value)

@@ -1,0 +1,63 @@
+"""Typed, message-bearing errors for the prediction-query front door.
+
+The SQL frontend and session API raise these instead of leaking raw
+``KeyError``/``IndexError`` from internal dict lookups, so callers can catch
+one family (``RavenError``) or a specific failure mode.
+
+``SQLSyntaxError`` also subclasses :class:`SyntaxError` for backward
+compatibility with callers that caught the parser's original exception type.
+"""
+from __future__ import annotations
+
+
+class RavenError(Exception):
+    """Base class for all prediction-query API errors."""
+
+
+class SQLSyntaxError(RavenError, SyntaxError):
+    """Malformed query text (including a malformed PREDICT clause)."""
+
+
+class UnknownModelError(RavenError):
+    """PREDICT references a model name absent from the registry."""
+
+
+class UnknownTableError(RavenError):
+    """Query references a table absent from the database."""
+
+
+class UnknownColumnError(RavenError):
+    """Predicate or join key references a column no table provides."""
+
+
+class UnboundParameterError(RavenError):
+    """A ``:param`` placeholder was left unbound at prepare/execute time."""
+
+
+class UnknownParameterError(RavenError):
+    """``bind``/``rebind`` named a parameter the query does not declare."""
+
+
+def check_params(
+    declared, bound, *, require_all: bool = True, context: str = "query"
+) -> None:
+    """Validate a parameter binding against a query's declared ``:params``.
+
+    ``require_all=True`` (prepare/register) demands every declared parameter
+    is bound; ``require_all=False`` (bind/rebind) allows partial re-binds.
+    Unknown names are always rejected.
+    """
+    declared, bound = set(declared), set(bound)
+    if require_all:
+        missing = declared - bound
+        if missing:
+            raise UnboundParameterError(
+                f"{context} has unbound parameters {sorted(missing)} — "
+                f"bind them via params={{...}}"
+            )
+    unknown = bound - declared
+    if unknown:
+        raise UnknownParameterError(
+            f"{context} declares no parameters {sorted(unknown)}; "
+            f"its parameters are {sorted(declared) or '(none)'}"
+        )

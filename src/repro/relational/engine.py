@@ -103,6 +103,10 @@ State = tuple[dict[str, jnp.ndarray], jnp.ndarray]  # (columns, valid)
 # env key carrying the initial fact-spine validity mask (padded serving)
 ROW_VALID_KEY = "__row_valid__"
 
+# env key carrying bound :param values (0-d arrays). Params enter the jitted
+# stages as runtime inputs, so re-binding a value reuses the traced program.
+PARAMS_KEY = "__params__"
+
 
 def _pure_step(plan: PhysicalPlan, inner: Callable[[dict], State]) -> Callable[[dict], State]:
     """Compose one pure operator on top of ``inner`` (env -> state)."""
@@ -138,7 +142,7 @@ def _pure_step(plan: PhysicalPlan, inner: Callable[[dict], State]) -> Callable[[
     if isinstance(plan, Filter):
         def fn(env, _plan=plan):
             cols, valid = inner(env)
-            keep = eval_expr(_plan.expr, cols)
+            keep = eval_expr(_plan.expr, cols, env.get(PARAMS_KEY))
             return cols, valid & keep.astype(bool)
         return fn
 
@@ -148,7 +152,7 @@ def _pure_step(plan: PhysicalPlan, inner: Callable[[dict], State]) -> Callable[[
             keep = _plan.keep if _plan.keep is not None else list(cols)
             out = {c: cols[c] for c in keep}
             for name, e in _plan.exprs.items():
-                out[name] = eval_expr(e, cols)
+                out[name] = eval_expr(e, cols, env.get(PARAMS_KEY))
             return out, valid
         return fn
 
@@ -303,10 +307,17 @@ class CompiledPlan:
         self,
         database: dict[str, dict[str, jnp.ndarray]],
         row_valid: Optional[jnp.ndarray] = None,
+        params: Optional[dict[str, Any]] = None,
     ) -> Table:
         env: dict[str, Any] = dict(database)
         if row_valid is not None:
             env[ROW_VALID_KEY] = jnp.asarray(row_valid, dtype=bool)
+        if params:
+            # float32 0-d arrays: a fresh bound value is a same-shape input
+            # to the jitted stages, so re-binding never re-traces
+            env[PARAMS_KEY] = {
+                k: jnp.asarray(v, dtype=jnp.float32) for k, v in params.items()
+            }
         state: Optional[State] = None
         for st in self.stages:
             if isinstance(st, _PureStage):
@@ -381,12 +392,27 @@ def execute_plan(
     plan: PhysicalPlan,
     database: dict[str, dict[str, np.ndarray]],
     row_valid: Optional[np.ndarray] = None,
+    params: Optional[dict[str, Any]] = None,
 ) -> Table:
     db = {
         t: {c: jnp.asarray(v) for c, v in cols.items()}
         for t, cols in database.items()
     }
-    return compile_plan(plan)(db, row_valid=row_valid)
+    return compile_plan(plan)(db, row_valid=row_valid, params=params)
+
+
+def plan_params(plan: PhysicalPlan) -> set[str]:
+    """Names of every :class:`~repro.relational.expr.Param` the plan reads."""
+    from repro.relational.expr import params_of
+
+    names: set[str] = set()
+    for p in walk_plan(plan):
+        if isinstance(p, Filter):
+            names |= params_of(p.expr)
+        elif isinstance(p, Project):
+            for e in p.exprs.values():
+                names |= params_of(e)
+    return names
 
 
 # ---------------------------------------------------------------------------

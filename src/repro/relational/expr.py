@@ -47,6 +47,18 @@ class Const(Expr):
 
 
 @dataclass(frozen=True)
+class Param(Expr):
+    """Named query parameter (a ``:name`` placeholder).
+
+    Hashes by *name*, not value: the bound value rides into the compiled
+    program through the execution environment (a 0-d array), so re-binding a
+    parameter changes neither the plan fingerprint nor the traced XLA program.
+    """
+
+    name: str
+
+
+@dataclass(frozen=True)
 class Bin(Expr):
     op: str  # add sub mul div le lt ge gt eq ne and or min max
     a: Expr
@@ -77,6 +89,11 @@ _UN = {
     "log": jnp.log,
     "sqrt": jnp.sqrt,
     "sigmoid": lambda x: 1.0 / (1.0 + jnp.exp(-x)),
+    # inverse sigmoid, clipped like the optimizer's static threshold rewrite
+    # so prob-space parameters survive the logit-space filter rewrite
+    "logit": lambda x: (lambda p: jnp.log(p / (1.0 - p)))(
+        jnp.clip(x, 1e-9, 1.0 - 1e-9)
+    ),
 }
 
 _BIN = {
@@ -97,7 +114,11 @@ _BIN = {
 }
 
 
-def eval_expr(expr: Expr, env: dict[str, jnp.ndarray]) -> jnp.ndarray:
+def eval_expr(
+    expr: Expr,
+    env: dict[str, jnp.ndarray],
+    params: dict[str, jnp.ndarray] | None = None,
+) -> jnp.ndarray:
     """Iterative post-order evaluation (no recursion limit)."""
     out: dict[int, jnp.ndarray] = {}
     stack: list[tuple[Expr, bool]] = [(expr, False)]
@@ -108,6 +129,15 @@ def eval_expr(expr: Expr, env: dict[str, jnp.ndarray]) -> jnp.ndarray:
             continue
         if isinstance(node, Col):
             out[nid] = env[node.name]
+        elif isinstance(node, Param):
+            if params is None or node.name not in params:
+                from repro.errors import UnboundParameterError
+
+                raise UnboundParameterError(
+                    f"parameter :{node.name} is unbound — pass it via "
+                    f"params={{'{node.name}': value}}"
+                )
+            out[nid] = jnp.asarray(params[node.name])
         elif isinstance(node, Const):
             out[nid] = jnp.asarray(node.value)
         elif visited:
@@ -171,3 +201,70 @@ def columns_of(expr: Expr) -> set[str]:
         elif isinstance(node, Case):
             stack.extend([node.cond, node.then, node.orelse])
     return cols
+
+
+def params_of(expr: Expr) -> set[str]:
+    """Names of all :class:`Param` placeholders reachable from ``expr``."""
+    names: set[str] = set()
+    seen: set[int] = set()
+    stack = [expr]
+    while stack:
+        node = stack.pop()
+        if id(node) in seen:
+            continue
+        seen.add(id(node))
+        if isinstance(node, Param):
+            names.add(node.name)
+        elif isinstance(node, Bin):
+            stack.extend([node.a, node.b])
+        elif isinstance(node, Un):
+            stack.append(node.a)
+        elif isinstance(node, Case):
+            stack.extend([node.cond, node.then, node.orelse])
+    return names
+
+
+_OP_SYMBOL = {
+    "add": "+", "sub": "-", "mul": "*", "div": "/",
+    "le": "<=", "lt": "<", "ge": ">=", "gt": ">",
+    "eq": "=", "ne": "<>", "and": "AND", "or": "OR",
+    "min": "MIN", "max": "MAX",
+}
+
+
+def format_expr(expr: Expr, max_nodes: int = 24) -> str:
+    """Compact SQL-ish rendering for EXPLAIN output.
+
+    MLtoSQL emits expressions with tens of thousands of nodes; those are
+    summarized as ``<N-node expr over (cols)>`` instead of being printed
+    (also keeps the recursive pretty-printer off the deep trees).
+    """
+    n = expr_size(expr)
+    if n > max_nodes:
+        cols = sorted(columns_of(expr))
+        more = "" if len(cols) <= 6 else ", …"
+        return f"<{n}-node expr over ({', '.join(cols[:6])}{more})>"
+
+    def fmt(e: Expr) -> str:
+        if isinstance(e, Col):
+            return e.name
+        if isinstance(e, Param):
+            return f":{e.name}"
+        if isinstance(e, Const):
+            v = e.value
+            return f"{v:g}" if isinstance(v, float) else repr(v)
+        if isinstance(e, Bin):
+            sym = _OP_SYMBOL.get(e.op, e.op)
+            if sym in ("MIN", "MAX"):
+                return f"{sym}({fmt(e.a)}, {fmt(e.b)})"
+            return f"({fmt(e.a)} {sym} {fmt(e.b)})"
+        if isinstance(e, Un):
+            return f"{e.op}({fmt(e.a)})"
+        if isinstance(e, Case):
+            return (
+                f"CASE WHEN {fmt(e.cond)} THEN {fmt(e.then)} "
+                f"ELSE {fmt(e.orelse)} END"
+            )
+        raise TypeError(type(e))
+
+    return fmt(expr)

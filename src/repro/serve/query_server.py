@@ -32,12 +32,14 @@ import numpy as np
 from repro.core.fingerprint import fingerprint
 from repro.core.ir import PredictionQuery
 from repro.core.optimizer import OptimizationReport, OptimizerOptions, RavenOptimizer
+from repro.errors import check_params
 from repro.relational.engine import (
     Aggregate,
     CompiledPlan,
     PhysicalPlan,
     Scan,
     compile_plan,
+    plan_params,
     walk_plan,
 )
 from repro.relational.table import Table
@@ -92,6 +94,8 @@ class RegisteredQuery:
     scan_columns: list[str]
     fact_dtypes: dict[str, np.dtype]
     has_aggregate: bool
+    param_names: frozenset[str] = frozenset()
+    params: dict[str, Any] = field(default_factory=dict)
 
     @property
     def recompiles(self) -> int:
@@ -127,25 +131,47 @@ class PredictionQueryServer:
         query: PredictionQuery,
         database: dict[str, dict[str, np.ndarray]],
         fact_table: Optional[str] = None,
+        *,
+        optimized: Optional[tuple[PhysicalPlan, OptimizationReport]] = None,
+        params: Optional[dict[str, Any]] = None,
     ) -> RegisteredQuery:
         """Optimize + compile ``query`` and make it servable under ``name``.
 
         ``database`` supplies the dimension tables (kept device-resident) and
         the fact table's schema; serve-time batches replace the fact rows.
+        ``optimized`` seeds the (plan, report) for a query the caller already
+        optimized (the session front door's PreparedQuery path), keyed under
+        the same fingerprint the server would compute itself. ``params``
+        binds the query's ``:param`` placeholders; re-bind via :meth:`rebind`
+        without touching the compiled plan.
         """
-        qfp = fingerprint(
-            query.plan, query.stats, self.optimizer.options,
-            self.optimizer.strategy, pins=self._pins,
-        )
-        cached = self._optimized.get(qfp)
-        if cached is not None:
-            self.stats.plan_cache_hits += 1
-            plan, report = cached
+        if optimized is not None:
+            # externally optimized (the session's PreparedQuery path): the
+            # caller's optimizer options may differ from this server's, so
+            # key on the supplied physical plan rather than seeding the
+            # (query, server-options) cache with a foreign plan. Neither a
+            # cache hit nor a miss — no optimizer run happened here.
+            plan, report = optimized
+            qfp = fingerprint(
+                query.plan, query.stats, "external", pins=self._pins,
+            )
         else:
-            self.stats.plan_cache_misses += 1
-            plan, report = self.optimizer.optimize(query)
-            self._optimized[qfp] = (plan, report)
+            qfp = fingerprint(
+                query.plan, query.stats, self.optimizer.options,
+                self.optimizer.strategy, pins=self._pins,
+            )
+            cached = self._optimized.get(qfp)
+            if cached is not None:
+                self.stats.plan_cache_hits += 1
+                plan, report = cached
+            else:
+                self.stats.plan_cache_misses += 1
+                plan, report = self.optimizer.optimize(query)
+                self._optimized[qfp] = (plan, report)
         compiled = compile_plan(plan)
+        param_names = frozenset(plan_params(plan))
+        bound = dict(params or {})
+        check_params(param_names, bound, context=f"query '{name}'")
 
         scans = [p for p in walk_plan(plan) if isinstance(p, Scan)]
         if fact_table is None:
@@ -172,9 +198,29 @@ class PredictionQueryServer:
                 for c in scan_columns
             },
             has_aggregate=any(isinstance(p, Aggregate) for p in walk_plan(plan)),
+            param_names=param_names,
+            params={k: jnp.asarray(v, jnp.float32) for k, v in bound.items()},
         )
         self.queries[name] = reg
         self.stats.queries_registered += 1
+        return reg
+
+    def rebind(self, name: str, params: dict[str, Any]) -> RegisteredQuery:
+        """Re-bind ``:param`` values for a registered query.
+
+        Fingerprint-stable: the optimized plan, compiled stages, and shape
+        buckets are untouched — the new values simply flow into the next
+        execution as runtime inputs (zero new XLA traces).
+        """
+        if name not in self.queries:
+            raise KeyError(f"no registered query named '{name}'")
+        reg = self.queries[name]
+        check_params(
+            reg.param_names, params, require_all=False, context=f"query '{name}'"
+        )
+        reg.params.update(
+            {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
+        )
         return reg
 
     # -- request lifecycle ---------------------------------------------------
@@ -275,7 +321,10 @@ class PredictionQueryServer:
 
         db = dict(reg.database)
         db[reg.fact_table] = fact
-        table = reg.compiled(db, row_valid=jnp.asarray(row_valid))
+        table = reg.compiled(
+            db, row_valid=jnp.asarray(row_valid),
+            params=reg.params if reg.param_names else None,
+        )
         self.stats.batches_executed += 1
         self.stats.rows_padded += bucket - n
         return table

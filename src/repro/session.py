@@ -1,0 +1,455 @@
+"""One front door for prediction queries: sessions, prepared queries, EXPLAIN.
+
+The paper's Raven is *one* system — parse, unified IR, optimize, pick a
+runtime, serve. This module is the single user-facing surface over those
+layers::
+
+    import repro as raven
+
+    db = raven.connect(tables, stats="auto")        # tables + stats, once
+    db.register_model("risk", pipe)                 # the model registry
+
+    q = db.sql(
+        "SELECT * FROM PREDICT(model='risk', data=patients) AS p "
+        "WHERE score >= :t"
+    )
+    # ...or the fluent builder — same unified IR, same fingerprint:
+    q = db.table("patients").predict("risk").where("score >= :t")
+
+    prep = q.prepare(transform="sql", params={"t": 0.6})
+    print(prep.explain())        # logical -> physical tree, runtimes, notes
+    out = prep(batch)            # one-shot execution
+    prep.serve()                 # register into the session's server
+    r = prep.submit(batch)       # bucketed, cached hot path ...
+    db.flush()                   # ... micro-batched with everything pending
+    prep.bind(t=0.9)             # re-bind: same plan, zero new XLA traces
+
+``:param`` placeholders lower to canonical ``Param`` slots that hash by name,
+so a prepared plan re-binds thresholds without re-optimizing, re-compiling,
+or changing any fingerprint the serving layer keys on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ir import (
+    PredictionQuery,
+    TableStats,
+    format_logical_plan,
+)
+from repro.core.optimizer import (
+    OptimizationReport,
+    OptimizerOptions,
+    RavenOptimizer,
+    format_physical_plan,
+)
+from repro.errors import (
+    RavenError,
+    UnknownTableError,
+    check_params,
+)
+from repro.relational.engine import (
+    PhysicalPlan,
+    Scan,
+    compile_plan,
+    walk_plan,
+)
+from repro.relational.expr import Const, Expr, Param
+from repro.serve.query_server import PredictionQueryServer, QueryRequest
+from repro.sql.parser import (
+    QuerySpec,
+    build_prediction_query,
+    canonical_op,
+    parse_condition,
+    parse_select_items,
+    parse_spec,
+)
+
+
+def connect(
+    tables: dict[str, dict[str, np.ndarray]],
+    stats: Union[str, dict[str, TableStats], None] = "auto",
+    *,
+    partition_cols: Optional[dict[str, str]] = None,
+    strategy=None,
+    options: Optional[OptimizerOptions] = None,
+) -> "Session":
+    """Open a session over a database of named column-dict tables.
+
+    ``stats="auto"`` computes :class:`TableStats` for every table once (with
+    optional per-table partition columns for the data-induced rule); pass a
+    dict to supply stats yourself, or ``None`` to skip statistics entirely.
+    ``strategy``/``options`` set session-wide optimizer defaults that
+    :meth:`Query.prepare` can override per query.
+    """
+    return Session(
+        tables, stats, partition_cols=partition_cols,
+        strategy=strategy, options=options,
+    )
+
+
+class Session:
+    """Owns the database, statistics, model registry, and serving layer."""
+
+    def __init__(
+        self,
+        tables: dict[str, dict[str, np.ndarray]],
+        stats: Union[str, dict[str, TableStats], None] = "auto",
+        *,
+        partition_cols: Optional[dict[str, str]] = None,
+        strategy=None,
+        options: Optional[OptimizerOptions] = None,
+    ):
+        self.tables = {
+            t: {c: np.asarray(v) for c, v in cols.items()}
+            for t, cols in tables.items()
+        }
+        if stats == "auto":
+            parts = partition_cols or {}
+            self.stats = {
+                t: TableStats.of(cols, partition_col=parts.get(t))
+                for t, cols in self.tables.items()
+            }
+        elif stats is None:
+            self.stats = {}
+        elif isinstance(stats, dict):
+            self.stats = dict(stats)
+        else:
+            raise RavenError(
+                f"stats must be 'auto', a dict, or None — got {stats!r}"
+            )
+        self.models: dict[str, Any] = {}
+        self.strategy = strategy
+        self.options = options
+        self._server: Optional[PredictionQueryServer] = None
+        self._names = itertools.count()
+
+    # -- registration --------------------------------------------------------
+
+    def register_model(self, name: str, pipe_or_path):
+        """Register a trained pipeline (or a saved-pipeline path) under
+        ``name`` for use in PREDICT clauses."""
+        if isinstance(pipe_or_path, str):
+            from repro.ml.pipeline import load_pipeline
+
+            pipe_or_path = load_pipeline(pipe_or_path)
+        self.models[name] = pipe_or_path
+        return pipe_or_path
+
+    # -- query construction --------------------------------------------------
+
+    def sql(self, text: str) -> "Query":
+        """Parse PREDICT-statement SQL into a session-bound :class:`Query`."""
+        q = Query(self, parse_spec(text))
+        q.ir  # build eagerly: unknown models/tables/columns fail here
+        return q
+
+    def table(self, name: str) -> "QueryBuilder":
+        """Start a fluent query over ``name`` (the fact table)."""
+        if name not in self.tables:
+            raise UnknownTableError(
+                f"unknown table '{name}' — known tables: {sorted(self.tables)}"
+            )
+        return QueryBuilder(self, QuerySpec(base=name))
+
+    # -- serving -------------------------------------------------------------
+
+    @property
+    def server(self) -> PredictionQueryServer:
+        """The session-owned :class:`PredictionQueryServer` (created lazily)."""
+        if self._server is None:
+            self._server = PredictionQueryServer(
+                strategy=self.strategy, options=self.options
+            )
+        return self._server
+
+    def flush(self) -> list[QueryRequest]:
+        """Execute everything submitted to served queries (micro-batched)."""
+        return self._server.flush() if self._server is not None else []
+
+    def _next_name(self) -> str:
+        return f"q{next(self._names)}"
+
+
+class Query:
+    """A prediction query bound to a session (unified IR + parameters)."""
+
+    def __init__(self, session: Session, spec: QuerySpec):
+        self._session = session
+        self._spec = spec
+        self._ir: Optional[PredictionQuery] = None
+
+    @property
+    def session(self) -> Session:
+        return self._session
+
+    @property
+    def spec(self) -> QuerySpec:
+        return self._spec
+
+    @property
+    def ir(self) -> PredictionQuery:
+        """The unified IR (built once; SQL text and the fluent builder lower
+        through the same spec -> IR path, so equal queries hash equal)."""
+        if self._ir is None:
+            self._ir = build_prediction_query(
+                self._spec, self._session.models, self._session.tables,
+                self._session.stats,
+            )
+        return self._ir
+
+    def fingerprint(self) -> str:
+        return self.ir.fingerprint()
+
+    def param_names(self) -> frozenset[str]:
+        return frozenset(self.ir.params())
+
+    def prepare(
+        self,
+        *,
+        strategy=None,
+        transform: Optional[str] = None,
+        params: Optional[dict[str, Any]] = None,
+        options: Optional[OptimizerOptions] = None,
+    ) -> "PreparedQuery":
+        """Run the optimizer once and compile; returns a reusable handle.
+
+        ``transform`` forces a runtime ({'none','sql','dnn'}); ``strategy``
+        picks one from pipeline statistics; ``options`` overrides the full
+        optimizer configuration. All ``:param`` placeholders must be bound
+        via ``params`` (re-bindable later with :meth:`PreparedQuery.bind`).
+        """
+        opts = options or self._session.options or OptimizerOptions()
+        if transform is not None:
+            opts = dataclasses.replace(opts, transform=transform)
+        strat = strategy if strategy is not None else self._session.strategy
+        declared = self.param_names()
+        bound = dict(params or {})
+        check_params(declared, bound, context="query")
+        plan, report = RavenOptimizer(strategy=strat, options=opts).optimize(
+            self.ir
+        )
+        return PreparedQuery(self, plan, report, opts, strat, bound)
+
+
+class QueryBuilder(Query):
+    """Fluent construction of the same :class:`QuerySpec` the SQL parser
+    produces (so builder and SQL queries are fingerprint-identical)."""
+
+    def _with(self, **changes) -> "QueryBuilder":
+        return QueryBuilder(
+            self._session, dataclasses.replace(self._spec, **changes)
+        )
+
+    def join(
+        self, dim_table: str, on: Union[str, tuple[str, str]]
+    ) -> "QueryBuilder":
+        """FK-join a dimension table; ``on`` is a shared key name or a
+        ``(fact_col, dim_col)`` pair."""
+        a, b = (on, on) if isinstance(on, str) else on
+        return self._with(joins=[*self._spec.joins, (dim_table, a, b)])
+
+    def predict(self, model: str) -> "QueryBuilder":
+        """Apply a registered model (its outputs become columns
+        ``score``/``pred``)."""
+        return self._with(model=model)
+
+    def where(
+        self, cond: str, op: Optional[str] = None, value: Any = None
+    ) -> "QueryBuilder":
+        """Add one conjunct: ``where("score >= :t")`` or
+        ``where("score", ">=", 0.6)``."""
+        if op is None:
+            pred = parse_condition(cond)
+        else:
+            if isinstance(value, Expr):
+                v = value
+            elif isinstance(value, str):
+                # same lowering as the SQL parser: ':name' is a parameter,
+                # any other string a literal
+                v = Param(value[1:]) if value.startswith(":") else Const(value)
+            else:
+                v = Const(float(value))
+            pred = (cond, canonical_op(op), v)
+        return self._with(preds=[*self._spec.preds, pred])
+
+    def select(self, *items: str) -> "QueryBuilder":
+        """Set the select list, e.g. ``select("COUNT(*)", "AVG(score)")``;
+        the default (no select) is ``*``."""
+        parsed = [it for s in items for it in parse_select_items(s)]
+        return self._with(items=parsed)
+
+
+class PreparedQuery:
+    """An optimized + compiled prediction query.
+
+    ``plan``/``report`` are the optimizer's output; ``compiled`` the cached
+    stage executables. Call it for one-shot execution, :meth:`serve` it for
+    the bucketed micro-batched hot path, :meth:`bind` to re-bind ``:param``
+    values without re-optimizing (fingerprint-stable, zero new XLA traces).
+    """
+
+    def __init__(
+        self,
+        query: Query,
+        plan: PhysicalPlan,
+        report: OptimizationReport,
+        options: OptimizerOptions,
+        strategy,
+        params: dict[str, Any],
+    ):
+        self.query = query
+        self.plan = plan
+        self.report = report
+        self.options = options
+        self.strategy = strategy
+        self.params = dict(params)
+        self.compiled = compile_plan(plan)
+        self.param_names = query.param_names()
+        self._serve_name: Optional[str] = None
+        self._server: Optional[PredictionQueryServer] = None
+
+    @property
+    def fingerprint(self) -> str:
+        """Content hash of the physical plan (the compiled-plan cache key)."""
+        return self.compiled.fingerprint
+
+    @property
+    def name(self) -> Optional[str]:
+        """The name this query is served under (None until :meth:`serve`)."""
+        return self._serve_name
+
+    # -- parameter binding ---------------------------------------------------
+
+    def bind(self, _params: Optional[dict[str, Any]] = None, **kw) -> "PreparedQuery":
+        """Re-bind ``:param`` values: ``prep.bind(t=0.9)``.
+
+        The optimized plan, its fingerprint, and every compiled XLA program
+        are reused as-is — the value rides in as a runtime input.
+        """
+        new = {**(_params or {}), **kw}
+        check_params(self.param_names, new, require_all=False, context="query")
+        self.params.update(new)
+        if self._server is not None:
+            self._server.rebind(self._serve_name, new)
+        return self
+
+    # -- one-shot execution --------------------------------------------------
+
+    def __call__(
+        self, batch: Optional[dict[str, np.ndarray]] = None
+    ) -> dict[str, np.ndarray]:
+        """Execute once against the session tables (``batch`` replaces the
+        fact table's rows) and return compacted numpy columns."""
+        session = self.query.session
+        db = dict(session.tables)
+        fact = self._fact_table()
+        if batch is not None:
+            scan_cols = {
+                c for s in walk_plan(self.plan)
+                if isinstance(s, Scan) and s.table == fact
+                for c in s.columns
+            }
+            missing = sorted(scan_cols - set(batch))
+            if missing:
+                raise RavenError(
+                    f"batch for fact table '{fact}' is missing columns "
+                    f"{missing}"
+                )
+            db[fact] = batch
+        jdb = {
+            t: {c: jnp.asarray(v) for c, v in cols.items()}
+            for t, cols in db.items()
+        }
+        table = self.compiled(
+            jdb, params=self.params if self.param_names else None
+        )
+        return table.to_numpy(compact=True)
+
+    def _fact_table(self) -> str:
+        base = self.query.spec.base
+        if base is not None:
+            return base
+        return next(s.table for s in walk_plan(self.plan) if isinstance(s, Scan))
+
+    # -- serving -------------------------------------------------------------
+
+    def serve(
+        self,
+        name: Optional[str] = None,
+        server: Optional[PredictionQueryServer] = None,
+    ) -> "PreparedQuery":
+        """Register into the session-owned server (bucketed, micro-batched
+        hot path): afterwards ``prep.submit(batch)`` enqueues and
+        ``db.flush()`` drains."""
+        session = self.query.session
+        srv = server if server is not None else session.server
+        self._serve_name = name or session._next_name()
+        srv.register(
+            self._serve_name, self.query.ir, session.tables,
+            fact_table=self._fact_table(),
+            optimized=(self.plan, self.report),
+            params=self.params,
+        )
+        self._server = srv
+        return self
+
+    def submit(self, columns: dict[str, np.ndarray]) -> QueryRequest:
+        """Enqueue one fact-row batch (requires :meth:`serve` first); results
+        land on the returned request after ``db.flush()``."""
+        if self._server is None:
+            raise RavenError(
+                "query is not served — call .serve() before .submit()"
+            )
+        return self._server.submit(self._serve_name, columns)
+
+    # -- introspection -------------------------------------------------------
+
+    def explain(self) -> str:
+        """Pretty-print the logical -> physical story: the query as written,
+        the optimized plan (chosen runtimes, pushed projections, rewritten
+        thresholds), and the optimizer's notes."""
+        session = self.query.session
+        lines = [f"PreparedQuery  fingerprint={self.fingerprint[:16]}…"]
+        if self.param_names:
+            binds = ", ".join(
+                f":{k} = {self.params[k]!r}" if k in self.params else f":{k} (unbound)"
+                for k in sorted(self.param_names)
+            )
+            lines.append(f"params: {binds}")
+        lines.append("-- logical plan (as written) " + "-" * 26)
+        lines.append(format_logical_plan(self.query.ir.plan))
+        lines.append("-- physical plan (optimized) " + "-" * 26)
+        lines.append(format_physical_plan(self.plan))
+        lines.append("-- chosen runtimes " + "-" * 36)
+        for i, t in sorted(self.report.transforms.items()):
+            lines.append(f"predict[{i}] -> {t}")
+        scans = [s for s in walk_plan(self.plan) if isinstance(s, Scan)]
+        if scans:
+            lines.append("-- pushed projections " + "-" * 33)
+            for s in scans:
+                total = len(session.tables.get(s.table, s.columns))
+                lines.append(
+                    f"{s.table}: reads {len(s.columns)}/{total} columns"
+                )
+        if self.report.notes:
+            lines.append("-- optimizer notes " + "-" * 36)
+            for n in self.report.notes:
+                lines.append(f"* {n}")
+        stages = "1 fused XLA program" if self.compiled.is_pure else (
+            f"{self.compiled.n_stages} stages (host boundary present)"
+        )
+        lines.append(f"-- execution: {stages}")
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        served = f", served as '{self._serve_name}'" if self._serve_name else ""
+        return (
+            f"PreparedQuery(fingerprint={self.fingerprint[:12]}…, "
+            f"params={self.params}{served})"
+        )

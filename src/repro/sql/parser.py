@@ -7,17 +7,25 @@ aggregates or column select):
     SELECT <item [, item ...]>
     FROM PREDICT(model = '<path-or-name>',
                  data = <table> [JOIN <table> ON <col> = <col>]*) AS <alias>
-    [WHERE <col|alias.col> <op> <literal> [AND ...]]
+    [WHERE <col|alias.col> <op> <literal|:param> [AND ...]]
 
     item := COUNT(*) | SUM(col) | AVG(col) | col | alias.col | *
+    op   := = | <> | != | < | <= | > | >=
 
-Produces a :class:`repro.core.ir.PredictionQuery` over a model registry
-(name -> TrainedPipeline) and a database (name -> columns).
+``:name`` placeholders become :class:`~repro.relational.expr.Param` slots in
+the IR: they hash by name (not value), so a prepared plan re-binds thresholds
+without re-optimizing or changing its fingerprint.
+
+Parsing is split in two stages shared with the session API's fluent builder:
+``parse_spec`` produces a neutral :class:`QuerySpec`, and
+``build_prediction_query`` lowers a spec to the unified IR — the builder
+assembles the same spec, so both front doors yield fingerprint-identical
+:class:`repro.core.ir.PredictionQuery` instances.
 """
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 from repro.core.ir import (
     LAggregate,
@@ -28,15 +36,39 @@ from repro.core.ir import (
     PredictionQuery,
     TableStats,
 )
-from repro.relational.expr import Bin, Col, Const
+from repro.errors import (
+    SQLSyntaxError,
+    UnknownColumnError,
+    UnknownModelError,
+    UnknownTableError,
+)
+from repro.relational.expr import Bin, Col, Const, Expr, Param
 
 _TOKEN = re.compile(
     r"\s*(?:(?P<str>'[^']*')|(?P<num>-?\d+\.?\d*(?:[eE][-+]?\d+)?)"
+    r"|(?P<param>:[A-Za-z_][A-Za-z_0-9]*)"
     r"|(?P<op><=|>=|<>|!=|=|<|>|\(|\)|,|\*|\.)"
     r"|(?P<word>[A-Za-z_][A-Za-z_0-9]*))"
 )
 
-_OPMAP = {"=": "eq", "<": "lt", "<=": "le", ">": "gt", ">=": "ge"}
+_OPMAP = {
+    "=": "eq", "<": "lt", "<=": "le", ">": "gt", ">=": "ge",
+    "<>": "ne", "!=": "ne",
+}
+
+_AGGMAP = {"COUNT": "count", "SUM": "sum", "AVG": "mean"}
+
+
+def canonical_op(op: str) -> str:
+    """Normalize a comparison operator (symbol or canonical name)."""
+    if op in _OPMAP:
+        return _OPMAP[op]
+    if op in _OPMAP.values():
+        return op
+    raise SQLSyntaxError(
+        f"unknown comparison operator {op!r} — expected one of "
+        f"{sorted(_OPMAP)} or {sorted(set(_OPMAP.values()))}"
+    )
 
 
 def _tokenize(sql: str) -> list[str]:
@@ -46,7 +78,7 @@ def _tokenize(sql: str) -> list[str]:
         if not m:
             if sql[pos:].strip() == "":
                 break
-            raise SyntaxError(f"bad token at: {sql[pos:pos+20]!r}")
+            raise SQLSyntaxError(f"bad token at: {sql[pos:pos+20]!r}")
         tokens.append(m.group(0).strip())
         pos = m.end()
     return tokens
@@ -68,29 +100,52 @@ class _Parser:
     def expect(self, word: str) -> str:
         t = self.next()
         if t.upper() != word.upper():
-            raise SyntaxError(f"expected {word}, got {t!r}")
+            raise SQLSyntaxError(
+                f"expected {word}, got {t!r}" if t else f"expected {word}, "
+                "got end of query"
+            )
         return t
 
 
-def parse_prediction_query(
-    sql: str,
-    models: dict,
-    database: dict,
-    stats: dict[str, TableStats] | None = None,
-    fact: str | None = None,
-) -> PredictionQuery:
-    p = _Parser(_tokenize(sql))
-    p.expect("SELECT")
+# ---------------------------------------------------------------------------
+# Stage 1: text -> QuerySpec (shared target with the fluent builder)
+# ---------------------------------------------------------------------------
 
-    items: list[tuple[str, str]] = []  # (kind, arg)
+
+@dataclass
+class QuerySpec:
+    """Neutral description of one prediction query.
+
+    Both front doors (SQL text and the fluent builder) lower to this, and
+    :func:`build_prediction_query` is the single spec -> IR path — which is
+    what makes their IR (and hence plan fingerprints) identical.
+    """
+
+    items: list[tuple[str, str]] = field(default_factory=list)  # (kind, arg)
+    model: str | None = None
+    base: str | None = None
+    joins: list[tuple[str, str, str]] = field(default_factory=list)
+    preds: list[tuple[str, str, Expr]] = field(default_factory=list)
+
+
+def parse_select_items(text_or_parser) -> list[tuple[str, str]]:
+    """Parse a SELECT item list: ``COUNT(*), AVG(score), col, t.col, *``."""
+    p = (
+        text_or_parser
+        if isinstance(text_or_parser, _Parser)
+        else _Parser(_tokenize(text_or_parser))
+    )
+    items: list[tuple[str, str]] = []
     while True:
         t = p.next()
+        if not t:
+            raise SQLSyntaxError("expected a select item, got end of input")
         u = t.upper()
-        if u in ("COUNT", "SUM", "AVG"):
+        if u in _AGGMAP:
             p.expect("(")
             arg = p.next()
             p.expect(")")
-            items.append(({"COUNT": "count", "SUM": "sum", "AVG": "mean"}[u], arg))
+            items.append((_AGGMAP[u], arg))
         elif t == "*":
             items.append(("star", "*"))
         else:
@@ -105,18 +160,55 @@ def parse_prediction_query(
             p.next()
             continue
         break
+    return items
+
+
+def parse_condition(text_or_parser, alias: str | None = None) -> tuple[str, str, Expr]:
+    """Parse one ``col <op> literal|:param`` comparison."""
+    p = (
+        text_or_parser
+        if isinstance(text_or_parser, _Parser)
+        else _Parser(_tokenize(text_or_parser))
+    )
+    col = _qualcol(p, alias)
+    op = p.next()
+    if op not in _OPMAP:
+        raise SQLSyntaxError(f"expected a comparison operator, got {op!r}")
+    lit = p.next()
+    if not lit:
+        raise SQLSyntaxError(f"expected a literal or :param after {op!r}")
+    return col, _OPMAP[op], _value_expr(lit)
+
+
+def _value_expr(lit: str) -> Expr:
+    if lit.startswith(":"):
+        return Param(lit[1:])
+    if lit.startswith("'"):
+        return Const(lit.strip("'"))
+    try:
+        return Const(float(lit))
+    except ValueError:
+        raise SQLSyntaxError(f"expected a literal or :param, got {lit!r}")
+
+
+def parse_spec(sql: str) -> QuerySpec:
+    """Parse PREDICT-statement SQL text into a :class:`QuerySpec`."""
+    p = _Parser(_tokenize(sql))
+    p.expect("SELECT")
+    spec = QuerySpec(items=parse_select_items(p))
 
     p.expect("FROM")
     p.expect("PREDICT")
     p.expect("(")
     p.expect("model")
     p.expect("=")
-    model_name = p.next().strip("'")
+    spec.model = p.next().strip("'")
     p.expect(",")
     p.expect("data")
     p.expect("=")
-    base_table = p.next()
-    joins: list[tuple[str, str, str]] = []
+    spec.base = p.next()
+    if not spec.base:
+        raise SQLSyntaxError("PREDICT clause is missing the data= table")
     while p.peek().upper() == "JOIN":
         p.next()
         dim = p.next()
@@ -124,52 +216,104 @@ def parse_prediction_query(
         a = _qualcol(p)
         p.expect("=")
         b = _qualcol(p)
-        joins.append((dim, a, b))
+        spec.joins.append((dim, a, b))
     p.expect(")")
     alias = None
     if p.peek().upper() == "AS":
         p.next()
         alias = p.next()
 
-    preds: list[tuple[str, str, float]] = []
     if p.peek().upper() == "WHERE":
         p.next()
         while True:
-            col = _qualcol(p, alias)
-            op = p.next()
-            lit = p.next()
-            value = float(lit.strip("'")) if not lit.startswith("'") else lit.strip("'")
-            preds.append((col, _OPMAP[op], value))
+            spec.preds.append(parse_condition(p, alias))
             if p.peek().upper() == "AND":
                 p.next()
                 continue
             break
+    if p.peek():
+        raise SQLSyntaxError(f"unexpected trailing token {p.peek()!r}")
+    return spec
 
-    # ---- build the unified IR ----------------------------------------------
-    pipeline = models[model_name]
+
+def _qualcol(p: _Parser, alias: str | None = None) -> str:
+    a = p.next()
+    if p.peek() == ".":
+        p.next()
+        return p.next()
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: QuerySpec -> unified IR
+# ---------------------------------------------------------------------------
+
+
+def build_prediction_query(
+    spec: QuerySpec,
+    models: dict,
+    database: dict,
+    stats: dict[str, TableStats] | None = None,
+) -> PredictionQuery:
+    """Lower a :class:`QuerySpec` to a :class:`PredictionQuery` (unified IR)."""
+    if spec.model is None:
+        raise SQLSyntaxError("query has no PREDICT(model=..., data=...) clause")
+    if spec.base is None:
+        raise SQLSyntaxError("PREDICT clause names no data= table")
+    if spec.model not in models:
+        raise UnknownModelError(
+            f"unknown model '{spec.model}' — registered models: "
+            f"{sorted(map(str, models)) or '(none)'}"
+        )
+    if spec.base not in database:
+        raise UnknownTableError(
+            f"unknown table '{spec.base}' — known tables: {sorted(database)}"
+        )
+
+    pipeline = models[spec.model]
     if isinstance(pipeline, str):
         from repro.ml.pipeline import load_pipeline
 
         pipeline = load_pipeline(pipeline)
     out_names = ["score", "pred"][: len(pipeline.outputs)]
 
-    plan = LScan(base_table, list(database[base_table].keys()))
-    for dim, a, b in joins:
-        fact_key, dim_key = (a, b) if b in database[dim] else (b, a)
+    known_cols = set(database[spec.base])
+    plan = LScan(spec.base, list(database[spec.base].keys()))
+    for dim, a, b in spec.joins:
+        if dim not in database:
+            raise UnknownTableError(
+                f"unknown join table '{dim}' — known tables: {sorted(database)}"
+            )
+        if b in database[dim]:
+            fact_key, dim_key = a, b
+        elif a in database[dim]:
+            fact_key, dim_key = b, a
+        else:
+            raise UnknownColumnError(
+                f"join key {a!r}={b!r}: neither side is a column of '{dim}'"
+            )
         dim_cols = [c for c in database[dim] if c != dim_key]
+        known_cols |= set(database[dim])
         plan = LJoin(plan, dim, fact_key, dim_key, dim_cols)
 
-    input_preds = [x for x in preds if x[0] not in out_names]
-    output_preds = [x for x in preds if x[0] in out_names]
+    for col, _op, _v in spec.preds:
+        if col not in known_cols and col not in out_names:
+            raise UnknownColumnError(
+                f"predicate column '{col}' is neither a table column nor a "
+                f"model output {out_names}"
+            )
+
+    input_preds = [x for x in spec.preds if x[0] not in out_names]
+    output_preds = [x for x in spec.preds if x[0] in out_names]
     for col, op, v in input_preds:
-        plan = LFilter(plan, Bin(op, Col(col), Const(v)))
+        plan = LFilter(plan, Bin(op, Col(col), v))
     plan = LPredict(plan, pipeline.copy(), out_names)
     for col, op, v in output_preds:
-        plan = LFilter(plan, Bin(op, Col(col), Const(v)))
+        plan = LFilter(plan, Bin(op, Col(col), v))
 
     aggs = [
         (f"{kind}_{arg if arg != '*' else 'rows'}", kind, arg)
-        for kind, arg in items
+        for kind, arg in spec.items
         if kind in ("count", "sum", "mean")
     ]
     if aggs:
@@ -183,9 +327,12 @@ def parse_prediction_query(
     return PredictionQuery(plan=plan, stats=stats or {})
 
 
-def _qualcol(p: _Parser, alias: str | None = None) -> str:
-    a = p.next()
-    if p.peek() == ".":
-        p.next()
-        return p.next()
-    return a
+def parse_prediction_query(
+    sql: str,
+    models: dict,
+    database: dict,
+    stats: dict[str, TableStats] | None = None,
+    fact: str | None = None,
+) -> PredictionQuery:
+    """One-call convenience: SQL text -> unified IR."""
+    return build_prediction_query(parse_spec(sql), models, database, stats)

@@ -159,4 +159,12 @@ def compile_pipeline_tensor(
                 raise ValueError(kind)
         return {o: vals[o] for o in outputs}
 
+    # canonical content token: the closure is a pure function of the
+    # pipeline + compilation choices, so plans embedding it (TensorOp)
+    # fingerprint stably across objects and processes instead of by id()
+    from repro.core.fingerprint import fingerprint as _fingerprint
+
+    fn.__fingerprint_token__ = _fingerprint(
+        "tensor_compile", pipe, strategy, use_pallas, sorted(chosen.items())
+    )
     return TensorCompilation(fn=fn, strategy=chosen, n_ops=len(steps))

@@ -1,0 +1,37 @@
+"""Examples smoke test: the quickstart and serving examples must keep
+running against the current API (API drift in examples fails tier-1).
+
+Each example honors RAVEN_EXAMPLE_N, so we run them small via subprocess.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run_example(name: str, n: int = 512) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["RAVEN_EXAMPLE_N"] = str(n)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    return subprocess.run(
+        [sys.executable, str(REPO / "examples" / name)],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+
+
+@pytest.mark.parametrize("example", ["quickstart.py", "serve_query.py"])
+def test_example_runs(example):
+    proc = _run_example(example)
+    assert proc.returncode == 0, (
+        f"{example} failed\n--- stdout ---\n{proc.stdout}"
+        f"\n--- stderr ---\n{proc.stderr}"
+    )
+    assert proc.stdout.strip()  # examples narrate what they do

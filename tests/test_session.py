@@ -1,0 +1,348 @@
+"""The session front door: connect / sql / builder / prepare / explain /
+params / serve — plus the satellite guarantees (ne end-to-end, TensorOp
+content fingerprints, corpus measurement through the plan cache)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro as raven
+from repro.core.optimizer import OptimizerOptions, RavenOptimizer
+from repro.data.datasets import make_hospital
+from repro.errors import (
+    RavenError,
+    SQLSyntaxError,
+    UnboundParameterError,
+    UnknownColumnError,
+    UnknownModelError,
+    UnknownParameterError,
+    UnknownTableError,
+)
+from repro.ml.pipeline import run_pipeline
+from repro.relational.engine import PLAN_CACHE_STATS, plan_fingerprint
+from tests.conftest import train_pipeline
+
+
+@pytest.fixture()
+def db(hospital, hospital_gb):
+    sess = raven.connect(hospital.tables, stats="auto")
+    sess.register_model("m", hospital_gb)
+    return sess
+
+
+def _scores(hospital, pipe) -> np.ndarray:
+    out = run_pipeline(pipe, hospital.joined_columns())
+    return np.asarray(out[pipe.outputs[0]]).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Query construction: SQL text and fluent builder are one front door
+# ---------------------------------------------------------------------------
+
+
+def test_sql_and_builder_fingerprint_identical(db):
+    sql = db.sql(
+        "SELECT COUNT(*), AVG(score) FROM PREDICT(model='m', data=patients) "
+        "AS p WHERE asthma = 1 AND score >= 0.6"
+    )
+    built = (
+        db.table("patients").predict("m")
+        .where("asthma = 1").where("score", ">=", 0.6)
+        .select("COUNT(*)", "AVG(score)")
+    )
+    assert sql.fingerprint() == built.fingerprint()
+
+
+def test_sql_and_builder_fingerprint_identical_with_joins(expedia):
+    pipe = train_pipeline(expedia, "lr")
+    db = raven.connect(expedia.tables, stats=None)
+    db.register_model("m", pipe)
+    sql = db.sql(
+        "SELECT COUNT(*) FROM PREDICT(model='m', data=searches "
+        "JOIN hotels ON hotel_id = hotel_id "
+        "JOIN destinations ON dest_id = dest_id) AS p "
+        "WHERE s_cat0 = 3 AND score >= :t"
+    )
+    built = (
+        db.table("searches")
+        .join("hotels", on="hotel_id")
+        .join("destinations", on=("dest_id", "dest_id"))
+        .predict("m")
+        .where("s_cat0 = 3").where("score >= :t")
+        .select("COUNT(*)")
+    )
+    assert sql.fingerprint() == built.fingerprint()
+    assert sql.param_names() == {"t"}
+
+
+def test_builder_string_literal_matches_sql(db):
+    sql = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) WHERE blood_type = 'A'"
+    )
+    built = db.table("patients").predict("m").where("blood_type", "=", "A")
+    assert sql.fingerprint() == built.fingerprint()
+
+
+def test_param_name_not_value_in_fingerprint(db):
+    with_param = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= :t"
+    )
+    with_const = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= 0.6"
+    )
+    assert with_param.fingerprint() != with_const.fingerprint()
+    # prepared under two different bindings: identical physical fingerprint
+    a = with_param.prepare(transform="sql", params={"t": 0.2})
+    b = with_param.prepare(transform="sql", params={"t": 0.8})
+    assert a.fingerprint == b.fingerprint
+
+
+# ---------------------------------------------------------------------------
+# Prepare + execute + re-bind
+# ---------------------------------------------------------------------------
+
+
+def test_prepared_query_executes_correctly(db, hospital, hospital_gb):
+    scores = _scores(hospital, hospital_gb)
+    prep = db.sql(
+        "SELECT COUNT(*) FROM PREDICT(model='m', data=patients) "
+        "WHERE score >= :t"
+    ).prepare(transform="sql", params={"t": 0.5})
+    assert float(prep()["count_rows"][0]) == (scores >= 0.5).sum()
+
+
+def test_rebind_reuses_compiled_plan_zero_traces(db, hospital, hospital_gb):
+    scores = _scores(hospital, hospital_gb)
+    prep = db.sql(
+        "SELECT COUNT(*) FROM PREDICT(model='m', data=patients) "
+        "WHERE score >= :t"
+    ).prepare(transform="sql", params={"t": 0.3})
+    n_lo = float(prep()["count_rows"][0])
+    traces_before = prep.compiled.traces
+    cache_traces_before = PLAN_CACHE_STATS.traces
+    prep.bind(t=0.9)
+    n_hi = float(prep()["count_rows"][0])
+    assert prep.compiled.traces == traces_before  # zero new XLA traces
+    assert PLAN_CACHE_STATS.traces == cache_traces_before
+    assert n_lo == (scores >= 0.3).sum()
+    assert n_hi == (scores >= 0.9).sum()
+    assert n_lo > n_hi
+
+
+def test_one_shot_on_fresh_batch(db, hospital_gb):
+    batch = make_hospital(333, seed=7).tables["patients"]
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= :t"
+    ).prepare(transform="sql", params={"t": 0.5})
+    out = prep(batch)
+    oracle = np.asarray(
+        run_pipeline(hospital_gb, {k: np.asarray(v) for k, v in batch.items()})[
+            hospital_gb.outputs[0]
+        ]
+    ).reshape(-1)
+    assert len(out["score"]) == (oracle >= 0.5).sum()
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN
+# ---------------------------------------------------------------------------
+
+
+def test_explain_renders_runtimes_projections_and_notes(db):
+    prep = db.sql(
+        "SELECT COUNT(*) FROM PREDICT(model='m', data=patients) "
+        "WHERE asthma = 1 AND score >= :t"
+    ).prepare(transform="sql", params={"t": 0.6})
+    text = prep.explain()
+    assert "predict[0] -> sql" in text            # chosen runtime
+    assert "logical plan" in text and "physical plan" in text
+    assert "Scan[patients]" in text
+    assert "reads" in text and "columns" in text  # pushed projections
+    assert "logit" in text                        # rewritten threshold
+    assert ":t" in text                           # param binding shown
+    assert any(n in text for n in prep.report.notes)
+
+
+def test_explain_udf_runtime(db):
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients)"
+    ).prepare(transform="none")
+    text = prep.explain()
+    assert "predict[0] -> none" in text
+    assert "MLUdf" in text and "host boundary" in text
+
+
+# ---------------------------------------------------------------------------
+# Serving through the session
+# ---------------------------------------------------------------------------
+
+
+def test_serve_submit_flush_matches_one_shot(db):
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= :t"
+    ).prepare(transform="sql", params={"t": 0.5}).serve(name="risk")
+    b1 = make_hospital(200, seed=11).tables["patients"]
+    b2 = make_hospital(900, seed=12).tables["patients"]
+    r1, r2 = prep.submit(b1), prep.submit(b2)
+    done = db.flush()
+    assert {id(r) for r in done} == {id(r1), id(r2)}
+    assert r1.done and r2.done
+    one = prep(b1)
+    np.testing.assert_allclose(
+        np.sort(one["score"]), np.sort(r1.result["score"]), atol=1e-5
+    )
+
+
+def test_serve_rebind_is_fingerprint_stable_and_trace_free(db):
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= :t"
+    ).prepare(transform="sql", params={"t": 0.2}).serve(name="risk")
+    batch = make_hospital(256, seed=13).tables["patients"]
+    r_lo = prep.submit(batch)
+    db.flush()
+    reg = db.server.queries["risk"]
+    fp_before = reg.compiled.fingerprint
+    traces_before = db.server.recompiles()
+    prep.bind(t=0.95)  # propagates into the server-registered query
+    r_hi = prep.submit(batch)  # same shape bucket
+    db.flush()
+    assert db.server.queries["risk"].compiled.fingerprint == fp_before
+    assert db.server.recompiles() == traces_before
+    assert len(r_hi.result["score"]) < len(r_lo.result["score"])
+
+
+def test_submit_before_serve_raises(db):
+    prep = db.sql("SELECT * FROM PREDICT(model='m', data=patients)").prepare(
+        transform="sql"
+    )
+    with pytest.raises(RavenError, match="not served"):
+        prep.submit(make_hospital(64, seed=3).tables["patients"])
+
+
+# ---------------------------------------------------------------------------
+# Typed error paths (SQL frontend + parameters)
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_model_raises_typed_error(db):
+    with pytest.raises(UnknownModelError, match="nope"):
+        db.sql("SELECT * FROM PREDICT(model='nope', data=patients)")
+
+
+def test_unknown_table_raises_typed_error(db):
+    with pytest.raises(UnknownTableError, match="nosuch"):
+        db.sql("SELECT * FROM PREDICT(model='m', data=nosuch)")
+    with pytest.raises(UnknownTableError, match="missing_dim"):
+        db.sql(
+            "SELECT * FROM PREDICT(model='m', data=patients "
+            "JOIN missing_dim ON asthma = asthma)"
+        )
+    with pytest.raises(UnknownTableError):
+        db.table("nosuch")
+
+
+def test_unknown_column_raises_typed_error(db):
+    with pytest.raises(UnknownColumnError, match="not_a_col"):
+        db.sql(
+            "SELECT * FROM PREDICT(model='m', data=patients) "
+            "WHERE not_a_col = 1"
+        )
+
+
+def test_malformed_predict_clause_raises_typed_error(db):
+    for bad in [
+        "SELECT * FROM PREDICT(model='m' data=patients)",   # missing comma
+        "SELECT * FROM PREDICT(data=patients)",             # missing model
+        "SELECT * FROM PREDICT(model='m', data=patients",   # unclosed paren
+        "SELECT * FROM patients",                           # no PREDICT
+    ]:
+        with pytest.raises(SQLSyntaxError) as e:
+            db.sql(bad)
+        assert str(e.value)  # message-bearing
+
+
+def test_unbound_and_unknown_params_raise(db):
+    q = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= :t"
+    )
+    with pytest.raises(UnboundParameterError, match="t"):
+        q.prepare(transform="sql")
+    with pytest.raises(UnknownParameterError, match="zzz"):
+        q.prepare(transform="sql", params={"t": 0.5, "zzz": 1.0})
+    prep = q.prepare(transform="sql", params={"t": 0.5})
+    with pytest.raises(UnknownParameterError, match="zzz"):
+        prep.bind(zzz=3.0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: <> / != end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_ne_operator_end_to_end(db, hospital, hospital_gb):
+    scores = _scores(hospital, hospital_gb)
+    asthma = hospital.tables["patients"]["asthma"]
+    for op in ("<>", "!="):
+        prep = db.sql(
+            f"SELECT COUNT(*) FROM PREDICT(model='m', data=patients) "
+            f"WHERE asthma {op} 1 AND score >= 0.5"
+        ).prepare(transform="sql")
+        got = float(prep()["count_rows"][0])
+        assert got == ((asthma != 1) & (scores >= 0.5)).sum()
+
+
+def test_ne_does_not_block_sibling_constraint_pruning(db):
+    # 'asthma = 1' must still prune the model even with a ne-conjunct present
+    q = db.sql(
+        "SELECT COUNT(*) FROM PREDICT(model='m', data=patients) "
+        "WHERE asthma = 1 AND diabetes <> 1"
+    )
+    full_inputs = len(db.models["m"].inputs)
+    plan, _ = RavenOptimizer(options=OptimizerOptions(transform="none")).optimize(q.ir)
+    from repro.relational.engine import MLUdf, walk_plan
+
+    udf = next(p for p in walk_plan(plan) if isinstance(p, MLUdf))
+    assert len(udf.pipeline.inputs) < full_inputs  # asthma folded to constant
+
+
+# ---------------------------------------------------------------------------
+# Satellite: TensorOp canonical content fingerprints
+# ---------------------------------------------------------------------------
+
+
+def test_mltodnn_plans_fingerprint_stably(db):
+    q = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= 0.5"
+    )
+    opt = lambda: RavenOptimizer(  # noqa: E731
+        options=OptimizerOptions(transform="dnn")
+    ).optimize(q.ir)[0]
+    pins_a, pins_b = [], []
+    fp_a = plan_fingerprint(opt(), pins=pins_a)
+    fp_b = plan_fingerprint(opt(), pins=pins_b)
+    assert fp_a == fp_b            # content-stable across lowerings
+    assert not pins_a and not pins_b  # nothing identity-hashed -> persistable
+
+
+def test_tensor_compilation_carries_content_token(hospital_gb):
+    from repro.tensor.compile import compile_pipeline_tensor
+
+    a = compile_pipeline_tensor(hospital_gb)
+    b = compile_pipeline_tensor(hospital_gb.copy())
+    assert a.fn.__fingerprint_token__ == b.fn.__fingerprint_token__
+
+
+# ---------------------------------------------------------------------------
+# Satellite: corpus measurement rides the compiled-plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_corpus_measure_reuses_compiled_plans(hospital_lr):
+    from repro.core.corpus import _measure
+
+    rng = np.random.default_rng(0)
+    t_first = _measure(hospital_lr, 256, rng)
+    traces_before = PLAN_CACHE_STATS.traces
+    t_second = _measure(hospital_lr, 256, rng)
+    assert PLAN_CACHE_STATS.traces == traces_before  # zero re-traces
+    assert np.all(np.isfinite(t_first)) and np.all(np.isfinite(t_second))

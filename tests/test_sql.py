@@ -54,3 +54,33 @@ def test_syntax_error_raises(hospital):
             "SELECT FROM PREDICT(model='m' data=patients)",
             {"m": pipe}, hospital.tables,
         )
+
+
+def test_ne_operator_parses_both_spellings(hospital):
+    from repro.core.ir import LFilter
+    from repro.relational.expr import Bin
+
+    pipe = train_pipeline(hospital, "dt")
+    for op in ("<>", "!="):
+        q = parse_prediction_query(
+            f"SELECT * FROM PREDICT(model='m', data=patients) AS p "
+            f"WHERE asthma {op} 1",
+            {"m": pipe}, hospital.tables,
+        )
+        f = [n for n in walk(q.plan) if isinstance(n, LFilter)][0]
+        assert isinstance(f.expr, Bin) and f.expr.op == "ne"
+
+
+def test_param_placeholder_parses_to_param_slot(hospital):
+    from repro.core.ir import LFilter
+    from repro.relational.expr import Bin, Param
+
+    pipe = train_pipeline(hospital, "dt")
+    q = parse_prediction_query(
+        "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+        "WHERE score >= :thresh",
+        {"m": pipe}, hospital.tables,
+    )
+    f = [n for n in walk(q.plan) if isinstance(n, LFilter)][0]
+    assert isinstance(f.expr, Bin) and f.expr.b == Param("thresh")
+    assert q.params() == {"thresh"}
