@@ -1,7 +1,7 @@
 """Serving-layer benchmark: cold per-call execution vs the warm cached path,
 driven through the session front door (connect -> sql -> prepare -> serve).
 
-Measures the MLtoSQL-lowered hospital query under three regimes:
+Part 1 — pure (MLtoSQL) plan, three regimes:
 
   percall — compile_plan(cache=False) + execute on every request: the
             pre-serving behavior (re-lower, re-jit, re-trace per call).
@@ -12,8 +12,20 @@ Measures the MLtoSQL-lowered hospital query under three regimes:
             micro-batched submits on the session server — the steady-state
             hot path.
 
-Reports throughput (rows/s), per-request latency, and XLA recompile counts;
-the served/percall ratio is the headline (target: >= 5x warm speedup).
+Part 2 — multi-stage (MLUdf host-boundary) plan, the StageGraph payoff:
+
+  postudf — the old batch-at-a-time post-UDF path: no mid-stage bucketing
+            (host-boundary outputs run at their exact data-dependent shape,
+            re-tracing the post-UDF stage on every new size) and one
+            request per execution.
+  staged  — per-stage bucketing + segment-id coalescing: every pure stage
+            runs on power-of-two shapes, submits share executions.
+  pump    — same, flushed by the background pump (prep.serve(
+            max_latency_ms=...)) with per-request p50/p99 latency.
+
+Reports throughput (rows/s), XLA recompile counts, per-stage timings, and
+request-latency percentiles. Headlines: served/percall >= 5x on the pure
+plan, staged/postudf >= 2x on the multi-stage plan.
 
     PYTHONPATH=src:. python benchmarks/serve_query.py [--quick]
 """
@@ -33,6 +45,7 @@ from repro.relational.engine import (
     clear_plan_cache,
     compile_plan,
 )
+from repro.serve import PredictionQueryServer
 
 
 def _request_sizes(n_requests: int, seed: int = 0) -> list[int]:
@@ -41,28 +54,19 @@ def _request_sizes(n_requests: int, seed: int = 0) -> list[int]:
     return [int(n) for n in rng.integers(200, 4096, size=n_requests)]
 
 
-def run(quick: bool = False):
-    n_requests = 8 if quick else 24
-    sizes = _request_sizes(n_requests)
-    train, _ = make_dataset("hospital", 20_000)
-    pipe = train_model(train, "gb")
-    batches = [make_hospital(n, seed=100 + i).tables["patients"]
-               for i, n in enumerate(sizes)]
-    total_rows = sum(sizes)
+def _stage_report(prep) -> list[str]:
+    return [st.describe() for st in prep.compiled.stages]
 
-    db = raven.connect(train.tables, stats="auto")
-    db.register_model("m", pipe)
-    sql = (
-        "SELECT * FROM PREDICT(model='m', data=patients) AS p "
-        "WHERE score >= :t"
-    )
+
+def run_pure(db, sql, batches, total_rows, n_requests):
+    """Pure-plan regimes: percall / cached / served."""
     prep = db.sql(sql).prepare(transform="sql", params={"t": 0.6})
 
     # -- percall: compile + execute from scratch every request ---------------
     clear_plan_cache()
     t0 = time.perf_counter()
     for b in batches:
-        db_np = dict(train.tables)
+        db_np = dict(db.tables)
         db_np["patients"] = b
         out = compile_plan(prep.plan, cache=False)(
             {t: {c: np.asarray(v) for c, v in cols.items()}
@@ -88,38 +92,133 @@ def run(quick: bool = False):
     prep = db.sql(sql).prepare(transform="sql", params={"t": 0.6}).serve("hot")
     prep.submit(batches[0])
     db.flush()  # warm one bucket
-    warm_traces = db.server.recompiles()
+    warm_traces = db.cache_stats()["traces"]
     t0 = time.perf_counter()
     reqs = [prep.submit(b) for b in batches]
     db.flush()
     t_served = time.perf_counter() - t0
     assert all(r.done for r in reqs)
+    served_traces = db.cache_stats()["traces"] - warm_traces
 
-    rows = {
-        "requests": n_requests,
-        "rows": total_rows,
-        "percall_s": t_percall,
-        "cached_s": t_cached,
-        "served_s": t_served,
+    print("serve_query,variant,seconds,rows_per_s,recompiles")
+    print(f"serve_query,percall,{t_percall:.3f},{total_rows / t_percall:.0f},"
+          f"{percall_traces}")
+    print(f"serve_query,cached,{t_cached:.3f},{total_rows / t_cached:.0f},"
+          f"{cached_traces}")
+    print(f"serve_query,served,{t_served:.3f},{total_rows / t_served:.0f},"
+          f"{served_traces} (after warmup)")
+    print(f"serve_query,speedup,served vs percall = "
+          f"{t_percall / t_served:.1f}x, cached vs percall = "
+          f"{t_percall / t_cached:.1f}x")
+    return {
+        "requests": n_requests, "rows": total_rows,
+        "percall_s": t_percall, "cached_s": t_cached, "served_s": t_served,
         "percall_rows_s": total_rows / t_percall,
         "cached_rows_s": total_rows / t_cached,
         "served_rows_s": total_rows / t_served,
         "percall_recompiles": percall_traces,
         "cached_recompiles": cached_traces,
-        "served_recompiles_after_warmup": db.server.recompiles() - warm_traces,
+        "served_recompiles_after_warmup": served_traces,
         "speedup_cached": t_percall / t_cached,
         "speedup_served": t_percall / t_served,
     }
-    print("serve_query,variant,seconds,rows_per_s,recompiles")
-    print(f"serve_query,percall,{t_percall:.3f},{rows['percall_rows_s']:.0f},"
-          f"{percall_traces}")
-    print(f"serve_query,cached,{t_cached:.3f},{rows['cached_rows_s']:.0f},"
-          f"{cached_traces}")
-    print(f"serve_query,served,{t_served:.3f},{rows['served_rows_s']:.0f},"
-          f"{db.server.recompiles() - warm_traces} (after warmup)")
-    print(f"serve_query,speedup,served vs percall = "
-          f"{rows['speedup_served']:.1f}x, cached vs percall = "
-          f"{rows['speedup_cached']:.1f}x")
+
+
+def run_multistage(db, sql, batches, total_rows):
+    """Host-boundary plan: old batch-at-a-time post-UDF path vs StageGraph
+    per-stage bucketing + coalescing, sync and pump-driven."""
+    ir = db.sql(sql).ir
+
+    # -- postudf: the pre-StageGraph behavior --------------------------------
+    from repro.core.optimizer import OptimizerOptions
+
+    clear_plan_cache()
+    old = PredictionQueryServer(
+        options=OptimizerOptions(transform="none"), mid_bucketing=False,
+    )
+    old.register("udf", ir, db.tables, params={"t": 0.6})
+    old.execute("udf", batches[0])  # warm entry bucket
+    warm = old.recompiles()
+    t0 = time.perf_counter()
+    for b in batches:  # one request per execution, exact-shape post-UDF
+        old.execute("udf", b)
+    t_old = time.perf_counter() - t0
+    old_retraces = old.recompiles() - warm
+
+    # -- staged: per-stage bucketing + coalesced flushes ---------------------
+    clear_plan_cache()
+    prep = db.sql(sql).prepare(
+        transform="none", params={"t": 0.6}
+    ).serve("udf_hot")
+    prep.submit(batches[0])
+    db.flush()
+    warm = db.cache_stats()["traces"]
+    t0 = time.perf_counter()
+    reqs = [prep.submit(b) for b in batches]
+    db.flush()
+    t_new = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    new_retraces = db.cache_stats()["traces"] - warm
+
+    # -- pump: same, flushed by the background pump --------------------------
+    prep = prep.serve("udf_pump", max_latency_ms=5.0)
+    prep.submit(batches[0]).wait(timeout=60)  # warm
+    t0 = time.perf_counter()
+    reqs = [prep.submit(b) for b in batches]
+    outs = [r.wait(timeout=60) for r in reqs]
+    t_pump = time.perf_counter() - t0
+    assert all(o is not None for o in outs)
+    lat_ms = np.array([r.latency_s * 1e3 for r in reqs])
+    p50, p99 = np.percentile(lat_ms, [50, 99])
+    db.server.stop_pump()
+
+    print("serve_query_multistage,variant,seconds,rows_per_s,"
+          "post_warm_recompiles")
+    print(f"serve_query_multistage,postudf,{t_old:.3f},"
+          f"{total_rows / t_old:.0f},{old_retraces}")
+    print(f"serve_query_multistage,staged,{t_new:.3f},"
+          f"{total_rows / t_new:.0f},{new_retraces}")
+    print(f"serve_query_multistage,pump,{t_pump:.3f},"
+          f"{total_rows / t_pump:.0f},-")
+    print(f"serve_query_multistage,speedup,staged vs postudf = "
+          f"{t_old / t_new:.1f}x")
+    print(f"serve_query_multistage,latency_ms,p50={p50:.2f},p99={p99:.2f}")
+    print("per-stage timings (staged+pump serving):")
+    for line in _stage_report(prep):
+        print(f"  {line}")
+    return {
+        "postudf_s": t_old, "staged_s": t_new, "pump_s": t_pump,
+        "postudf_rows_s": total_rows / t_old,
+        "staged_rows_s": total_rows / t_new,
+        "pump_rows_s": total_rows / t_pump,
+        "postudf_recompiles_after_warmup": old_retraces,
+        "staged_recompiles_after_warmup": new_retraces,
+        "speedup_staged": t_old / t_new,
+        "latency_p50_ms": float(p50), "latency_p99_ms": float(p99),
+    }
+
+
+def run(quick: bool = False):
+    n_requests = 8 if quick else 24
+    sizes = _request_sizes(n_requests)
+    train, _ = make_dataset("hospital", 20_000)
+    pipe = train_model(train, "gb")
+    batches = [make_hospital(n, seed=100 + i).tables["patients"]
+               for i, n in enumerate(sizes)]
+    total_rows = sum(sizes)
+
+    db = raven.connect(train.tables, stats="auto")
+    db.register_model("m", pipe)
+    sql = (
+        "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+        "WHERE score >= :t"
+    )
+    rows = run_pure(db, sql, batches, total_rows, n_requests)
+
+    # same query text, but run_multistage forces transform='none': the score
+    # threshold then runs *after* the MLUdf host boundary, which is exactly
+    # where the old exact-shape path churned and re-traced
+    rows.update(run_multistage(db, sql, batches, total_rows))
     return rows
 
 

@@ -72,3 +72,22 @@ print(f"rows passing at 0.9: {len(req.result['score'])}; "
       f"new recompiles: {db.server.recompiles() - before}")
 print(f"server stats: {db.server.stats.snapshot()}")
 assert all(r.done for r in reqs)
+
+# -- pump-driven serving: no db.flush() anywhere --------------------------
+print("\nserving with a background pump (prep.serve(max_latency_ms=5))...")
+udf = db.sql(
+    "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+    "WHERE score >= :t"
+).prepare(transform="none", params={"t": 0.6}).serve(
+    name="udf", max_latency_ms=5.0,
+)
+# a host-boundary (MLUdf) plan: the stage graph buckets at every pure-stage
+# boundary, so warm requests re-trace nothing even as sizes churn
+pump_reqs = [udf.submit(b) for b in batches[:6]]
+outs = [r.wait(timeout=60) for r in pump_reqs]  # pump flushes; no db.flush()
+lat = sorted(r.latency_s * 1e3 for r in pump_reqs)
+print(f"pump served {len(outs)} requests, median latency {lat[len(lat)//2]:.1f} ms")
+print("stage graph:")
+for stage in udf.compiled.stages:
+    print(f"  {stage.describe()}")
+db.close()  # stops the pump (drains anything still pending)

@@ -21,10 +21,12 @@ Lower layers (``repro.core``, ``repro.sql``, ``repro.relational``,
 from repro.errors import (
     RavenError,
     SQLSyntaxError,
+    StaleQueryError,
     UnboundParameterError,
     UnknownColumnError,
     UnknownModelError,
     UnknownParameterError,
+    UnknownQueryError,
     UnknownTableError,
 )
 from repro.session import (
@@ -48,4 +50,6 @@ __all__ = [
     "UnknownColumnError",
     "UnboundParameterError",
     "UnknownParameterError",
+    "UnknownQueryError",
+    "StaleQueryError",
 ]

@@ -42,6 +42,33 @@ def fingerprint(*objs: Any, pins: list | None = None) -> str:
     return h.hexdigest()
 
 
+def node_fingerprint(
+    node: Any, *, pins: list | None = None, exclude: tuple[str, ...] = ("child",)
+) -> str:
+    """Shallow canonical hash of one plan node (child subtrees excluded).
+
+    The StageGraph hashes each stage as a *chain* — ``fp[i] = H(fp[i-1],
+    ops[i])`` — so the per-node hash must cover the node's own content
+    (expressions, pipeline weights, output names) without re-walking the
+    subtree below it; upstream structure is already encoded by the chain.
+    This is the prerequisite for per-stage artifact caching: a stage's
+    fingerprint identifies "this operator slice of this plan" stably across
+    plan objects and processes.
+    """
+    h = hashlib.sha256()
+    sink = pins if pins is not None else []
+    if dataclasses.is_dataclass(node) and not isinstance(node, type):
+        h.update(b"C" + type(node).__name__.encode() + b"\x00")
+        for f in dataclasses.fields(node):
+            if f.name in exclude:
+                continue
+            h.update(b"f" + f.name.encode() + b"\x00")
+            _feed(h, getattr(node, f.name), sink)
+    else:
+        _feed(h, node, sink)
+    return h.hexdigest()
+
+
 def _feed(h, obj: Any, pins: list) -> None:
     # Expr first: it is a dataclass, but deep chains need the iterative path
     from repro.relational.expr import Expr

@@ -77,6 +77,10 @@ class OptimizerOptions:
 class OptimizationReport:
     transforms: dict[int, str] = field(default_factory=dict)
     notes: list[str] = field(default_factory=list)
+    # stage-boundary annotation, filled at lowering time: one line per
+    # physical stage ("pure: Scan[t]→Project" / "host: MLUdf"), matching the
+    # StageGraph the engine will build from the plan
+    stages: list[str] = field(default_factory=list)
 
 
 class RavenOptimizer:
@@ -127,6 +131,15 @@ class RavenOptimizer:
                     rewrite_score_filters(q.plan, score, "logit")
 
         plan = self._lower(q.plan, report)
+        from repro.exec.stages import describe_segments
+
+        report.stages = describe_segments(plan)
+        n_host = sum(1 for s in report.stages if s.startswith("host"))
+        if n_host:
+            report.notes.append(
+                f"lowered to {len(report.stages)} stages "
+                f"({n_host} host boundary(ies) — bucketed per stage when served)"
+            )
         return plan, report
 
     @staticmethod
@@ -191,6 +204,9 @@ class RavenOptimizer:
                         "mltodnn", p.pipeline, outs, names,
                         opt.tensor_strategy, opt.use_pallas,
                     )
+                    # consumed-column schema for the StageGraph (the closure
+                    # is otherwise opaque to schema inference)
+                    fn.__input_names__ = tuple(comp.input_names)
                     return TensorOp(child, fn, names)
                 except MLtoDNNUnsupported as e:
                     report.notes.append(f"MLtoDNN fallback: {e}")

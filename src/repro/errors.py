@@ -38,6 +38,21 @@ class UnknownParameterError(RavenError):
     """``bind``/``rebind`` named a parameter the query does not declare."""
 
 
+class UnknownQueryError(RavenError):
+    """``submit``/``rebind`` named a query never registered with the server."""
+
+
+class StaleQueryError(RavenError):
+    """A served handle no longer matches the registration under its name.
+
+    Raised when ``PreparedQuery.submit`` (or ``QueryServer.submit`` with
+    ``expect_token``) targets a name that has since been re-registered —
+    with a different physical plan *or* different bound parameter values
+    (plan fingerprints are deliberately param-invariant, so the guard keys
+    on the registration itself) — serving through the stale handle would
+    silently answer with the wrong query."""
+
+
 def check_params(
     declared, bound, *, require_all: bool = True, context: str = "query"
 ) -> None:

@@ -1,0 +1,31 @@
+"""Physical execution layer: the StageGraph IR and the async request pump.
+
+``repro.exec.stages`` is the typed intermediate representation between the
+optimizer's physical plan and the runtime: a linear graph of declarative,
+content-fingerprinted stages (maximal pure-jnp segments and MLUdf host
+boundaries). ``repro.exec.pump`` drives latency-targeted background flushing
+for the serving layer.
+"""
+from repro.exec.pump import RequestPump
+from repro.exec.stages import (
+    RunResult,
+    Stage,
+    StageGraph,
+    build_stage_graph,
+    describe_segments,
+    plan_segments,
+    run_graph,
+    seg_bucket,
+)
+
+__all__ = [
+    "RequestPump",
+    "RunResult",
+    "Stage",
+    "StageGraph",
+    "build_stage_graph",
+    "describe_segments",
+    "plan_segments",
+    "run_graph",
+    "seg_bucket",
+]

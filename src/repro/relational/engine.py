@@ -1,16 +1,19 @@
 """Physical plans + execution for the columnar JAX data engine.
 
 A plan is a tree of operators over a database (dict of named column-dicts).
-Lowering splits the plan at host boundaries (``MLUdf``) into *stages*: maximal
-pure-jnp segments are jitted as single XLA programs (so an MLtoSQL-compiled
-model fuses with the scans/joins/filters around it — the whole point of the
-optimization), while MLUdf stages run interpreted numpy on host with
-batch-at-a-time dispatch (the Spark→Python-UDF→ML-runtime boundary, including
-its conversion and per-batch overheads).
+Lowering splits the plan at host boundaries (``MLUdf``) into a
+:class:`~repro.exec.stages.StageGraph`: maximal pure-jnp segments are jitted
+as single XLA programs (so an MLtoSQL-compiled model fuses with the
+scans/joins/filters around it — the whole point of the optimization), while
+MLUdf stages run interpreted numpy on host with batch-at-a-time dispatch (the
+Spark→Python-UDF→ML-runtime boundary, including its conversion and per-batch
+overheads). The stage graph is a first-class IR — declarative,
+schema-carrying, per-stage fingerprinted — built by :mod:`repro.exec.stages`;
+this module owns the plan-node definitions, the jit/trace accounting, and the
+fingerprint-keyed compiled-plan cache on top of it.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Union
 
@@ -18,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.relational.expr import Expr, eval_expr
+from repro.relational.expr import Expr
 from repro.relational.table import Table
 
 # ---------------------------------------------------------------------------
@@ -95,147 +98,21 @@ def walk_plan(p: PhysicalPlan):
 
 
 # ---------------------------------------------------------------------------
-# Lowering: plan -> stages
+# Lowering: plan -> StageGraph (repro.exec.stages)
 # ---------------------------------------------------------------------------
 
-State = tuple[dict[str, jnp.ndarray], jnp.ndarray]  # (columns, valid)
-
-# env key carrying the initial fact-spine validity mask (padded serving)
-ROW_VALID_KEY = "__row_valid__"
-
-# env key carrying bound :param values (0-d arrays). Params enter the jitted
-# stages as runtime inputs, so re-binding a value reuses the traced program.
-PARAMS_KEY = "__params__"
-
-
-def _pure_step(plan: PhysicalPlan, inner: Callable[[dict], State]) -> Callable[[dict], State]:
-    """Compose one pure operator on top of ``inner`` (env -> state)."""
-
-    if isinstance(plan, Scan):
-        def fn(env, _plan=plan):
-            cols = {c: env[_plan.table][c] for c in _plan.columns}
-            n = next(iter(cols.values())).shape[0]
-            # the serving layer pads batches to a shape bucket and marks the
-            # pad rows invalid up front via ROW_VALID_KEY
-            rv = env.get(ROW_VALID_KEY)
-            valid = jnp.ones((n,), dtype=bool) if rv is None else rv.astype(bool)
-            return cols, valid
-        return fn
-
-    if isinstance(plan, Join):
-        def fn(env, _plan=plan):
-            cols, valid = inner(env)
-            dim = env[_plan.dim_table]
-            keys = dim[_plan.dim_key]
-            order = jnp.argsort(keys)
-            skeys = keys[order]
-            pos = jnp.searchsorted(skeys, cols[_plan.fact_key])
-            pos = jnp.clip(pos, 0, skeys.shape[0] - 1)
-            hit = skeys[pos] == cols[_plan.fact_key]
-            gather = order[pos]
-            out = dict(cols)
-            for c in _plan.dim_columns:
-                out[c] = dim[c][gather]
-            return out, valid & hit
-        return fn
-
-    if isinstance(plan, Filter):
-        def fn(env, _plan=plan):
-            cols, valid = inner(env)
-            keep = eval_expr(_plan.expr, cols, env.get(PARAMS_KEY))
-            return cols, valid & keep.astype(bool)
-        return fn
-
-    if isinstance(plan, Project):
-        def fn(env, _plan=plan):
-            cols, valid = inner(env)
-            keep = _plan.keep if _plan.keep is not None else list(cols)
-            out = {c: cols[c] for c in keep}
-            for name, e in _plan.exprs.items():
-                out[name] = eval_expr(e, cols, env.get(PARAMS_KEY))
-            return out, valid
-        return fn
-
-    if isinstance(plan, TensorOp):
-        def fn(env, _plan=plan):
-            cols, valid = inner(env)
-            out = dict(cols)
-            out.update(_plan.fn(cols))
-            return out, valid
-        return fn
-
-    if isinstance(plan, Aggregate):
-        def fn(env, _plan=plan):
-            cols, valid = inner(env)
-            w = valid.astype(jnp.float32)
-            out = {}
-            for name, op, col in _plan.aggs:
-                if op == "count":
-                    out[name] = jnp.sum(w)[None]
-                elif op == "sum":
-                    out[name] = jnp.sum(cols[col] * w)[None]
-                elif op == "mean":
-                    out[name] = (jnp.sum(cols[col] * w) / jnp.maximum(jnp.sum(w), 1.0))[None]
-                else:
-                    raise ValueError(op)
-            return out, jnp.ones((1,), dtype=bool)
-        return fn
-
-    raise TypeError(type(plan))
-
-
-@dataclass
-class _PureStage:
-    fn: Callable[[dict], State]  # env -> state  (jitted at compile)
-
-
-@dataclass
-class _UdfStage:
-    udf: MLUdf
-
-
-def _lower(plan: PhysicalPlan) -> list[Union[_PureStage, _UdfStage]]:
-    if isinstance(plan, Scan):
-        return [_PureStage(_pure_step(plan, None))]
-    if isinstance(plan, MLUdf):
-        return _lower(plan.child) + [_UdfStage(plan)]
-    stages = _lower(plan.child)
-    last = stages[-1]
-    if isinstance(last, _PureStage):
-        stages[-1] = _PureStage(_pure_step(plan, last.fn))
-    else:
-        # operator sits on top of a host boundary: its "env" is the boundary
-        # output re-wrapped as a pseudo-table named "__mid__"
-        def from_mid(env):
-            cols = dict(env["__mid__"])
-            valid = cols.pop("__valid__")
-            return cols, valid
-
-        stages.append(_PureStage(_pure_step(plan, from_mid)))
-    return stages
-
-
-def _run_udf(udf: MLUdf, cols: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
-    """Batch-at-a-time interpreted pipeline execution (host)."""
-    from repro.ml.pipeline import run_pipeline
-
-    n = len(next(iter(cols.values())))
-    in_names = udf.pipeline.input_names()
-    outs: dict[str, list[np.ndarray]] = {o: [] for o in udf.pipeline.outputs}
-    bs = udf.batch_size
-    for s in range(0, max(n, 1), bs):
-        batch = {k: cols[k][s : s + bs] for k in in_names}
-        if len(next(iter(batch.values()))) == 0:
-            continue
-        res = run_pipeline(udf.pipeline, batch)
-        for o in udf.pipeline.outputs:
-            outs[o].append(np.asarray(res[o]))
-    result = dict(cols)
-    for o, name in zip(udf.pipeline.outputs, udf.output_names):
-        result[name] = (
-            np.concatenate(outs[o]) if outs[o] else np.empty((0,))
-        )
-    return result
+from repro.exec.stages import (  # noqa: E402  (plan nodes must exist first)
+    PARAMS_KEY,
+    ROW_SEG_KEY,
+    ROW_VALID_KEY,
+    SEG_COUNT_KEY,
+    SEG_SLOTS_KEY,
+    RunResult,
+    StageGraph,
+    build_stage_graph,
+    run_graph,
+    seg_bucket,
+)
 
 
 def plan_fingerprint(plan: PhysicalPlan, pins: Optional[list] = None) -> str:
@@ -254,17 +131,26 @@ def plan_fingerprint(plan: PhysicalPlan, pins: Optional[list] = None) -> str:
 
 @dataclass
 class CacheStats:
-    """Module-level compiled-plan cache accounting."""
+    """Module-level compiled-plan cache accounting.
+
+    ``traces`` counts XLA stage tracings across all entries; ``stage_traces``
+    breaks the same count down per stage fingerprint, so callers (and
+    ``db.cache_stats()`` on the session) can assert zero-retrace warm paths
+    for a *specific* stage — e.g. the post-UDF pure stage of a host-boundary
+    plan — without reaching into compiled-plan internals.
+    """
 
     hits: int = 0
     misses: int = 0
     evictions: int = 0
     traces: int = 0  # XLA (re)compiles: stage tracings across all entries
+    stage_traces: dict[str, int] = field(default_factory=dict)
 
-    def snapshot(self) -> dict[str, int]:
+    def snapshot(self) -> dict[str, Any]:
         return {
             "hits": self.hits, "misses": self.misses,
             "evictions": self.evictions, "traces": self.traces,
+            "stage_traces": dict(self.stage_traces),
         }
 
 
@@ -277,38 +163,57 @@ def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     PLAN_CACHE_STATS.hits = PLAN_CACHE_STATS.misses = 0
     PLAN_CACHE_STATS.evictions = PLAN_CACHE_STATS.traces = 0
+    PLAN_CACHE_STATS.stage_traces.clear()
 
 
 @dataclass
 class CompiledPlan:
     """Reusable compiled artifact for one physical plan.
 
-    ``stages`` holds the jitted pure-stage executables (jit specializes per
-    input shape bucket internally; ``traces`` counts those specializations —
-    i.e. actual XLA compiles). ``pins`` keeps identity-hashed plan components
-    alive while this entry can be looked up.
+    Wraps the lowered :class:`~repro.exec.stages.StageGraph`: pure stages
+    carry jitted executables (jit specializes per input shape bucket
+    internally; ``traces`` counts those specializations — i.e. actual XLA
+    compiles). ``pins`` keeps identity-hashed plan components alive while
+    this entry can be looked up.
     """
 
     fingerprint: str
-    stages: list
+    graph: StageGraph
     pins: list = field(default_factory=list)
-    traces: int = 0
+
+    @property
+    def stages(self) -> list:
+        return self.graph.stages
 
     @property
     def n_stages(self) -> int:
-        return len(self.stages)
+        return len(self.graph.stages)
 
     @property
     def is_pure(self) -> bool:
         """One jitted XLA program, no host boundary (MLtoSQL/MLtoDNN output)."""
-        return all(isinstance(s, _PureStage) for s in self.stages)
+        return self.graph.is_pure
 
-    def __call__(
+    @property
+    def traces(self) -> int:
+        """XLA stage tracings attributable to this compiled plan."""
+        return self.graph.traces
+
+    def run(
         self,
         database: dict[str, dict[str, jnp.ndarray]],
         row_valid: Optional[jnp.ndarray] = None,
         params: Optional[dict[str, Any]] = None,
-    ) -> Table:
+        segments: Optional[tuple[np.ndarray, int]] = None,
+        bucketer: Optional[Callable[[int], int]] = None,
+        on_mid_bucket: Optional[Callable[[int, int], None]] = None,
+    ) -> RunResult:
+        """Execute the stage graph; the full-fidelity serving entry point.
+
+        ``segments=(seg_ids, n_requests)`` threads per-row request-segment
+        ids through the graph (coalesced serving); ``bucketer`` re-pads host
+        boundary outputs to shape buckets so post-UDF stages stay warm.
+        """
         env: dict[str, Any] = dict(database)
         if row_valid is not None:
             env[ROW_VALID_KEY] = jnp.asarray(row_valid, dtype=bool)
@@ -318,43 +223,47 @@ class CompiledPlan:
             env[PARAMS_KEY] = {
                 k: jnp.asarray(v, dtype=jnp.float32) for k, v in params.items()
             }
-        state: Optional[State] = None
-        for st in self.stages:
-            if isinstance(st, _PureStage):
-                state = st.fn(env)
-            else:
-                cols, valid = state
-                np_cols = {k: np.asarray(v) for k, v in cols.items()}
-                mask = np.asarray(valid)
-                np_cols = {k: v[mask] for k, v in np_cols.items()}  # compact
-                out = _run_udf(st.udf, np_cols)
-                mid = {k: jnp.asarray(v) for k, v in out.items()}
-                mid["__valid__"] = jnp.ones(
-                    (len(next(iter(out.values()))),), dtype=bool
-                ) if out else jnp.ones((0,), dtype=bool)
-                env = dict(env)
-                env["__mid__"] = mid
-                state = (dict(mid), mid["__valid__"])
-                state[0].pop("__valid__")
-        cols, valid = state
-        return Table(columns=cols, valid=valid)
+        if segments is not None:
+            seg_ids, count = segments
+            # slot count is power-of-two bucketed so segmented aggregates
+            # trace per bucket, not per coalesce width; the real request
+            # count rides in as a runtime scalar
+            ns = seg_bucket(count)
+            env[ROW_SEG_KEY] = jnp.asarray(seg_ids, dtype=jnp.int32)
+            env[SEG_SLOTS_KEY] = jnp.arange(ns, dtype=jnp.int32)
+            env[SEG_COUNT_KEY] = jnp.asarray(count, dtype=jnp.int32)
+        return run_graph(
+            self.graph, env, bucketer=bucketer, on_mid_bucket=on_mid_bucket
+        )
+
+    def __call__(
+        self,
+        database: dict[str, dict[str, jnp.ndarray]],
+        row_valid: Optional[jnp.ndarray] = None,
+        params: Optional[dict[str, Any]] = None,
+    ) -> Table:
+        return self.run(database, row_valid=row_valid, params=params).table
 
 
 def _build_compiled(plan: PhysicalPlan, fingerprint: str, pins: list) -> CompiledPlan:
-    compiled = CompiledPlan(fingerprint=fingerprint, stages=[], pins=pins)
-    for s in _lower(plan):
-        if isinstance(s, _PureStage):
-            def traced(env, _fn=s.fn):
-                # python side effects run at trace time only: this counts
-                # actual XLA compiles (one per new env shape/dtype structure)
-                compiled.traces += 1
-                PLAN_CACHE_STATS.traces += 1
-                return _fn(env)
+    graph = build_stage_graph(plan, pins=pins)
+    for stage in graph.stages:
+        if stage.kind != "pure":
+            continue
 
-            compiled.stages.append(_PureStage(jax.jit(traced)))
-        else:
-            compiled.stages.append(s)
-    return compiled
+        def traced(env, _fn=stage.fn, _stage=stage):
+            # python side effects run at trace time only: this counts
+            # actual XLA compiles (one per new env shape/dtype structure),
+            # attributed both globally and to this specific stage
+            _stage.traces += 1
+            PLAN_CACHE_STATS.traces += 1
+            PLAN_CACHE_STATS.stage_traces[_stage.fingerprint] = (
+                PLAN_CACHE_STATS.stage_traces.get(_stage.fingerprint, 0) + 1
+            )
+            return _fn(env)
+
+        stage.runner = jax.jit(traced)
+    return CompiledPlan(fingerprint=fingerprint, graph=graph, pins=pins)
 
 
 def compile_plan(plan: PhysicalPlan, cache: bool = True) -> CompiledPlan:
@@ -434,15 +343,15 @@ def compile_plan_sharded(
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
-    stages = _lower(plan)
-    assert len(stages) == 1 and isinstance(stages[0], _PureStage), (
+    graph = build_stage_graph(plan)
+    assert len(graph.stages) == 1 and graph.is_pure, (
         "sharded execution requires a host-boundary-free plan"
     )
-    fn = stages[0].fn
+    fn = graph.stages[0].fn
     has_agg = any(isinstance(p, Aggregate) for p in walk_plan(plan))
 
     def body(env):
-        cols, valid = fn(env)
+        cols, valid, _seg = fn(env)
         if has_agg:
             cols = {k: jax.lax.psum(v, axis) for k, v in cols.items()}
             # counts/sums compose additively; mean needs sum/count form —

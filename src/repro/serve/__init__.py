@@ -1,3 +1,4 @@
+from repro.exec.pump import RequestPump
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.query_server import (
     PredictionQueryServer,
@@ -9,6 +10,7 @@ from repro.serve.query_server import (
 
 __all__ = [
     "Request",
+    "RequestPump",
     "ServeEngine",
     "PredictionQueryServer",
     "QueryRequest",

@@ -2,27 +2,32 @@
 
 Raven's premise is that a prediction query is optimized *once* and then served
 at high request rates, yet ``execute_plan`` alone re-derives everything per
-call. ``PredictionQueryServer`` closes that gap:
+call. ``PredictionQueryServer`` closes that gap on top of the StageGraph IR:
 
   * ``register`` runs the :class:`RavenOptimizer` once per (query, stats)
     — structurally identical registrations share the optimized physical plan
-    via the canonical query fingerprint — and compiles the plan into reusable
-    stage executables through the engine's fingerprint-keyed plan cache.
+    via the canonical query fingerprint — and compiles the plan into a
+    reusable stage graph through the engine's fingerprint-keyed plan cache.
   * Incoming batches are padded to a power-of-two row bucket with a validity
-    mask (the engine's filters, joins, and aggregates are mask-aware), so any
-    mix of request sizes hits at most ``log2(max_rows)`` compiled XLA
-    programs per query instead of recompiling per shape.
+    mask at **every pure-stage boundary**: query entry *and* each MLUdf host
+    boundary's exit, so post-UDF stages stop re-tracing on data-dependent
+    shape churn.
   * ``submit``/``flush`` micro-batch: pending requests against the same query
-    coalesce into one padded execution, with per-request result slicing off
-    the shared fact spine.
+    coalesce into one padded execution. Pure row-aligned plans are sliced
+    back by position; host-boundary and aggregate plans thread per-request
+    *segment ids* through the graph (compaction-proof) and split on them.
+  * An optional :class:`~repro.exec.pump.RequestPump` drives flushing against
+    a latency target, so callers need never invoke ``flush`` themselves
+    (``prep.serve(max_latency_ms=...)`` on the session front door).
 
-The server is deliberately synchronous (like :class:`ServeEngine`): ``submit``
-enqueues, ``flush`` drains, so tests and examples drive it deterministically;
-a production loop would wrap it in an async request pump.
+Without a pump the server stays synchronous — ``submit`` enqueues, ``flush``
+drains — so tests and examples can drive it deterministically.
 """
 from __future__ import annotations
 
 import itertools
+import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -32,7 +37,13 @@ import numpy as np
 from repro.core.fingerprint import fingerprint
 from repro.core.ir import PredictionQuery
 from repro.core.optimizer import OptimizationReport, OptimizerOptions, RavenOptimizer
-from repro.errors import check_params
+from repro.errors import (
+    RavenError,
+    StaleQueryError,
+    UnknownQueryError,
+    check_params,
+)
+from repro.exec.pump import RequestPump
 from repro.relational.engine import (
     Aggregate,
     CompiledPlan,
@@ -55,7 +66,7 @@ def row_bucket(n: int, min_bucket: int = 64) -> int:
 
 @dataclass
 class QueryRequest:
-    """One submitted batch; ``result`` is filled by ``flush``."""
+    """One submitted batch; ``result`` is filled by ``flush`` (or the pump)."""
 
     rid: int
     query: str
@@ -63,6 +74,32 @@ class QueryRequest:
     n_rows: int
     result: Optional[dict[str, np.ndarray]] = None
     done: bool = False
+    error: Optional[BaseException] = None  # execution failure, re-raised by wait()
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    _event: threading.Event = field(
+        default_factory=threading.Event, repr=False, compare=False
+    )
+
+    def wait(self, timeout: Optional[float] = None) -> dict[str, np.ndarray]:
+        """Block until this request's result is ready (pump-driven serving)
+        and return it; re-raises the execution error if its batch failed."""
+        if not self._event.wait(timeout):
+            raise RavenError(
+                f"request {self.rid} for query '{self.query}' not served "
+                f"within {timeout}s — is a pump running / was flush() called?"
+            )
+        if self.error is not None:
+            raise RavenError(
+                f"request {self.rid} for query '{self.query}' failed during "
+                f"execution: {self.error}"
+            ) from self.error
+        return self.result
+
+    @property
+    def latency_s(self) -> float:
+        """Submit-to-result wall time (0.0 until served)."""
+        return (self.t_done - self.t_submit) if self.done else 0.0
 
 
 @dataclass
@@ -72,9 +109,13 @@ class ServerStats:
     plan_cache_misses: int = 0
     bucket_hits: int = 0        # executions landing on an already-seen
     bucket_misses: int = 0      # (query, schema, bucket) combination
+    mid_bucket_hits: int = 0    # host-boundary exits landing on an already-
+    mid_bucket_misses: int = 0  # seen (query, stage, bucket) combination
     batches_executed: int = 0
     requests_served: int = 0
     coalesced_requests: int = 0  # requests that shared a batch with others
+    segmented_batches: int = 0   # coalesced executions split by segment ids
+    flushes: int = 0
     rows_in: int = 0
     rows_padded: int = 0
 
@@ -85,6 +126,7 @@ class ServerStats:
 @dataclass
 class RegisteredQuery:
     name: str
+    token: str  # unique per registration: the stale-handle guard key
     query_fingerprint: str
     plan: PhysicalPlan
     report: OptimizationReport
@@ -102,6 +144,14 @@ class RegisteredQuery:
         """XLA stage tracings attributable to this query's compiled plan."""
         return self.compiled.traces
 
+    @property
+    def sliceable(self) -> bool:
+        """Coalesced output rows stay 1:1 aligned with the input spine, so
+        per-request results fall out of positional slicing — no segment ids
+        needed. False once a host boundary (compaction) or an aggregate
+        (folding) breaks the alignment."""
+        return self.compiled.is_pure and not self.has_aggregate
+
 
 class PredictionQueryServer:
     def __init__(
@@ -111,17 +161,27 @@ class PredictionQueryServer:
         *,
         min_bucket: int = 64,
         max_bucket: int = 1 << 20,
+        mid_bucketing: bool = True,
     ):
         self.optimizer = RavenOptimizer(strategy=strategy, options=options)
         self.min_bucket = min_bucket
         self.max_bucket = max_bucket
+        # pad host-boundary outputs to power-of-two buckets before the next
+        # pure stage (False reproduces the old exact-shape post-UDF path —
+        # kept for A/B benchmarks)
+        self.mid_bucketing = mid_bucketing
         self.stats = ServerStats()
         self.queries: dict[str, RegisteredQuery] = {}
         self._optimized: dict[str, tuple[PhysicalPlan, OptimizationReport]] = {}
         self._pins: list[Any] = []  # keeps identity-hashed objects alive
         self._seen_buckets: set[tuple[str, tuple, int]] = set()
+        self._seen_mid_buckets: set[tuple[str, int, int]] = set()
         self._rid = itertools.count()
+        self._reg_serial = itertools.count()
         self._pending: list[QueryRequest] = []
+        self._lock = threading.Lock()        # guards the pending queue
+        self._flush_lock = threading.Lock()  # serializes flush bodies
+        self._pump: Optional[RequestPump] = None
 
     # -- registration --------------------------------------------------------
 
@@ -186,6 +246,11 @@ class PredictionQueryServer:
         }
         reg = RegisteredQuery(
             name=name,
+            # plan fingerprints are deliberately invariant under :param
+            # values (rebinding must not recompile), so a handle guard keyed
+            # on them alone would miss a re-registration that only changed
+            # bound params; the per-registration serial closes that hole
+            token=f"{compiled.fingerprint[:16]}#{next(self._reg_serial)}",
             query_fingerprint=qfp,
             plan=plan,
             report=report,
@@ -212,9 +277,7 @@ class PredictionQueryServer:
         buckets are untouched — the new values simply flow into the next
         execution as runtime inputs (zero new XLA traces).
         """
-        if name not in self.queries:
-            raise KeyError(f"no registered query named '{name}'")
-        reg = self.queries[name]
+        reg = self._registered(name)
         check_params(
             reg.param_names, params, require_all=False, context=f"query '{name}'"
         )
@@ -223,11 +286,65 @@ class PredictionQueryServer:
         )
         return reg
 
+    def _registered(self, name: str) -> RegisteredQuery:
+        reg = self.queries.get(name)
+        if reg is None:
+            raise UnknownQueryError(
+                f"no query registered under '{name}' — registered: "
+                f"{sorted(self.queries) or '(none)'}"
+            )
+        return reg
+
+    # -- the pump ------------------------------------------------------------
+
+    def start_pump(self, max_latency_ms: float = 5.0) -> RequestPump:
+        """Start (or retune) the background pump: submitted requests flush
+        automatically once the oldest has waited ``max_latency_ms``."""
+        with self._lock:
+            if self._pump is None:
+                self._pump = RequestPump(
+                    self.flush, max_latency_ms=max_latency_ms
+                )
+                self._pump.start()
+            else:
+                # served queries share one pump: the tightest target wins
+                self._pump.max_latency_ms = min(
+                    self._pump.max_latency_ms, float(max_latency_ms)
+                )
+            return self._pump
+
+    def stop_pump(self) -> None:
+        with self._lock:
+            pump, self._pump = self._pump, None
+        if pump is not None:
+            pump.stop()  # outside the lock: stop() drains via flush()
+
+    @property
+    def pump(self) -> Optional[RequestPump]:
+        return self._pump
+
     # -- request lifecycle ---------------------------------------------------
 
-    def submit(self, name: str, columns: dict[str, np.ndarray]) -> QueryRequest:
-        """Enqueue one batch of fact rows for ``name``; run via ``flush``."""
-        reg = self.queries[name]
+    def submit(
+        self,
+        name: str,
+        columns: dict[str, np.ndarray],
+        *,
+        expect_token: Optional[str] = None,
+    ) -> QueryRequest:
+        """Enqueue one batch of fact rows for ``name``; run via ``flush`` (or
+        the pump). ``expect_token`` guards against serving through a stale
+        handle: if ``name`` has been re-registered since the caller's
+        ``serve()`` — different plan *or* different bound params — the
+        submit is rejected instead of silently answering the wrong query."""
+        reg = self._registered(name)
+        if expect_token is not None and expect_token != reg.token:
+            raise StaleQueryError(
+                f"query '{name}' was re-registered since this handle served "
+                f"it (registration {reg.token} != handle's "
+                f"{expect_token}) — re-serve the prepared query to refresh "
+                f"the handle"
+            )
         missing = [c for c in reg.scan_columns if c not in columns]
         if missing:
             raise KeyError(f"batch for '{name}' missing columns {missing}")
@@ -246,30 +363,50 @@ class PredictionQueryServer:
         n = lengths.pop() if lengths else 0
         req = QueryRequest(
             rid=next(self._rid), query=name, columns=cols, n_rows=n,
+            t_submit=time.perf_counter(),
         )
-        self._pending.append(req)
-        self.stats.rows_in += n
+        with self._lock:
+            self._pending.append(req)
+            self.stats.rows_in += n
+            pump = self._pump  # racing stop_pump(): read once, under the lock
+        if pump is not None:
+            pump.notify(req.t_submit)
         return req
 
     def flush(self) -> list[QueryRequest]:
         """Execute all pending requests (coalescing per query) and return
-        them with results filled."""
-        pending, self._pending = self._pending, []
-        by_query: dict[str, list[QueryRequest]] = {}
-        for r in pending:
-            by_query.setdefault(r.query, []).append(r)
-        for name, reqs in by_query.items():
-            reg = self.queries[name]
-            if reg.compiled.is_pure and not reg.has_aggregate:
+        them with results filled. Safe to call from any thread; concurrent
+        flushes serialize, and an empty queue is a no-op."""
+        with self._flush_lock:
+            with self._lock:
+                pending, self._pending = self._pending, []
+            if not pending:
+                return []
+            # account before running: waiters wake the instant their request
+            # finishes, and must observe consistent flush counters
+            self.stats.requests_served += len(pending)
+            self.stats.flushes += 1
+            by_query: dict[str, list[QueryRequest]] = {}
+            for r in pending:
+                by_query.setdefault(r.query, []).append(r)
+            first_error: Optional[BaseException] = None
+            for name, reqs in by_query.items():
+                reg = self.queries[name]
                 for group in self._coalesce(reqs):
-                    self._run_group(reg, group)
-            else:
-                # aggregates fold the whole spine into one row, and host
-                # (UDF) boundaries compact data-dependently: neither can be
-                # sliced back per request, so these run one batch at a time
-                for r in reqs:
-                    self._run_group(reg, [r])
-        self.stats.requests_served += len(pending)
+                    try:
+                        self._run_group(reg, group)
+                    except BaseException as e:
+                        # contain the blast radius: fail this group's
+                        # requests (waiters re-raise from wait()) but keep
+                        # serving the other groups in this flush
+                        for r in group:
+                            if not r.done:
+                                r.error = e
+                                r._event.set()
+                        if first_error is None:
+                            first_error = e
+            if first_error is not None:
+                raise first_error
         return pending
 
     def execute(
@@ -278,7 +415,9 @@ class PredictionQueryServer:
         """One-shot convenience: submit + flush + return the result."""
         req = self.submit(name, columns)
         self.flush()
-        return req.result
+        # under a pump another thread's flush may have raced ours and taken
+        # this request; either way the result is ready once both finish
+        return req.wait(timeout=60.0)
 
     # -- internals -----------------------------------------------------------
 
@@ -298,9 +437,13 @@ class PredictionQueryServer:
         return groups
 
     def _execute_padded(
-        self, reg: RegisteredQuery, fact_np: dict[str, np.ndarray], n: int
-    ) -> "Table":
-        """Pad ``n`` fact rows to their bucket and run the compiled plan."""
+        self,
+        reg: RegisteredQuery,
+        fact_np: dict[str, np.ndarray],
+        n: int,
+        segments: Optional[tuple[np.ndarray, int]] = None,
+    ):
+        """Pad ``n`` fact rows to their bucket and run the stage graph."""
         bucket = row_bucket(n, self.min_bucket)
         fact: dict[str, jnp.ndarray] = {}
         for c in reg.scan_columns:
@@ -310,6 +453,13 @@ class PredictionQueryServer:
                 col = np.concatenate([col, pad])
             fact[c] = jnp.asarray(col)
         row_valid = np.arange(bucket) < n
+        if segments is not None:
+            ids, k = segments
+            if len(ids) < bucket:
+                ids = np.concatenate(
+                    [ids, np.zeros(bucket - len(ids), dtype=np.int32)]
+                )
+            segments = (ids, k)
 
         schema = tuple((c, str(reg.fact_dtypes[c])) for c in reg.scan_columns)
         key = (reg.compiled.fingerprint, schema, bucket)
@@ -319,19 +469,39 @@ class PredictionQueryServer:
             self.stats.bucket_misses += 1
             self._seen_buckets.add(key)
 
+        def track_mid(stage_index: int, b: int) -> None:
+            mid_key = (reg.compiled.fingerprint, stage_index, b)
+            if mid_key in self._seen_mid_buckets:
+                self.stats.mid_bucket_hits += 1
+            else:
+                self.stats.mid_bucket_misses += 1
+                self._seen_mid_buckets.add(mid_key)
+
         db = dict(reg.database)
         db[reg.fact_table] = fact
-        table = reg.compiled(
-            db, row_valid=jnp.asarray(row_valid),
+        res = reg.compiled.run(
+            db,
+            row_valid=jnp.asarray(row_valid),
             params=reg.params if reg.param_names else None,
+            segments=segments,
+            bucketer=(
+                (lambda m: row_bucket(m, self.min_bucket))
+                if self.mid_bucketing else None
+            ),
+            on_mid_bucket=track_mid,
         )
         self.stats.batches_executed += 1
         self.stats.rows_padded += bucket - n
-        return table
+        return res
+
+    def _finish(self, req: QueryRequest) -> None:
+        req.done = True
+        req.t_done = time.perf_counter()
+        req._event.set()
 
     def _run_group(self, reg: RegisteredQuery, group: list[QueryRequest]) -> None:
         n = sum(r.n_rows for r in group)
-        if reg.compiled.is_pure and not reg.has_aggregate:
+        if reg.sliceable:
             cat = {
                 c: np.concatenate([r.columns[c] for r in group])
                 if len(group) > 1 else group[0].columns[c]
@@ -345,7 +515,7 @@ class PredictionQueryServer:
             for off in range(0, max(n, 1), self.max_bucket):
                 span = min(self.max_bucket, n - off) if n else 0
                 chunk = {c: v[off:off + span] for c, v in cat.items()}
-                table = self._execute_padded(reg, chunk, span)
+                table = self._execute_padded(reg, chunk, span).table
                 valid = np.asarray(table.valid)[:span]
                 out_valid.append(valid)
                 for k, v in table.columns.items():
@@ -361,16 +531,44 @@ class PredictionQueryServer:
                 sl = slice(off, off + r.n_rows)
                 m = valid[sl]
                 r.result = {k: v[sl][m] for k, v in cols.items()}
-                r.done = True
+                self._finish(r)
                 off += r.n_rows
-        else:
-            # aggregates fold the spine into one row and UDF boundaries
-            # compact data-dependently: no chunking, whole batch at once
-            assert len(group) == 1
+        elif len(group) == 1:
+            # a lone host-boundary/aggregate request: no splitting needed
             req = group[0]
-            table = self._execute_padded(reg, req.columns, req.n_rows)
-            req.result = table.to_numpy(compact=True)
-            req.done = True
+            res = self._execute_padded(reg, req.columns, req.n_rows)
+            req.result = res.table.to_numpy(compact=True)
+            self._finish(req)
+        else:
+            # host boundaries compact data-dependently and aggregates fold
+            # the spine, so positional slicing is impossible: thread
+            # per-request segment ids through the stage graph instead
+            cat = {
+                c: np.concatenate([r.columns[c] for r in group])
+                for c in reg.scan_columns
+            }
+            seg_ids = np.repeat(
+                np.arange(len(group), dtype=np.int32),
+                [r.n_rows for r in group],
+            )
+            res = self._execute_padded(
+                reg, cat, n, segments=(seg_ids, len(group))
+            )
+            self.stats.coalesced_requests += len(group)
+            self.stats.segmented_batches += 1
+            cols = {k: np.asarray(v) for k, v in res.table.columns.items()}
+            valid = np.asarray(res.table.valid)
+            if reg.has_aggregate:
+                # segmented fold: output row i belongs to request i
+                for i, r in enumerate(group):
+                    r.result = {k: v[i:i + 1] for k, v in cols.items()}
+                    self._finish(r)
+            else:
+                seg = np.asarray(res.seg)
+                for i, r in enumerate(group):
+                    m = valid & (seg == i)
+                    r.result = {k: v[m] for k, v in cols.items()}
+                    self._finish(r)
 
     def recompiles(self) -> int:
         """Total XLA stage compiles across all registered queries."""

@@ -17,16 +17,18 @@ layers::
     q = db.table("patients").predict("risk").where("score >= :t")
 
     prep = q.prepare(transform="sql", params={"t": 0.6})
-    print(prep.explain())        # logical -> physical tree, runtimes, notes
+    print(prep.explain())        # logical -> physical -> stage graph
     out = prep(batch)            # one-shot execution
-    prep.serve()                 # register into the session's server
-    r = prep.submit(batch)       # bucketed, cached hot path ...
-    db.flush()                   # ... micro-batched with everything pending
+    prep.serve(max_latency_ms=5) # register + background request pump
+    r = prep.submit(batch)       # bucketed, coalesced hot path ...
+    out = r.wait()               # ... flushed by the pump, no db.flush()
     prep.bind(t=0.9)             # re-bind: same plan, zero new XLA traces
+    db.cache_stats()             # plan-cache + per-stage trace accounting
 
 ``:param`` placeholders lower to canonical ``Param`` slots that hash by name,
 so a prepared plan re-binds thresholds without re-optimizing, re-compiling,
-or changing any fingerprint the serving layer keys on.
+or changing any fingerprint the serving layer keys on. ``serve()`` without a
+latency target keeps the synchronous submit/``db.flush()`` protocol.
 """
 from __future__ import annotations
 
@@ -172,6 +174,34 @@ class Session:
         """Execute everything submitted to served queries (micro-batched)."""
         return self._server.flush() if self._server is not None else []
 
+    def cache_stats(self) -> dict:
+        """Compiled-plan cache + serving accounting, in one snapshot.
+
+        Returns the engine's :class:`CacheStats` snapshot (``hits``/
+        ``misses``/``traces`` plus per-stage ``stage_traces`` keyed by stage
+        fingerprint) merged with the session server's :class:`ServerStats`
+        under ``"server"`` — so benchmarks and tests can assert zero-retrace
+        warm paths without reaching into module globals.
+        """
+        from repro.relational.engine import PLAN_CACHE_STATS
+
+        out = PLAN_CACHE_STATS.snapshot()
+        if self._server is not None:
+            out["server"] = self._server.stats.snapshot()
+            out["server"]["recompiles"] = self._server.recompiles()
+        return out
+
+    def close(self) -> None:
+        """Stop the background request pump (drains pending requests)."""
+        if self._server is not None:
+            self._server.stop_pump()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def _next_name(self) -> str:
         return f"q{next(self._names)}"
 
@@ -312,6 +342,7 @@ class PreparedQuery:
         self.compiled = compile_plan(plan)
         self.param_names = query.param_names()
         self._serve_name: Optional[str] = None
+        self._serve_token: Optional[str] = None
         self._server: Optional[PredictionQueryServer] = None
 
     @property
@@ -383,30 +414,46 @@ class PreparedQuery:
         self,
         name: Optional[str] = None,
         server: Optional[PredictionQueryServer] = None,
+        *,
+        max_latency_ms: Optional[float] = None,
     ) -> "PreparedQuery":
-        """Register into the session-owned server (bucketed, micro-batched
-        hot path): afterwards ``prep.submit(batch)`` enqueues and
-        ``db.flush()`` drains."""
+        """Register into the session-owned server (bucketed, coalesced hot
+        path): afterwards ``prep.submit(batch)`` enqueues.
+
+        With ``max_latency_ms`` a background pump flushes automatically once
+        the oldest pending request has waited that long — results arrive via
+        ``request.wait()`` with no ``db.flush()`` required. Without it the
+        protocol stays synchronous (caller drives ``db.flush()``).
+        """
         session = self.query.session
         srv = server if server is not None else session.server
         self._serve_name = name or session._next_name()
-        srv.register(
+        reg = srv.register(
             self._serve_name, self.query.ir, session.tables,
             fact_table=self._fact_table(),
             optimized=(self.plan, self.report),
             params=self.params,
         )
+        self._serve_token = reg.token
         self._server = srv
+        if max_latency_ms is not None:
+            srv.start_pump(max_latency_ms)
         return self
 
     def submit(self, columns: dict[str, np.ndarray]) -> QueryRequest:
         """Enqueue one fact-row batch (requires :meth:`serve` first); results
-        land on the returned request after ``db.flush()``."""
+        land on the returned request after ``db.flush()`` — or, when the
+        query is served with a latency target, after the pump's next flush
+        (``request.wait()``). Submitting through a handle whose serve name
+        was since re-registered (different plan or bound params) raises
+        :class:`~repro.errors.StaleQueryError`."""
         if self._server is None:
             raise RavenError(
                 "query is not served — call .serve() before .submit()"
             )
-        return self._server.submit(self._serve_name, columns)
+        return self._server.submit(
+            self._serve_name, columns, expect_token=self._serve_token,
+        )
 
     # -- introspection -------------------------------------------------------
 
@@ -441,10 +488,14 @@ class PreparedQuery:
             lines.append("-- optimizer notes " + "-" * 36)
             for n in self.report.notes:
                 lines.append(f"* {n}")
-        stages = "1 fused XLA program" if self.compiled.is_pure else (
-            f"{self.compiled.n_stages} stages (host boundary present)"
+        graph = self.compiled.graph
+        summary = "1 fused XLA program" if self.compiled.is_pure else (
+            f"{self.compiled.n_stages} stages, "
+            f"{graph.n_host_boundaries} host boundary(ies)"
         )
-        lines.append(f"-- execution: {stages}")
+        lines.append(f"-- stage graph: {summary} " + "-" * 20)
+        for st in graph.stages:
+            lines.append(st.describe())
         return "\n".join(lines)
 
     def __repr__(self) -> str:

@@ -32,6 +32,9 @@ class TensorCompilation:
     fn: Callable[[dict[str, jnp.ndarray]], dict[str, jnp.ndarray]]
     strategy: dict[str, str]  # model output name -> chosen tree strategy
     n_ops: int
+    # columns the fused program consumes — surfaced so the StageGraph can
+    # infer schema through an otherwise-opaque TensorOp closure
+    input_names: tuple[str, ...] = ()
 
 
 def _choose_tree_strategy(ens: TreeEnsemble) -> str:
@@ -167,4 +170,8 @@ def compile_pipeline_tensor(
     fn.__fingerprint_token__ = _fingerprint(
         "tensor_compile", pipe, strategy, use_pallas, sorted(chosen.items())
     )
-    return TensorCompilation(fn=fn, strategy=chosen, n_ops=len(steps))
+    fn.__input_names__ = tuple(input_names)
+    return TensorCompilation(
+        fn=fn, strategy=chosen, n_ops=len(steps),
+        input_names=tuple(input_names),
+    )

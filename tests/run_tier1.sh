@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the fast suite, pinned to the in-repo sources.
+#
+#   tests/run_tier1.sh [extra pytest args]
+#
+# Excludes @pytest.mark.slow (corpus/strategy training — minutes of model
+# fitting) so the gate runs in minutes on every PR; the full suite is just
+# `python -m pytest` without the marker filter.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q -m "not slow" "$@"

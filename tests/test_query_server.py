@@ -206,7 +206,8 @@ def test_server_microbatch_matches_per_request(hospital, dt_query):
 
 
 def test_server_aggregate_and_udf_paths(hospital, hospital_dt):
-    # aggregates and host-boundary (UDF) plans skip coalescing but still serve
+    # aggregates and host-boundary (UDF) plans coalesce via segment ids:
+    # one padded execution per flush, split back per request
     agg_q = _query(hospital, hospital_dt, SQL_AGG)
     srv = PredictionQueryServer(options=OptimizerOptions(transform="sql"))
     srv.register("agg", agg_q, hospital.tables)
@@ -223,13 +224,40 @@ def test_server_aggregate_and_udf_paths(hospital, hospital_dt):
     for k in ref:
         np.testing.assert_allclose(agg[k], ref[k], rtol=1e-5)
 
-    r1, r2 = srv_udf.submit("udf", rows), srv_udf.submit("udf", _batch(77, 9))
+    batch2 = _batch(77, 9)
+    r1, r2 = srv_udf.submit("udf", rows), srv_udf.submit("udf", batch2)
     srv_udf.flush()
-    assert srv_udf.stats.batches_executed == 2  # no cross-request coalescing
+    assert srv_udf.stats.batches_executed == 1  # coalesced across the boundary
+    assert srv_udf.stats.segmented_batches == 1
+    assert srv_udf.stats.coalesced_requests == 2
     ref = execute_plan(_optimize(udf_q, transform="none"), tables).to_numpy()
     for k in ref:
         np.testing.assert_allclose(r1.result[k], ref[k], rtol=1e-5, atol=1e-6)
-    assert r2.done and len(r2.result["score"]) <= 77
+    tables["patients"] = batch2
+    ref2 = execute_plan(_optimize(udf_q, transform="none"), tables).to_numpy()
+    assert r2.done
+    for k in ref2:
+        np.testing.assert_allclose(r2.result[k], ref2[k], rtol=1e-5, atol=1e-6)
+
+
+def test_server_coalesces_aggregates_with_segment_ids(hospital, hospital_dt):
+    # two aggregate requests share one segmented execution, each getting its
+    # own fold — bitwise-identical to serving them alone
+    agg_q = _query(hospital, hospital_dt, SQL_AGG)
+    srv = PredictionQueryServer(options=OptimizerOptions(transform="sql"))
+    srv.register("agg", agg_q, hospital.tables)
+    b1, b2 = _batch(150, seed=21), _batch(90, seed=22)
+    r1, r2 = srv.submit("agg", b1), srv.submit("agg", b2)
+    srv.flush()
+    assert srv.stats.batches_executed == 1
+    assert srv.stats.segmented_batches == 1
+    solo = PredictionQueryServer(options=OptimizerOptions(transform="sql"))
+    solo.register("agg", agg_q, hospital.tables)
+    for req, b in ((r1, b1), (r2, b2)):
+        ref = solo.execute("agg", b)
+        for k in ref:
+            assert req.result[k].shape == ref[k].shape
+            np.testing.assert_allclose(req.result[k], ref[k], rtol=1e-4)
 
 
 def test_server_validates_batch_schema(hospital, dt_query):

@@ -1,0 +1,293 @@
+"""StageGraph IR + end-to-end bucketed, coalesced, async serving.
+
+Covers the stage-IR contract (schemas, chained per-stage fingerprints), the
+post-UDF bucketing warm path (zero new XLA traces on shape churn, asserted
+through ``db.cache_stats()``), pump-driven flushing without ``db.flush()``,
+cross-request coalescing under concurrency, typed submit errors, and the
+validity-mask property test across host boundaries.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+import repro as raven
+from repro.core.ir import TableStats
+from repro.core.optimizer import OptimizerOptions, RavenOptimizer
+from repro.data.datasets import make_hospital
+from repro.errors import StaleQueryError, UnknownQueryError
+from repro.exec.stages import build_stage_graph, plan_segments, seg_bucket
+from repro.relational.engine import (
+    MLUdf,
+    clear_plan_cache,
+    execute_plan,
+    walk_plan,
+)
+from repro.serve import PredictionQueryServer
+from repro.sql.parser import parse_prediction_query
+
+SQL_STAR = "SELECT * FROM PREDICT(model='m', data=patients) AS p WHERE score >= 0.6"
+
+
+def _query(ds, pipe, sql=SQL_STAR):
+    stats = {t: TableStats.of(cols) for t, cols in ds.tables.items()}
+    return parse_prediction_query(sql, {"m": pipe}, ds.tables, stats=stats)
+
+
+def _optimize(query, **opts):
+    return RavenOptimizer(options=OptimizerOptions(**opts)).optimize(query)
+
+
+def _batch(n, seed):
+    return make_hospital(n, seed=seed).tables["patients"]
+
+
+@pytest.fixture()
+def udf_db(hospital, hospital_dt):
+    db = raven.connect(hospital.tables, stats="auto")
+    db.register_model("m", hospital_dt)
+    yield db
+    db.close()
+
+
+# ---------------------------------------------------------------------------
+# The IR itself
+# ---------------------------------------------------------------------------
+
+
+def test_stage_graph_structure_and_schema(hospital, hospital_dt):
+    plan, _ = _optimize(_query(hospital, hospital_dt), transform="none")
+    graph = build_stage_graph(plan)
+    kinds = [s.kind for s in graph.stages]
+    assert kinds == ["pure", "host", "pure"]
+    scan, udf, post = graph.stages
+    assert "patients" in scan.reads
+    assert scan.in_columns is None
+    assert udf.in_columns == tuple(udf.udf.pipeline.input_names())
+    assert "score" in udf.out_columns and "pred" in udf.out_columns
+    # the post-UDF filter passes every boundary column through
+    assert set(post.out_columns) == set(udf.out_columns)
+    assert not graph.is_pure and graph.needs_segments
+    assert graph.n_host_boundaries == 1
+
+
+def test_stage_fingerprints_chain_and_share_prefixes(hospital, hospital_dt):
+    star, _ = _optimize(_query(hospital, hospital_dt), transform="none")
+    agg, _ = _optimize(
+        _query(
+            hospital, hospital_dt,
+            "SELECT COUNT(*) FROM PREDICT(model='m', data=patients) AS p "
+            "WHERE score >= 0.6",
+        ),
+        transform="none",
+    )
+    g_star, g_agg = build_stage_graph(star), build_stage_graph(agg)
+    # same plan -> identical per-stage fingerprints across graph objects
+    again = build_stage_graph(_optimize(_query(hospital, hospital_dt), transform="none")[0])
+    assert [s.fingerprint for s in g_star.stages] == [
+        s.fingerprint for s in again.stages
+    ]
+    # different plans sharing a physical prefix share those stage hashes —
+    # the property per-stage artifact caching keys on
+    assert g_star.stages[0].fingerprint == g_agg.stages[0].fingerprint
+    assert g_star.stages[1].fingerprint == g_agg.stages[1].fingerprint
+    assert g_star.stages[2].fingerprint != g_agg.stages[2].fingerprint
+
+
+def test_optimizer_annotates_stage_boundaries(hospital, hospital_dt):
+    from repro.exec.stages import describe_segments
+
+    plan, report = _optimize(_query(hospital, hospital_dt), transform="none")
+    assert report.stages == describe_segments(plan)
+    assert len(report.stages) == len(plan_segments(plan)) == 3
+    assert report.stages[0].startswith("pure: Scan[patients]")
+    assert report.stages[1].startswith("host: MLUdf")
+    assert any("host boundary" in n for n in report.notes)
+    _, pure_report = _optimize(_query(hospital, hospital_dt), transform="sql")
+    assert len(pure_report.stages) == 1
+
+
+def test_seg_bucket():
+    assert seg_bucket(1) == 4
+    assert seg_bucket(4) == 4
+    assert seg_bucket(5) == 8
+    assert seg_bucket(100) == 128
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: post-UDF bucketing keeps warm requests trace-free
+# ---------------------------------------------------------------------------
+
+
+def test_udf_plan_zero_traces_warm_across_batch_sizes(udf_db):
+    clear_plan_cache()
+    db = udf_db
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+        "WHERE score >= 0.6"
+    ).prepare(transform="none").serve(name="udf")
+    assert any(isinstance(p, MLUdf) for p in walk_plan(prep.plan))
+    prep.submit(_batch(100, seed=1))
+    db.flush()  # warm the 128-row bucket end to end (entry + post-UDF)
+    warm = db.cache_stats()
+    assert warm["traces"] >= 2  # both pure stages traced at least once
+    for i, n in enumerate((65, 128, 80, 127)):  # all land in bucket 128
+        req = prep.submit(_batch(n, seed=30 + i))
+        db.flush()
+        assert req.done
+    stats = db.cache_stats()
+    assert stats["traces"] == warm["traces"]  # zero new XLA traces, any stage
+    assert stats["stage_traces"] == warm["stage_traces"]
+    assert stats["server"]["mid_bucket_hits"] >= 4
+
+
+def test_padded_udf_serving_matches_execute_plan(hospital, hospital_dt, udf_db):
+    db = udf_db
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+        "WHERE score >= 0.6"
+    ).prepare(transform="none").serve(name="udf")
+    rows = _batch(333, seed=5)
+    req = prep.submit(rows)
+    db.flush()
+    tables = {t: dict(cols) for t, cols in hospital.tables.items()}
+    tables["patients"] = rows
+    plan, _ = _optimize(_query(hospital, hospital_dt), transform="none")
+    ref = execute_plan(plan, tables).to_numpy()
+    assert set(ref) <= set(req.result)
+    for k in ref:
+        np.testing.assert_allclose(req.result[k], ref[k], rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: pump-driven serving, no caller flush
+# ---------------------------------------------------------------------------
+
+
+def test_pump_serves_without_caller_flush(udf_db):
+    db = udf_db
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+        "WHERE score >= 0.6"
+    ).prepare(transform="none").serve(name="udf", max_latency_ms=10)
+    req = prep.submit(_batch(120, seed=3))
+    out = req.wait(timeout=30.0)  # no db.flush() anywhere
+    assert req.done and len(out["score"]) <= 120
+    assert db.server.pump is not None and db.server.pump.flushes >= 1
+
+
+def test_pump_coalesces_concurrent_submitters(udf_db):
+    db = udf_db
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+        "WHERE score >= 0.6"
+    ).prepare(transform="none").serve(name="udf", max_latency_ms=150)
+    # warm (and drain) so the measured flush starts from a quiet server
+    prep.submit(_batch(64, seed=9)).wait(timeout=30.0)
+    flushes_before = db.server.stats.flushes
+    batches_before = db.server.stats.batches_executed
+    batches = [_batch(100, seed=40), _batch(70, seed=41)]
+    reqs: list = [None, None]
+    barrier = threading.Barrier(2)
+
+    def submitter(i):
+        barrier.wait()
+        reqs[i] = prep.submit(batches[i])
+
+    threads = [threading.Thread(target=submitter, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    outs = [r.wait(timeout=30.0) for r in reqs]
+    # both submits landed inside one latency window: one flush, one
+    # coalesced execution, correct per-request row splits
+    assert db.server.stats.flushes == flushes_before + 1
+    assert db.server.stats.batches_executed == batches_before + 1
+    assert db.server.stats.coalesced_requests >= 2
+    solo = PredictionQueryServer(options=OptimizerOptions(transform="none"))
+    solo.register("udf", db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+        "WHERE score >= 0.6"
+    ).ir, db.tables)
+    for out, b in zip(outs, batches):
+        ref = solo.execute("udf", b)
+        for k in ref:
+            np.testing.assert_allclose(out[k], ref[k], rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Typed submit errors
+# ---------------------------------------------------------------------------
+
+
+def test_submit_unknown_query_raises_typed_error(udf_db):
+    with pytest.raises(UnknownQueryError, match="nope"):
+        udf_db.server.submit("nope", {"age": np.zeros(4)})
+    with pytest.raises(UnknownQueryError):
+        udf_db.server.rebind("nope", {"t": 0.5})
+
+
+def test_submit_stale_fingerprint_raises_typed_error(udf_db):
+    db = udf_db
+    prep_a = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= 0.6"
+    ).prepare(transform="sql").serve(name="risk")
+    # re-register a *different* plan under the same serve name
+    db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= 0.9"
+    ).prepare(transform="sql").serve(name="risk")
+    with pytest.raises(StaleQueryError, match="re-registered"):
+        prep_a.submit(_batch(32, seed=2))
+
+
+def test_submit_stale_params_raises_typed_error(udf_db):
+    # plan fingerprints are param-invariant by design, so the guard must
+    # also catch a re-registration that only changed the bound values
+    db = udf_db
+    sql = "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= :t"
+    prep_a = db.sql(sql).prepare(
+        transform="sql", params={"t": 0.6}
+    ).serve(name="risk2")
+    db.sql(sql).prepare(transform="sql", params={"t": 0.9}).serve(name="risk2")
+    with pytest.raises(StaleQueryError, match="re-registered"):
+        prep_a.submit(_batch(32, seed=2))
+
+
+def test_flush_failure_is_contained_and_pump_survives(udf_db):
+    # one bad batch must neither strand its waiters nor kill the pump
+    db = udf_db
+    sql = "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= 0.6"
+    prep = db.sql(sql).prepare(transform="none").serve(
+        name="udf", max_latency_ms=10,
+    )
+    bad = prep.submit(_batch(50, seed=1))
+    # poison the enqueued batch past submit-time validation
+    bad.columns["age"] = np.array(["x"] * 50, dtype=object)
+    with pytest.raises(raven.RavenError, match="failed during execution"):
+        bad.wait(timeout=30.0)
+    assert bad.error is not None and not bad.done
+    assert db.server.pump.running  # the pump thread survived the failure
+    ok = prep.submit(_batch(40, seed=2))
+    out = ok.wait(timeout=30.0)  # serving continues, no db.flush() anywhere
+    assert ok.done and len(out["score"]) <= 40
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN renders the stage graph
+# ---------------------------------------------------------------------------
+
+
+def test_explain_renders_stage_graph(udf_db):
+    prep = udf_db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) WHERE score >= 0.6"
+    ).prepare(transform="none")
+    prep(_batch(64, seed=1))  # give the stages runtimes
+    text = prep.explain()
+    assert "stage graph" in text
+    assert "host" in text and "MLUdf" in text
+    for st_ in prep.compiled.stages:
+        assert st_.fingerprint[:12] in text  # per-stage fingerprints shown
+    assert "avg=" in text and "traces=" in text  # per-stage runtimes

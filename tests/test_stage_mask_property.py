@@ -1,0 +1,65 @@
+"""Hypothesis property: validity-mask correctness across host boundaries.
+
+Padded, bucketed, stage-by-stage serving of a Join → Predict(UDF) → Filter
+plan must be row-for-row equal to unpadded ``execute_plan`` — for any batch
+size (hence any entry/mid bucket padding) and any row sample. This is the
+invariant the whole bucketed serving layer rests on: pad rows are carried as
+``valid=False`` through joins, the host boundary's compaction, the post-UDF
+re-padding, and the final filter, and never leak into results.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.ir import TableStats
+from repro.core.optimizer import OptimizerOptions, RavenOptimizer
+from repro.data.datasets import make_expedia
+from repro.relational.engine import MLUdf, execute_plan, walk_plan
+from repro.serve import PredictionQueryServer
+from repro.sql.parser import parse_prediction_query
+from tests.conftest import train_pipeline
+
+
+@pytest.fixture(scope="module")
+def expedia_served():
+    ds = make_expedia(1024, seed=2)
+    pipe = train_pipeline(ds, "dt")
+    query = parse_prediction_query(
+        "SELECT * FROM PREDICT(model='m', data=searches "
+        "JOIN hotels ON hotel_id = hotel_id "
+        "JOIN destinations ON dest_id = dest_id) AS p "
+        "WHERE score >= 0.5",
+        {"m": pipe}, ds.tables,
+        stats={t: TableStats.of(cols) for t, cols in ds.tables.items()},
+    )
+    plan, _ = RavenOptimizer(
+        options=OptimizerOptions(transform="none")
+    ).optimize(query)
+    assert any(isinstance(p, MLUdf) for p in walk_plan(plan))
+    srv = PredictionQueryServer(
+        options=OptimizerOptions(transform="none"), min_bucket=16,
+    )
+    srv.register("q", query, ds.tables)
+    return ds, plan, srv
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(min_value=1, max_value=400), seed=st.integers(0, 2**16))
+def test_masked_bucketed_join_udf_filter_equals_unpadded(expedia_served, n, seed):
+    ds, plan, srv = expedia_served
+    rng = np.random.default_rng(seed)
+    base = ds.tables["searches"]
+    idx = rng.integers(0, len(next(iter(base.values()))), size=n)
+    rows = {c: np.asarray(v)[idx] for c, v in base.items()}
+    got = srv.execute("q", rows)
+    tables = {t: dict(cols) for t, cols in ds.tables.items()}
+    tables["searches"] = rows
+    ref = execute_plan(plan, tables).to_numpy()
+    assert set(ref) <= set(got)
+    for k in ref:
+        assert got[k].shape == ref[k].shape  # row-for-row, same compaction
+        np.testing.assert_allclose(got[k], ref[k], rtol=1e-5, atol=1e-6)

@@ -4,6 +4,10 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
+# building the corpus trains + measures 24 pipelines across all three
+# runtimes — minutes of work, excluded from the tier-1 gate (-m "not slow")
+pytestmark = pytest.mark.slow
+
 from repro.core.corpus import build_corpus
 from repro.core.strategies import (
     ClassificationStrategy,
