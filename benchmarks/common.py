@@ -16,7 +16,7 @@ from repro.ml import (
     RandomForestClassifier,
     fit_pipeline,
 )
-from repro.relational.engine import compile_plan, execute_plan
+from repro.relational.engine import compile_plan
 from repro.sql.parser import parse_prediction_query
 
 

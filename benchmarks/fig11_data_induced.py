@@ -9,7 +9,6 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import NOOPT, build_query, make_dataset, run_variant, train_model
-from repro.core.optimizer import OptimizerOptions, RavenOptimizer
 from repro.core.rules.data_induced import apply_data_induced
 
 

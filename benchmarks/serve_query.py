@@ -23,14 +23,30 @@ Part 2 — multi-stage (MLUdf host-boundary) plan, the StageGraph payoff:
   pump    — same, flushed by the background pump (prep.serve(
             max_latency_ms=...)) with per-request p50/p99 latency.
 
+Part 3 — cold-process A/B, the artifact-store payoff:
+
+  each leg spawns a FRESH interpreter (``--cold-child``) that connects,
+  prepares, serves, and submits a fixed bucket ladder, timing prepare +
+  first-flush — the cold-start cost a restarted serving process pays.
+  ``nocache`` runs without a cache_dir; ``cold`` populates a fresh one
+  (optimizer output + AOT-exported stage programs land on disk); ``warm``
+  reuses it: the optimizer is skipped and every bucket deserializes with
+  zero new XLA traces.
+
 Reports throughput (rows/s), XLA recompile counts, per-stage timings, and
 request-latency percentiles. Headlines: served/percall >= 5x on the pure
-plan, staged/postudf >= 2x on the multi-stage plan.
+plan, staged/postudf >= 2x on the multi-stage plan, warm cold-start traces
+== 0.
 
-    PYTHONPATH=src:. python benchmarks/serve_query.py [--quick]
+    PYTHONPATH=src:. python benchmarks/serve_query.py [--quick | --smoke]
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import numpy as np
@@ -198,6 +214,79 @@ def run_multistage(db, sql, batches, total_rows):
     }
 
 
+def _cold_child(pipe_path: str, cache_dir: str) -> None:
+    """One fresh-interpreter serving cold start (invoked via --cold-child).
+
+    Times connect+prepare and the first flush of a fixed bucket ladder, then
+    prints one json line the parent collects. ``cache_dir`` empty -> no
+    artifact store (the baseline).
+    """
+    from repro.ml.pipeline import load_pipeline
+
+    pipe = load_pipeline(pipe_path)
+    ds = make_hospital(4096, seed=0)
+    batches = [make_hospital(n, seed=50 + i).tables["patients"]
+               for i, n in enumerate((120, 250, 500, 1000))]
+    t0 = time.perf_counter()
+    db = raven.connect(ds.tables, stats="auto", cache_dir=cache_dir or None)
+    db.register_model("m", pipe)
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+        "WHERE score >= :t"
+    ).prepare(transform="sql", params={"t": 0.6}).serve("hot")
+    t_prepare = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for b in batches:
+        prep.submit(b)
+        db.flush()  # flush per submit: each size lands its own bucket
+    t_first = time.perf_counter() - t0
+    s = db.cache_stats()
+    print(json.dumps({
+        "prepare_s": t_prepare, "first_flush_s": t_first,
+        "traces": s["traces"], "disk_hits": s["disk_hits"],
+    }))
+
+
+def run_cold(pipe_path: str) -> dict:
+    """Cold-process A/B: fresh interpreter with cache off / cold / warm."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + "."
+
+    def leg(cache_dir: str) -> dict:
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--cold-child",
+             pipe_path, cache_dir],
+            capture_output=True, text=True, timeout=600, env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(f"cold child failed:\n{proc.stderr[-2000:]}")
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+
+    with tempfile.TemporaryDirectory() as cache:
+        nocache = leg("")
+        cold = leg(cache)    # populates the store
+        warm = leg(cache)    # the restarted-process payoff
+
+    print("serve_query_cold,variant,prepare_s,first_flush_s,traces,disk_hits")
+    for name, r in (("nocache", nocache), ("cold", cold), ("warm", warm)):
+        print(f"serve_query_cold,{name},{r['prepare_s']:.3f},"
+              f"{r['first_flush_s']:.3f},{r['traces']},{r['disk_hits']}")
+    total = lambda r: r["prepare_s"] + r["first_flush_s"]  # noqa: E731
+    print(f"serve_query_cold,speedup,warm vs nocache = "
+          f"{total(nocache) / total(warm):.1f}x "
+          f"(traces {nocache['traces']} -> {warm['traces']})")
+    assert warm["traces"] == 0, "warm cold-start must not re-trace"
+    assert warm["disk_hits"] > 0, "warm cold-start must hit the disk tier"
+    return {
+        "cold_nocache_s": total(nocache), "cold_cold_s": total(cold),
+        "cold_warm_s": total(warm),
+        "cold_warm_traces": warm["traces"],
+        "cold_warm_disk_hits": warm["disk_hits"],
+        "cold_speedup_warm": total(nocache) / total(warm),
+    }
+
+
 def run(quick: bool = False):
     n_requests = 8 if quick else 24
     sizes = _request_sizes(n_requests)
@@ -219,10 +308,34 @@ def run(quick: bool = False):
     # threshold then runs *after* the MLUdf host boundary, which is exactly
     # where the old exact-shape path churned and re-traced
     rows.update(run_multistage(db, sql, batches, total_rows))
+
+    # part 3: cold-process A/B through the artifact store
+    from repro.ml.pipeline import save_pipeline
+
+    with tempfile.TemporaryDirectory() as d:
+        pipe_path = os.path.join(d, "pipe.npz")
+        save_pipeline(pipe, pipe_path)
+        rows.update(run_cold(pipe_path))
     return rows
 
 
-if __name__ == "__main__":
-    import sys
+def smoke() -> None:
+    """CI sanity run: the quick benchmark end to end, asserting the headline
+    invariants (warm serving beats per-call; warm cold-start never traces)."""
+    rows = run(quick=True)
+    assert rows["speedup_served"] > 1.0, rows["speedup_served"]
+    assert rows["cold_warm_traces"] == 0
+    assert rows["cold_warm_disk_hits"] > 0
+    print(f"smoke ok: served {rows['speedup_served']:.1f}x, "
+          f"staged {rows['speedup_staged']:.1f}x, "
+          f"warm cold-start {rows['cold_speedup_warm']:.1f}x")
 
-    run(quick="--quick" in sys.argv)
+
+if __name__ == "__main__":
+    if "--cold-child" in sys.argv:
+        i = sys.argv.index("--cold-child")
+        _cold_child(sys.argv[i + 1], sys.argv[i + 2])
+    elif "--smoke" in sys.argv:
+        smoke()
+    else:
+        run(quick="--quick" in sys.argv)

@@ -6,7 +6,6 @@ fixed-shape prefill/decode programs with slot recycling.
 """
 import time
 
-import jax
 import numpy as np
 
 from repro.configs import reduced_config

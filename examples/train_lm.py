@@ -9,11 +9,9 @@ By default runs the reduced config (CPU-friendly). `--width 512 --layers 8`
 gets ~100M params if you have minutes to spare.
 """
 import argparse
-import dataclasses
 
 import numpy as np
 
-from repro.configs import reduced_config
 from repro.launch.train import train_loop
 
 

@@ -17,7 +17,6 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional
 
-import numpy as np
 
 from repro.core.ir import (
     LAggregate,

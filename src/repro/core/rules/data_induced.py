@@ -13,7 +13,6 @@ per-partition expressions are guarded by a CASE on the partition column).
 from __future__ import annotations
 
 from repro.core.ir import (
-    LPredict,
     LScan,
     PredictionQuery,
     TableStats,

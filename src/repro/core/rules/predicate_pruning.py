@@ -13,7 +13,6 @@ node): for single-tree models, subtrees with no satisfying leaf collapse.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import numpy as np
 
@@ -102,7 +101,6 @@ def apply_predicate_pruning(query: PredictionQuery) -> PredictionQuery:
                     node.attrs["bias"] = b
 
         # --- output predicates (paper: leaf-level pruning) ------------------
-        out_cols = set(pred.output_names)
         for f in _filters_above(query.plan, pred):
             sat = _satisfier(f.expr, pred)
             if sat is None:

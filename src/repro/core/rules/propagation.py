@@ -15,9 +15,9 @@ from typing import Optional
 
 import numpy as np
 
-from repro.ml.pipeline import PipelineNode, TrainedPipeline
+from repro.ml.pipeline import TrainedPipeline
 from repro.ml.trees import LEAF, TreeEnsemble
-from repro.relational.expr import Bin, Case, Col, Const, Expr
+from repro.relational.expr import Bin, Col, Const, Expr
 
 INF = math.inf
 

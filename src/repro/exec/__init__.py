@@ -1,11 +1,15 @@
-"""Physical execution layer: the StageGraph IR and the async request pump.
+"""Physical execution layer: the StageGraph IR, the request pump, and the
+persistent artifact store.
 
 ``repro.exec.stages`` is the typed intermediate representation between the
 optimizer's physical plan and the runtime: a linear graph of declarative,
 content-fingerprinted stages (maximal pure-jnp segments and MLUdf host
 boundaries). ``repro.exec.pump`` drives latency-targeted background flushing
-for the serving layer.
+for the serving layer. ``repro.exec.artifact_store`` persists optimizer
+output and AOT-exported stage executables across processes, keyed on the
+stage IR's chained content fingerprints.
 """
+from repro.exec.artifact_store import ArtifactStore, StoreStats, env_digest
 from repro.exec.pump import RequestPump
 from repro.exec.stages import (
     RunResult,
@@ -19,8 +23,11 @@ from repro.exec.stages import (
 )
 
 __all__ = [
+    "ArtifactStore",
     "RequestPump",
     "RunResult",
+    "StoreStats",
+    "env_digest",
     "Stage",
     "StageGraph",
     "build_stage_graph",

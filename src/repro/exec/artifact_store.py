@@ -1,0 +1,351 @@
+"""Persistent plan-artifact store: warm-start serving across processes.
+
+Raven's premise is optimize once, serve many times — but before this module
+"once" meant once *per process*: a fresh interpreter re-ran the optimizer and
+re-traced/re-compiled every stage from scratch. The StageGraph's chained
+per-stage content fingerprints (``repro.core.fingerprint.node_fingerprint``)
+are stable across processes, so they can key durable artifacts. This module
+is that disk tier, with two layers:
+
+  * **plan layer** — the optimizer's output ``(PhysicalPlan,
+    OptimizationReport)`` pickled per *query* fingerprint (IR plan + stats +
+    optimizer configuration), so ``Query.prepare()`` in a fresh session skips
+    re-optimization when nothing it depends on changed. Plans whose content
+    is not cross-process stable (e.g. MLtoDNN ``TensorOp`` closures, which
+    pickle refuses anyway) are skipped — the stage layer still covers them
+    because ``TensorOp`` fns carry canonical ``__fingerprint_token__`` s.
+  * **stage layer** — each pure stage's jitted executable AOT-exported via
+    ``jax.export`` per (stage fingerprint, env shape/dtype digest):
+    serialized on first compile, deserialized-and-called on later processes.
+    A deserialized artifact replays StableHLO without ever running the
+    Python stage function, so warm buckets cost **zero new XLA traces**.
+
+Every entry is one directory written with the same atomic discipline as
+``checkpoint/store.py`` (tmp dir + ``os.rename``; ``meta.json`` written
+last marks the entry complete), so concurrent writers never clobber each
+other and a crash mid-write never corrupts the store. Loads verify a
+compatibility header (store version, jax version, backend) and fall back to
+live compilation on any mismatch, truncation, or corruption — a bad cache
+can cost time, never correctness. ``max_entries`` bounds the directory via
+oldest-first eviction.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pickle
+import shutil
+import tempfile
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+
+STORE_VERSION = 1
+
+_PLANS = "plans"
+_STAGES = "stages"
+_META = "meta.json"
+_PLAN_BLOB = "plan.pkl"
+_STAGE_BLOB = "exported.bin"
+
+
+def env_digest(env: dict[str, Any]) -> str:
+    """Canonical digest of an execution environment's *structure*.
+
+    Hashes the pytree definition (table/column names, special keys) plus
+    every leaf's shape and dtype — exactly the signature ``jax.jit``
+    specializes on — so one digest names one compiled program variant.
+    Values are deliberately excluded: the same bucket shape must map onto
+    the same exported executable whatever rows arrive in it.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(env)
+    h = hashlib.sha256(str(treedef).encode())
+    for leaf in leaves:
+        h.update(f"{jax.numpy.result_type(leaf)}{jax.numpy.shape(leaf)};".encode())
+    return h.hexdigest()[:32]
+
+
+def compat_header() -> dict[str, Any]:
+    """The environment an artifact is only valid in."""
+    return {
+        "store_version": STORE_VERSION,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+    }
+
+
+@dataclass
+class StoreStats:
+    """Disk-tier accounting (surfaced via ``db.cache_stats()``)."""
+
+    plan_hits: int = 0
+    plan_misses: int = 0
+    plan_saves: int = 0
+    stage_hits: int = 0
+    stage_misses: int = 0
+    stage_saves: int = 0
+    incompatible: int = 0  # version/backend header rejected an entry
+    corrupt: int = 0       # truncated/unreadable entry quarantined
+    skipped: int = 0       # content not cross-process stable; not persisted
+    save_errors: int = 0
+    evictions: int = 0
+
+    def snapshot(self) -> dict[str, int]:
+        return dict(self.__dict__)
+
+
+class ArtifactStore:
+    """Content-addressed disk cache for optimizer output and stage programs.
+
+    Keys are caller-supplied canonical fingerprints (query fingerprint for
+    the plan layer; chained stage fingerprint + env digest for the stage
+    layer). All loads are fail-soft: any problem returns ``None`` and the
+    caller compiles live.
+    """
+
+    def __init__(self, root: str, *, max_entries: int = 512):
+        self.root = os.path.abspath(os.path.expanduser(root))
+        self.max_entries = int(max_entries)
+        self.stats = StoreStats()
+        os.makedirs(os.path.join(self.root, _PLANS), exist_ok=True)
+        os.makedirs(os.path.join(self.root, _STAGES), exist_ok=True)
+
+    def __repr__(self) -> str:
+        return f"ArtifactStore({self.root!r}, entries={len(self._entries())})"
+
+    # -- plan layer ----------------------------------------------------------
+
+    def save_plan(self, query_fp: str, plan: Any, report: Any) -> bool:
+        """Persist one optimizer output under its query fingerprint.
+
+        Returns False (without writing) when the plan's content is not
+        stable across processes: identity-hashed components or closures the
+        pickler refuses — a fingerprint built on ``id()`` must never be
+        trusted from another process.
+        """
+        from repro.relational.engine import plan_fingerprint
+
+        pins: list = []
+        plan_fp = plan_fingerprint(plan, pins=pins)
+        if pins:
+            self.stats.skipped += 1
+            return False
+        try:
+            blob = pickle.dumps((plan, report))
+        except Exception:
+            self.stats.skipped += 1
+            return False
+        meta = {**compat_header(), "plan_fingerprint": plan_fp}
+        return self._write_entry(
+            os.path.join(self.root, _PLANS, query_fp),
+            {_PLAN_BLOB: blob}, meta,
+        )
+
+    def load_plan(self, query_fp: str) -> Optional[tuple[Any, Any]]:
+        """Load ``(plan, report)`` for a query fingerprint, or None.
+
+        The unpickled plan is re-fingerprinted and checked against the
+        entry's recorded hash, so a corrupted blob that still unpickles is
+        rejected rather than silently served.
+        """
+        from repro.relational.engine import plan_fingerprint
+
+        d = os.path.join(self.root, _PLANS, query_fp)
+        meta = self._read_meta(d)
+        if meta is None:
+            self.stats.plan_misses += 1
+            return None
+        if not self._compatible(meta):
+            self.stats.plan_misses += 1
+            return None
+        try:
+            with open(os.path.join(d, _PLAN_BLOB), "rb") as f:
+                plan, report = pickle.loads(f.read())
+            pins: list = []
+            if plan_fingerprint(plan, pins=pins) != meta["plan_fingerprint"] or pins:
+                raise ValueError("plan fingerprint mismatch after load")
+        except FileNotFoundError:
+            self._quarantine(d)  # meta without blob: a truncated entry
+            self.stats.plan_misses += 1
+            return None
+        except OSError:
+            self.stats.plan_misses += 1  # transient: retry next time
+            return None
+        except Exception:
+            self._quarantine(d)
+            self.stats.plan_misses += 1
+            return None
+        self.stats.plan_hits += 1
+        return plan, report
+
+    # -- stage layer ---------------------------------------------------------
+
+    def save_stage(
+        self, stage_fp: str, digest: str, fn: Callable, env: dict[str, Any]
+    ) -> bool:
+        """AOT-export ``fn`` for ``env``'s exact shapes and persist it.
+
+        ``fn`` must be the *raw* stage function (not the trace-accounting
+        wrapper) so the export trace doesn't inflate retrace counters.
+        """
+        from jax import export
+
+        try:
+            blob = export.export(jax.jit(fn))(env).serialize()
+        except Exception:
+            self.stats.save_errors += 1
+            return False
+        meta = {**compat_header(), "stage_fingerprint": stage_fp,
+                "env_digest": digest}
+        return self._write_entry(
+            os.path.join(self.root, _STAGES, stage_fp, digest),
+            {_STAGE_BLOB: bytes(blob)}, meta,
+        )
+
+    def load_stage(self, stage_fp: str, digest: str) -> Optional[Callable]:
+        """Deserialize one exported stage program, or None.
+
+        The returned callable replays the serialized StableHLO — it never
+        runs the stage's Python function, so calling it counts zero traces.
+        """
+        from jax import export
+
+        d = os.path.join(self.root, _STAGES, stage_fp, digest)
+        meta = self._read_meta(d)
+        if meta is None:
+            self.stats.stage_misses += 1
+            return None
+        if not self._compatible(meta) or meta.get("env_digest") != digest:
+            self.stats.stage_misses += 1
+            return None
+        try:
+            with open(os.path.join(d, _STAGE_BLOB), "rb") as f:
+                exported = export.deserialize(bytearray(f.read()))
+            call = exported.call
+        except FileNotFoundError:
+            self._quarantine(d)  # meta without blob: a truncated entry
+            self.stats.stage_misses += 1
+            return None
+        except OSError:
+            self.stats.stage_misses += 1  # transient: retry next time
+            return None
+        except Exception:
+            self._quarantine(d)
+            self.stats.stage_misses += 1
+            return None
+        self.stats.stage_hits += 1
+        return call
+
+    def stage_digests(self, stage_fp: str) -> list[str]:
+        """Every complete on-disk env digest for one stage fingerprint
+        (registration warm-start enumerates these)."""
+        d = os.path.join(self.root, _STAGES, stage_fp)
+        try:
+            names = os.listdir(d)
+        except OSError:
+            return []
+        return sorted(
+            n for n in names
+            if os.path.exists(os.path.join(d, n, _META))
+        )
+
+    # -- internals -----------------------------------------------------------
+
+    def _write_entry(
+        self, final_dir: str, files: dict[str, bytes], meta: dict[str, Any]
+    ) -> bool:
+        """Atomic entry write: tmp dir + rename; meta.json written last.
+
+        Lost races are fine — content-addressed keys mean the winner wrote
+        the same artifact, so the loser just discards its tmp dir.
+        """
+        if os.path.exists(os.path.join(final_dir, _META)):
+            return True  # already present (same content by construction)
+        os.makedirs(os.path.dirname(final_dir), exist_ok=True)
+        tmp = tempfile.mkdtemp(prefix=".art_tmp_", dir=self.root)
+        try:
+            for name, data in files.items():
+                with open(os.path.join(tmp, name), "wb") as f:
+                    f.write(data)
+            with open(os.path.join(tmp, _META), "w") as f:
+                json.dump(meta, f)
+            try:
+                os.rename(tmp, final_dir)
+            except OSError:
+                shutil.rmtree(tmp, ignore_errors=True)  # concurrent writer won
+                return True
+        except Exception:
+            shutil.rmtree(tmp, ignore_errors=True)
+            self.stats.save_errors += 1
+            return False
+        if "plan_fingerprint" in meta:
+            self.stats.plan_saves += 1
+        else:
+            self.stats.stage_saves += 1
+        self._evict()
+        return True
+
+    def _read_meta(self, d: str) -> Optional[dict[str, Any]]:
+        try:
+            with open(os.path.join(d, _META)) as f:
+                return json.load(f)
+        except ValueError:
+            # the header exists but is not valid json: the entry is truly
+            # corrupt (entries are renamed into place whole, meta written
+            # last), so drop it for rebuild
+            self._quarantine(d)
+            return None
+        except OSError:
+            # missing entry (a plain miss) or a transient error (EMFILE,
+            # EACCES from a scanner holding the file): never delete a
+            # possibly-healthy entry — just report a miss and move on
+            return None
+
+    def _compatible(self, meta: dict[str, Any]) -> bool:
+        header = compat_header()
+        if all(meta.get(k) == v for k, v in header.items()):
+            return True
+        self.stats.incompatible += 1
+        return False
+
+    def _quarantine(self, d: str) -> None:
+        """Drop a corrupted/truncated entry so it is rebuilt, not retried."""
+        self.stats.corrupt += 1
+        shutil.rmtree(d, ignore_errors=True)
+
+    def _entries(self) -> list[str]:
+        """Every complete entry directory (plans/* and stages/*/*)."""
+        out: list[str] = []
+        plans = os.path.join(self.root, _PLANS)
+        stages = os.path.join(self.root, _STAGES)
+        for base in ([plans] if os.path.isdir(plans) else []):
+            out.extend(os.path.join(base, n) for n in os.listdir(base))
+        if os.path.isdir(stages):
+            for fp in os.listdir(stages):
+                d = os.path.join(stages, fp)
+                if os.path.isdir(d):
+                    out.extend(os.path.join(d, n) for n in os.listdir(d))
+        return [d for d in out if os.path.exists(os.path.join(d, _META))]
+
+    def _evict(self) -> None:
+        """Oldest-first eviction keeps the cache dir bounded."""
+        entries = self._entries()
+        if len(entries) <= self.max_entries:
+            return
+        def mtime(d: str) -> float:
+            try:
+                return os.path.getmtime(os.path.join(d, _META))
+            except OSError:
+                return 0.0
+        entries.sort(key=mtime)
+        for d in entries[: len(entries) - self.max_entries]:
+            shutil.rmtree(d, ignore_errors=True)
+            parent = os.path.dirname(d)
+            if os.path.basename(os.path.dirname(parent)) == _STAGES:
+                try:
+                    os.rmdir(parent)  # drop a stage dir left empty
+                except OSError:
+                    pass
+            self.stats.evictions += 1

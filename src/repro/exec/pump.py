@@ -87,6 +87,10 @@ class RequestPump:
                     self._cv.wait(wait_s)
                     continue  # re-check: stop/new earlier deadline may race
                 self._deadline = None
+            # count before running: waiters wake *inside* flush (their
+            # request's event sets mid-drain), so counting after would let a
+            # woken waiter observe flushes == 0 for the flush that served it
+            self.flushes += 1
             try:
                 self._flush()
             except BaseException as e:  # noqa: BLE001
@@ -94,5 +98,3 @@ class RequestPump:
                 # requests (their wait() re-raises); the pump must survive a
                 # bad batch or every later submit would hang forever
                 self.last_error = e
-            finally:
-                self.flushes += 1

@@ -228,10 +228,17 @@ class Stage:
     fn: Optional[Callable[[dict], State]] = None  # pure: raw env -> state
     runner: Optional[Callable[[dict], State]] = None  # pure: jitted fn
     udf: Any = None  # host: the MLUdf plan node
+    # False when the chained fingerprint involves an identity-hashed (id())
+    # component — valid only while those objects live in THIS process, so
+    # the persistent artifact store must never key an entry on it
+    content_stable: bool = True
     # runtime accounting (mutated by the jit trace hook and the runner)
     traces: int = 0
     calls: int = 0
     total_s: float = 0.0
+    # bucket programs served from the persistent artifact store instead of
+    # being traced in this process (warm-start preloads + lazy disk hits)
+    disk_loads: int = 0
 
     @property
     def label(self) -> str:
@@ -242,10 +249,11 @@ class Stage:
         avg = f"{1e3 * self.total_s / self.calls:.2f}ms" if self.calls else "-"
         out = ", ".join(self.out_columns)
         pin = f" params=({', '.join(sorted(self.params))})" if self.params else ""
+        disk = f" disk_loads={self.disk_loads}" if self.disk_loads else ""
         return (
             f"[{self.index}] {self.kind:<4} {self.label}  "
             f"fp={self.fingerprint[:12]}…  out=({out}){pin}  "
-            f"traces={self.traces} calls={self.calls} avg={avg}"
+            f"traces={self.traces} calls={self.calls} avg={avg}{disk}"
         )
 
 
@@ -423,7 +431,10 @@ def build_stage_graph(plan, pins: Optional[list] = None) -> StageGraph:
     and the trace-accounting hook); host segments carry their MLUdf node.
     Per-stage fingerprints chain: ``fp[i] = H(fp[i-1], ops[i])`` with each
     operator hashed shallowly (child pointers excluded — the chain itself
-    encodes upstream structure).
+    encodes upstream structure). A stage whose chain involved an
+    identity-hashed component (anything landing in ``pins``) is marked
+    ``content_stable=False`` — downstream stages inherit the mark, since
+    their chained hash embeds the unstable prefix.
     """
     from repro.core.fingerprint import fingerprint, node_fingerprint
 
@@ -431,9 +442,13 @@ def build_stage_graph(plan, pins: Optional[list] = None) -> StageGraph:
     stages: list[Stage] = []
     prev_fp = ""
     prev_out: Optional[list[str]] = None
+    prev_stable = True
     for idx, (kind, ops) in enumerate(plan_segments(plan)):
-        tokens = [node_fingerprint(op, pins=pins) for op in ops]
-        fp = fingerprint("stage", kind, prev_fp, tokens, pins=pins)
+        stage_pins: list = []
+        tokens = [node_fingerprint(op, pins=stage_pins) for op in ops]
+        fp = fingerprint("stage", kind, prev_fp, tokens, pins=stage_pins)
+        stable = prev_stable and not stage_pins
+        pins.extend(stage_pins)
         out_cols = _segment_out_cols(ops, prev_out)
         if kind == "pure":
             fn: Optional[Callable] = None if idx == 0 else _from_mid
@@ -442,6 +457,7 @@ def build_stage_graph(plan, pins: Optional[list] = None) -> StageGraph:
             in_cols = tuple(prev_out) if prev_out is not None else None
             stage = Stage(
                 index=idx, kind=kind, ops=ops, fingerprint=fp,
+                content_stable=stable,
                 reads=_segment_reads(ops), in_columns=in_cols,
                 out_columns=tuple(out_cols), params=_segment_params(ops),
                 fn=fn,
@@ -450,12 +466,14 @@ def build_stage_graph(plan, pins: Optional[list] = None) -> StageGraph:
             udf = ops[0]
             stage = Stage(
                 index=idx, kind=kind, ops=ops, fingerprint=fp,
+                content_stable=stable,
                 reads={}, in_columns=tuple(udf.pipeline.input_names()),
                 out_columns=tuple(out_cols), udf=udf,
             )
         stages.append(stage)
         prev_fp = fp
         prev_out = out_cols
+        prev_stable = stable
     return StageGraph(plan=plan, stages=stages)
 
 

@@ -6,7 +6,6 @@ than the axis stay replicated rather than degenerately padded — e.g. the
 B=1 long_500k cells)."""
 from __future__ import annotations
 
-import jax
 import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P

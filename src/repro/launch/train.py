@@ -19,7 +19,6 @@ from __future__ import annotations
 import argparse
 import signal
 import sys
-import time
 
 import jax
 import jax.numpy as jnp

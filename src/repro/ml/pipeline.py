@@ -22,12 +22,12 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import numpy as np
 
 from repro.ml.featurizers import Normalizer
-from repro.ml.trees import LEAF, TreeEnsemble
+from repro.ml.trees import TreeEnsemble
 
 MODEL_OPS = ("tree_ensemble", "linear")
 FEATURIZER_OPS = (

@@ -15,7 +15,6 @@ unused-feature fraction).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional
 

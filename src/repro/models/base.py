@@ -12,9 +12,8 @@ shapes, experts over ``model`` (EP).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp

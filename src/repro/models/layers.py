@@ -9,12 +9,10 @@ the Pallas flash kernel, used on non-TPU backends and in dry-runs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 NEG_INF = -1e30
 

@@ -12,8 +12,6 @@ the sharded vocab axis with an automatic psum).
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax

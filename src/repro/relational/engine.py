@@ -145,12 +145,15 @@ class CacheStats:
     evictions: int = 0
     traces: int = 0  # XLA (re)compiles: stage tracings across all entries
     stage_traces: dict[str, int] = field(default_factory=dict)
+    disk_hits: int = 0    # artifact-store loads that skipped work: a persisted
+    disk_misses: int = 0  # plan or an AOT-exported stage program (vs not found)
 
     def snapshot(self) -> dict[str, Any]:
         return {
             "hits": self.hits, "misses": self.misses,
             "evictions": self.evictions, "traces": self.traces,
             "stage_traces": dict(self.stage_traces),
+            "disk_hits": self.disk_hits, "disk_misses": self.disk_misses,
         }
 
 
@@ -163,7 +166,27 @@ def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     PLAN_CACHE_STATS.hits = PLAN_CACHE_STATS.misses = 0
     PLAN_CACHE_STATS.evictions = PLAN_CACHE_STATS.traces = 0
+    PLAN_CACHE_STATS.disk_hits = PLAN_CACHE_STATS.disk_misses = 0
     PLAN_CACHE_STATS.stage_traces.clear()
+
+
+# The process-wide artifact store (disk tier under the in-memory LRU above).
+# ``raven.connect(cache_dir=...)`` installs one; stage runners consult it at
+# bucket-compile time, so even CompiledPlans already resident in the LRU pick
+# up (or populate) the disk tier of whichever store is active.
+_ARTIFACT_STORE: Optional[Any] = None
+
+
+def set_artifact_store(store: Optional[Any]) -> Optional[Any]:
+    """Install (or clear, with None) the process-wide artifact store;
+    returns the previous one."""
+    global _ARTIFACT_STORE
+    prev, _ARTIFACT_STORE = _ARTIFACT_STORE, store
+    return prev
+
+
+def get_artifact_store() -> Optional[Any]:
+    return _ARTIFACT_STORE
 
 
 @dataclass
@@ -198,6 +221,24 @@ class CompiledPlan:
     def traces(self) -> int:
         """XLA stage tracings attributable to this compiled plan."""
         return self.graph.traces
+
+    def warm_start(self, store: Optional[Any] = None) -> int:
+        """Preload every on-disk exported program for this plan's stages.
+
+        Enumerates the active artifact store's entries under each pure
+        stage's chained fingerprint and deserializes them eagerly, so the
+        first request landing on a previously-served bucket shape runs the
+        AOT artifact instead of tracing. Returns the number of bucket
+        programs loaded.
+        """
+        store = store if store is not None else get_artifact_store()
+        if store is None:
+            return 0
+        n = 0
+        for stage in self.graph.stages:
+            if isinstance(stage.runner, _StageRunner):
+                n += stage.runner.preload(store)
+        return n
 
     def run(
         self,
@@ -245,11 +286,20 @@ class CompiledPlan:
         return self.run(database, row_valid=row_valid, params=params).table
 
 
-def _build_compiled(plan: PhysicalPlan, fingerprint: str, pins: list) -> CompiledPlan:
-    graph = build_stage_graph(plan, pins=pins)
-    for stage in graph.stages:
-        if stage.kind != "pure":
-            continue
+class _StageRunner:
+    """Per-stage executable: disk tier under jit's in-process specialization.
+
+    Without an active artifact store this is exactly ``jax.jit(traced)``.
+    With one, each new env shape/dtype structure (= one jit specialization =
+    one bucket variant) first consults the store under the stage's chained
+    content fingerprint: a hit deserializes the AOT-exported program and
+    runs it (zero traces, ever); a miss traces live and then exports the
+    freshly-specialized program so the *next* process warm-starts. The
+    per-digest outcome is memoized, so steady-state calls never touch disk.
+    """
+
+    def __init__(self, stage):
+        self.stage = stage
 
         def traced(env, _fn=stage.fn, _stage=stage):
             # python side effects run at trace time only: this counts
@@ -262,7 +312,63 @@ def _build_compiled(plan: PhysicalPlan, fingerprint: str, pins: list) -> Compile
             )
             return _fn(env)
 
-        stage.runner = jax.jit(traced)
+        self.jitted = jax.jit(traced)
+        # env digest -> deserialized exported call, or None (= run live)
+        self._known: dict[str, Optional[Callable]] = {}
+
+    def __call__(self, env):
+        store = get_artifact_store()
+        if store is None or not self.stage.content_stable:
+            # identity-hashed fingerprint components are meaningless in any
+            # other process (and a recycled id could alias a different
+            # stage), so an unstable stage never touches the disk tier
+            return self.jitted(env)
+        from repro.exec.artifact_store import env_digest
+
+        digest = env_digest(env)
+        if digest in self._known:
+            fn = self._known[digest]
+            return self.jitted(env) if fn is None else fn(env)
+        fn = store.load_stage(self.stage.fingerprint, digest)
+        if fn is not None:
+            PLAN_CACHE_STATS.disk_hits += 1
+            self.stage.disk_loads += 1
+            self._known[digest] = fn
+            return fn(env)
+        PLAN_CACHE_STATS.disk_misses += 1
+        self._known[digest] = None
+        out = self.jitted(env)  # live trace for this new structure
+        # export the raw stage fn (not ``traced``: the export's own trace
+        # must not inflate retrace accounting)
+        store.save_stage(self.stage.fingerprint, digest, self.stage.fn, env)
+        return out
+
+    def preload(self, store) -> int:
+        """Deserialize every on-disk bucket program for this stage."""
+        if not self.stage.content_stable:
+            return 0
+        n = 0
+        for digest in store.stage_digests(self.stage.fingerprint):
+            if digest in self._known:
+                # already resolved in this process — including digests this
+                # process traced live and then saved itself: re-loading
+                # those would fabricate "disk warm start" stats for work
+                # that never crossed a process boundary
+                continue
+            fn = store.load_stage(self.stage.fingerprint, digest)
+            if fn is not None:
+                PLAN_CACHE_STATS.disk_hits += 1
+                self.stage.disk_loads += 1
+                self._known[digest] = fn
+                n += 1
+        return n
+
+
+def _build_compiled(plan: PhysicalPlan, fingerprint: str, pins: list) -> CompiledPlan:
+    graph = build_stage_graph(plan, pins=pins)
+    for stage in graph.stages:
+        if stage.kind == "pure":
+            stage.runner = _StageRunner(stage)
     return CompiledPlan(fingerprint=fingerprint, graph=graph, pins=pins)
 
 

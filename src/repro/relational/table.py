@@ -5,7 +5,7 @@ compaction happens only at host boundaries or final output.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax.numpy as jnp
 import numpy as np

@@ -53,7 +53,6 @@ from repro.relational.engine import (
     plan_params,
     walk_plan,
 )
-from repro.relational.table import Table
 
 
 def row_bucket(n: int, min_bucket: int = 64) -> int:
@@ -111,6 +110,8 @@ class ServerStats:
     bucket_misses: int = 0      # (query, schema, bucket) combination
     mid_bucket_hits: int = 0    # host-boundary exits landing on an already-
     mid_bucket_misses: int = 0  # seen (query, stage, bucket) combination
+    warm_started_buckets: int = 0  # bucket programs preloaded from the
+    #                                artifact store at registration time
     batches_executed: int = 0
     requests_served: int = 0
     coalesced_requests: int = 0  # requests that shared a batch with others
@@ -229,6 +230,13 @@ class PredictionQueryServer:
                 plan, report = self.optimizer.optimize(query)
                 self._optimized[qfp] = (plan, report)
         compiled = compile_plan(plan)
+        # warm start: deserialize every AOT-exported bucket program the
+        # artifact store holds for this plan's stages, so previously-served
+        # shapes run with zero new XLA traces from the very first submit
+        from repro.relational.engine import get_artifact_store
+
+        if get_artifact_store() is not None:
+            self.stats.warm_started_buckets += compiled.warm_start()
         param_names = frozenset(plan_params(plan))
         bound = dict(params or {})
         check_params(param_names, bound, context=f"query '{name}'")

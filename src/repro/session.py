@@ -80,6 +80,7 @@ def connect(
     partition_cols: Optional[dict[str, str]] = None,
     strategy=None,
     options: Optional[OptimizerOptions] = None,
+    cache_dir: Optional[str] = None,
 ) -> "Session":
     """Open a session over a database of named column-dict tables.
 
@@ -88,10 +89,22 @@ def connect(
     dict to supply stats yourself, or ``None`` to skip statistics entirely.
     ``strategy``/``options`` set session-wide optimizer defaults that
     :meth:`Query.prepare` can override per query.
+
+    ``cache_dir`` enables **warm starts across processes**: an
+    :class:`~repro.exec.artifact_store.ArtifactStore` rooted there persists
+    optimizer output per query fingerprint (``prepare()`` skips
+    re-optimization when the query, statistics, and model weights match) and
+    AOT-exports every compiled stage program per shape bucket (a fresh
+    process deserializes instead of re-tracing; ``serve()`` preloads all
+    buckets found on disk at registration). Artifacts are keyed on canonical
+    content fingerprints and checked against a version/backend header, so a
+    stale or corrupted cache falls back to live compilation — never wrong
+    results. The store is installed process-wide (the compiled-plan cache it
+    backs is process-wide too); the most recent ``connect`` wins.
     """
     return Session(
         tables, stats, partition_cols=partition_cols,
-        strategy=strategy, options=options,
+        strategy=strategy, options=options, cache_dir=cache_dir,
     )
 
 
@@ -106,6 +119,7 @@ class Session:
         partition_cols: Optional[dict[str, str]] = None,
         strategy=None,
         options: Optional[OptimizerOptions] = None,
+        cache_dir: Optional[str] = None,
     ):
         self.tables = {
             t: {c: np.asarray(v) for c, v in cols.items()}
@@ -128,6 +142,17 @@ class Session:
         self.models: dict[str, Any] = {}
         self.strategy = strategy
         self.options = options
+        from repro.relational.engine import set_artifact_store
+
+        self.artifact_store = None
+        if cache_dir is not None:
+            from repro.exec.artifact_store import ArtifactStore
+
+            self.artifact_store = ArtifactStore(cache_dir)
+        # the most recent connect wins — including a cache-less connect,
+        # which must *clear* a previous session's store rather than let it
+        # keep intercepting (and writing to) every later compilation
+        set_artifact_store(self.artifact_store)
         self._server: Optional[PredictionQueryServer] = None
         self._names = itertools.count()
 
@@ -178,9 +203,12 @@ class Session:
         """Compiled-plan cache + serving accounting, in one snapshot.
 
         Returns the engine's :class:`CacheStats` snapshot (``hits``/
-        ``misses``/``traces`` plus per-stage ``stage_traces`` keyed by stage
-        fingerprint) merged with the session server's :class:`ServerStats`
-        under ``"server"`` — so benchmarks and tests can assert zero-retrace
+        ``misses``/``traces``/``disk_hits``/``disk_misses`` plus per-stage
+        ``stage_traces`` keyed by stage fingerprint) merged with the session
+        server's :class:`ServerStats` under ``"server"`` and — when the
+        session was opened with ``cache_dir`` — the artifact store's
+        :class:`~repro.exec.artifact_store.StoreStats` under
+        ``"artifact_store"``, so benchmarks and tests can assert zero-retrace
         warm paths without reaching into module globals.
         """
         from repro.relational.engine import PLAN_CACHE_STATS
@@ -189,12 +217,20 @@ class Session:
         if self._server is not None:
             out["server"] = self._server.stats.snapshot()
             out["server"]["recompiles"] = self._server.recompiles()
+        if self.artifact_store is not None:
+            out["artifact_store"] = self.artifact_store.stats.snapshot()
         return out
 
     def close(self) -> None:
-        """Stop the background request pump (drains pending requests)."""
+        """Stop the background request pump (drains pending requests) and
+        uninstall this session's artifact store (if still the active one)."""
         if self._server is not None:
             self._server.stop_pump()
+        if self.artifact_store is not None:
+            from repro.relational.engine import get_artifact_store, set_artifact_store
+
+            if get_artifact_store() is self.artifact_store:
+                set_artifact_store(None)
 
     def __enter__(self) -> "Session":
         return self
@@ -253,6 +289,13 @@ class Query:
         picks one from pipeline statistics; ``options`` overrides the full
         optimizer configuration. All ``:param`` placeholders must be bound
         via ``params`` (re-bindable later with :meth:`PreparedQuery.bind`).
+
+        When the session has an artifact store (``connect(cache_dir=...)``),
+        the optimizer's output is persisted per query fingerprint — a fresh
+        process re-preparing the same query over the same statistics and
+        model weights loads the optimized plan from disk instead of
+        re-running the optimizer (a changed fingerprint simply misses and
+        optimizes live).
         """
         opts = options or self._session.options or OptimizerOptions()
         if transform is not None:
@@ -261,10 +304,37 @@ class Query:
         declared = self.param_names()
         bound = dict(params or {})
         check_params(declared, bound, context="query")
+        plan, report = self._optimize(opts, strat)
+        return PreparedQuery(self, plan, report, opts, strat, bound)
+
+    def _optimize(self, opts: OptimizerOptions, strat):
+        """Run the optimizer, through the disk tier when one is active."""
+        from repro.core.fingerprint import fingerprint
+        from repro.relational.engine import PLAN_CACHE_STATS
+
+        store = self._session.artifact_store
+        key: Optional[str] = None
+        if store is not None:
+            # the optimizer is a pure function of (IR plan incl. model
+            # weights, stats, options, strategy); a key hashing any component
+            # by identity is not valid in another process, so skip the store
+            pins: list = []
+            key = fingerprint(self.ir.plan, self.ir.stats, opts, strat, pins=pins)
+            if pins:
+                store.stats.skipped += 1
+                key = None
+        if key is not None:
+            hit = store.load_plan(key)
+            if hit is not None:
+                PLAN_CACHE_STATS.disk_hits += 1
+                return hit
+            PLAN_CACHE_STATS.disk_misses += 1
         plan, report = RavenOptimizer(strategy=strat, options=opts).optimize(
             self.ir
         )
-        return PreparedQuery(self, plan, report, opts, strat, bound)
+        if key is not None:
+            store.save_plan(key, plan, report)
+        return plan, report
 
 
 class QueryBuilder(Query):

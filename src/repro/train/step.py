@@ -7,8 +7,6 @@ the same program so params/opt-state never leave the device between steps.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

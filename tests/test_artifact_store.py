@@ -1,0 +1,445 @@
+"""The persistent plan-artifact store: warm starts across processes.
+
+Covers the two disk tiers (optimizer output per query fingerprint;
+AOT-exported stage executables per (stage fingerprint, env digest)), their
+failure modes (corruption, version/backend mismatch, concurrent writers,
+eviction), and the acceptance path: a query prepared and served in process A
+re-prepares in process B with the same ``cache_dir`` and serves its
+previously-seen buckets with **zero new XLA traces**, while a fingerprint
+mismatch (perturbed model weights) falls back cleanly to live compilation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+import repro as raven
+from repro.data.datasets import make_hospital
+from repro.exec.artifact_store import (
+    STORE_VERSION,
+    ArtifactStore,
+    env_digest,
+)
+from repro.relational.engine import (
+    PLAN_CACHE_STATS,
+    clear_plan_cache,
+    get_artifact_store,
+    set_artifact_store,
+)
+
+SQL = "SELECT * FROM PREDICT(model='m', data=patients) AS p WHERE score >= :t"
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _isolated_store():
+    """Each test starts with an empty in-memory plan cache and no store, and
+    never leaks its store into later tests."""
+    clear_plan_cache()
+    set_artifact_store(None)
+    yield
+    set_artifact_store(None)
+    clear_plan_cache()
+
+
+def _serve_once(tables, pipe, cache_dir, *, sizes=(100, 200), transform="sql"):
+    """connect -> prepare -> serve -> submit one batch per size (flushing
+    between, so each size lands its own bucket). Returns (session, scores)."""
+    db = raven.connect(tables, stats="auto", cache_dir=cache_dir)
+    db.register_model("m", pipe)
+    prep = db.sql(SQL).prepare(transform=transform, params={"t": 0.5})
+    prep.serve("hot")
+    outs = []
+    for i, n in enumerate(sizes):
+        req = prep.submit(make_hospital(n, seed=40 + i).tables["patients"])
+        db.flush()
+        outs.append(np.sort(np.asarray(req.result["score"])))
+    return db, outs
+
+
+# ---------------------------------------------------------------------------
+# store API
+# ---------------------------------------------------------------------------
+
+
+def test_plan_layer_roundtrip(tmp_path, hospital, hospital_gb):
+    db = raven.connect(hospital.tables, stats="auto")
+    db.register_model("m", hospital_gb)
+    prep = db.sql(SQL).prepare(transform="sql", params={"t": 0.5})
+    store = ArtifactStore(str(tmp_path))
+    assert store.save_plan("qkey", prep.plan, prep.report)
+    loaded = store.load_plan("qkey")
+    assert loaded is not None
+    plan, report = loaded
+    from repro.relational.engine import plan_fingerprint
+
+    assert plan_fingerprint(plan) == prep.fingerprint
+    assert report.transforms == prep.report.transforms
+    assert store.load_plan("missing") is None
+    assert store.stats.plan_hits == 1 and store.stats.plan_misses == 1
+
+
+def test_unstable_plan_content_is_skipped(tmp_path, hospital, hospital_gb):
+    """MLtoDNN plans carry live closures: never persisted, never crashing."""
+    db = raven.connect(hospital.tables, stats="auto")
+    db.register_model("m", hospital_gb)
+    prep = db.sql(SQL).prepare(transform="dnn", params={"t": 0.5})
+    store = ArtifactStore(str(tmp_path))
+    assert not store.save_plan("qkey", prep.plan, prep.report)
+    assert store.stats.skipped == 1
+    assert store.load_plan("qkey") is None
+
+
+def test_env_digest_keys_structure_not_values():
+    a = {"t": {"x": np.zeros(8, np.float32)}}
+    b = {"t": {"x": np.ones(8, np.float32)}}
+    assert env_digest(a) == env_digest(b)
+    wider = {"t": {"x": np.zeros(16, np.float32)}}
+    other_dtype = {"t": {"x": np.zeros(8, np.int32)}}
+    renamed = {"t": {"y": np.zeros(8, np.float32)}}
+    assert len({env_digest(a), env_digest(wider),
+                env_digest(other_dtype), env_digest(renamed)}) == 4
+
+
+# ---------------------------------------------------------------------------
+# in-process warm start (fresh compiled-plan cache, shared cache_dir)
+# ---------------------------------------------------------------------------
+
+
+def test_fresh_session_warm_starts_from_disk(tmp_path, hospital, hospital_gb):
+    cache = str(tmp_path / "cache")
+    _, cold = _serve_once(hospital.tables, hospital_gb, cache)
+    cold_stats = PLAN_CACHE_STATS.snapshot()
+    assert cold_stats["traces"] >= 2  # one per bucket
+    assert cold_stats["disk_misses"] >= 2
+
+    clear_plan_cache()
+    set_artifact_store(None)
+    db, warm = _serve_once(hospital.tables, hospital_gb, cache)
+    stats = db.cache_stats()
+    assert stats["traces"] == 0, "warm process must not trace served buckets"
+    assert stats["disk_hits"] > 0
+    assert stats["server"]["warm_started_buckets"] >= 2
+    assert stats["artifact_store"]["plan_hits"] == 1
+    for c, w in zip(cold, warm):
+        np.testing.assert_allclose(c, w, rtol=1e-6)
+    # the stage-level disk loads surface in explain()'s per-stage lines
+    assert any(s.disk_loads for s in db.server.queries["hot"].compiled.stages)
+
+
+def test_unseen_bucket_traces_live_and_persists(tmp_path, hospital, hospital_gb):
+    cache = str(tmp_path / "cache")
+    _serve_once(hospital.tables, hospital_gb, cache, sizes=(100,))
+    clear_plan_cache()
+    set_artifact_store(None)
+    db, _ = _serve_once(hospital.tables, hospital_gb, cache, sizes=(100, 900))
+    stats = db.cache_stats()
+    # 100-row bucket came from disk; the never-seen 900-row bucket traced
+    assert stats["disk_hits"] > 0
+    assert stats["traces"] == 1
+    assert stats["artifact_store"]["stage_saves"] == 1
+
+
+def test_cacheless_connect_clears_the_global_store(tmp_path, hospital):
+    db = raven.connect(hospital.tables, stats=None, cache_dir=str(tmp_path))
+    assert get_artifact_store() is db.artifact_store
+    # a later cache-less session must not inherit (and write into) the
+    # previous session's store
+    raven.connect(hospital.tables, stats=None)
+    assert get_artifact_store() is None
+
+
+def test_close_uninstalls_own_store(tmp_path, hospital):
+    with raven.connect(
+        hospital.tables, stats=None, cache_dir=str(tmp_path)
+    ) as db:
+        assert get_artifact_store() is db.artifact_store
+    assert get_artifact_store() is None
+
+
+def test_identity_hashed_stage_never_touches_the_store(tmp_path, hospital):
+    """A TensorOp with a raw closure (no __fingerprint_token__) hashes by
+    id(): its fingerprint is meaningless in another process, so neither
+    loads nor saves may key on it."""
+    import jax.numpy as jnp
+
+    from repro.relational.engine import Scan, TensorOp, compile_plan
+
+    store = ArtifactStore(str(tmp_path))
+    set_artifact_store(store)
+    plan = TensorOp(
+        child=Scan(table="patients", columns=["bmi"]),
+        fn=lambda cols: {"double_bmi": cols["bmi"] * 2.0},
+        output_names=["double_bmi"],
+    )
+    compiled = compile_plan(plan)
+    assert not compiled.graph.stages[0].content_stable
+    db = {"patients": {"bmi": jnp.asarray(np.arange(8.0, dtype=np.float32))}}
+    out = compiled(db)
+    np.testing.assert_allclose(
+        np.asarray(out.columns["double_bmi"]), np.arange(8.0) * 2
+    )
+    assert compiled.warm_start(store) == 0
+    assert store.stats.stage_saves == 0 and store.stats.stage_misses == 0
+    assert not os.listdir(os.path.join(store.root, "stages"))
+
+
+def test_reregistration_does_not_fabricate_disk_hits(tmp_path, hospital, hospital_gb):
+    """Buckets traced live (and saved) by THIS process must not be counted
+    as disk warm starts when the query is re-registered."""
+    cache = str(tmp_path / "cache")
+    db = raven.connect(hospital.tables, stats="auto", cache_dir=cache)
+    db.register_model("m", hospital_gb)
+    prep = db.sql(SQL).prepare(transform="sql", params={"t": 0.5})
+    prep.serve("hot")
+    prep.submit(make_hospital(100, seed=40).tables["patients"])
+    db.flush()
+    assert db.cache_stats()["disk_hits"] == 0
+    prep.serve("hot")  # re-register under the same name
+    stats = db.cache_stats()
+    assert stats["disk_hits"] == 0
+    assert stats["server"]["warm_started_buckets"] == 0
+
+
+# ---------------------------------------------------------------------------
+# failure modes
+# ---------------------------------------------------------------------------
+
+
+def _stage_entry_files(cache: str, name: str) -> list[str]:
+    root = os.path.join(cache, "stages")
+    return [
+        os.path.join(dirpath, name)
+        for dirpath, _, files in os.walk(root)
+        if name in files
+    ]
+
+
+def test_corrupted_stage_artifact_falls_back_live(tmp_path, hospital, hospital_gb):
+    cache = str(tmp_path / "cache")
+    _, cold = _serve_once(hospital.tables, hospital_gb, cache, sizes=(100,))
+    blobs = _stage_entry_files(cache, "exported.bin")
+    assert blobs
+    for b in blobs:  # truncate + garbage: deserialization must fail
+        with open(b, "wb") as f:
+            f.write(b"\x00garbage")
+    clear_plan_cache()
+    set_artifact_store(None)
+    db, warm = _serve_once(hospital.tables, hospital_gb, cache, sizes=(100,))
+    stats = db.cache_stats()
+    assert stats["traces"] >= 1  # compiled live, no crash
+    assert stats["artifact_store"]["corrupt"] >= 1
+    np.testing.assert_allclose(cold[0], warm[0], rtol=1e-6)
+    # the quarantined entry was rebuilt by the live compile
+    assert get_artifact_store().stats.stage_saves >= 1
+
+
+def test_corrupted_plan_blob_falls_back_live(tmp_path, hospital, hospital_gb):
+    cache = str(tmp_path / "cache")
+    _serve_once(hospital.tables, hospital_gb, cache, sizes=(100,))
+    plans = _stage_entry_files(cache, "plan.pkl") or [
+        os.path.join(cache, "plans", d, "plan.pkl")
+        for d in os.listdir(os.path.join(cache, "plans"))
+    ]
+    assert plans
+    for p in plans:
+        with open(p, "wb") as f:
+            f.write(b"not a pickle")
+    clear_plan_cache()
+    set_artifact_store(None)
+    db, _ = _serve_once(hospital.tables, hospital_gb, cache, sizes=(100,))
+    assert db.cache_stats()["artifact_store"]["corrupt"] >= 1
+
+
+def _rewrite_meta(cache: str, mutate) -> int:
+    n = 0
+    for dirpath, _, files in os.walk(cache):
+        if "meta.json" in files:
+            p = os.path.join(dirpath, "meta.json")
+            with open(p) as f:
+                meta = json.load(f)
+            mutate(meta)
+            with open(p, "w") as f:
+                json.dump(meta, f)
+            n += 1
+    return n
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        lambda m: m.update(store_version=STORE_VERSION + 1),
+        lambda m: m.update(backend="tpu"),
+        lambda m: m.update(jax_version="0.0.1"),
+    ],
+    ids=["store_version", "backend", "jax_version"],
+)
+def test_incompatible_artifacts_rejected(tmp_path, hospital, hospital_gb, mutate):
+    cache = str(tmp_path / "cache")
+    _serve_once(hospital.tables, hospital_gb, cache, sizes=(100,))
+    assert _rewrite_meta(cache, mutate) >= 2  # plan + stage entries
+    clear_plan_cache()
+    set_artifact_store(None)
+    db, _ = _serve_once(hospital.tables, hospital_gb, cache, sizes=(100,))
+    stats = db.cache_stats()
+    assert stats["disk_hits"] == 0
+    assert stats["traces"] >= 1
+    assert stats["artifact_store"]["incompatible"] >= 2
+
+
+def test_concurrent_writers_do_not_clobber(tmp_path):
+    """Racing saves of the same content-addressed key: atomic rename means
+    one complete winner, losers discard, and the entry always loads."""
+    import jax.numpy as jnp
+
+    store = ArtifactStore(str(tmp_path))
+
+    def fn(env):
+        return {"y": env["t"]["x"] * 2.0}
+
+    env = {"t": {"x": jnp.arange(32, dtype=jnp.float32)}}
+    digest = env_digest(env)
+    errors: list[BaseException] = []
+
+    def writer():
+        try:
+            store.save_stage("stagefp", digest, fn, env)
+        except BaseException as e:  # pragma: no cover - the assertion target
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert store.stage_digests("stagefp") == [digest]
+    call = store.load_stage("stagefp", digest)
+    assert call is not None
+    np.testing.assert_allclose(
+        np.asarray(call(env)["y"]), np.arange(32) * 2.0
+    )
+    # no tmp dirs left behind
+    assert not [d for d in os.listdir(store.root) if d.startswith(".art_tmp_")]
+
+
+def test_eviction_cap_bounds_the_cache_dir(tmp_path, hospital, hospital_gb):
+    db = raven.connect(hospital.tables, stats="auto")
+    db.register_model("m", hospital_gb)
+    prep = db.sql(SQL).prepare(transform="sql", params={"t": 0.5})
+    store = ArtifactStore(str(tmp_path), max_entries=3)
+    for i in range(8):
+        assert store.save_plan(f"q{i}", prep.plan, prep.report)
+    assert len(store._entries()) <= 3
+    assert store.stats.evictions >= 5
+    # evicted entries miss cleanly; survivors still load
+    assert store.load_plan("q0") is None
+    assert store.load_plan("q7") is not None
+
+
+# ---------------------------------------------------------------------------
+# the acceptance path: two real processes
+# ---------------------------------------------------------------------------
+
+_CHILD = """
+import dataclasses, json, sys
+import numpy as np
+import repro as raven
+from repro.data.datasets import make_hospital
+from repro.ml.pipeline import load_pipeline
+
+
+def perturb_one_weight(pipe):
+    # nudge one model weight: every content fingerprint downstream changes
+    for n in pipe.nodes:
+        for v in n.attrs.values():
+            if dataclasses.is_dataclass(v):
+                for f in dataclasses.fields(v):
+                    arr = getattr(v, f.name)
+                    if isinstance(arr, np.ndarray) and arr.dtype.kind == "f":
+                        arr += 1e-3
+                        return
+            elif isinstance(v, np.ndarray) and v.dtype.kind == "f":
+                v += 1e-3
+                return
+    raise RuntimeError("no float weight found to perturb")
+
+
+def main():
+    cache_dir, pipe_path, perturb = sys.argv[1], sys.argv[2], sys.argv[3] == "1"
+    pipe = load_pipeline(pipe_path)
+    if perturb:
+        perturb_one_weight(pipe)
+    ds = make_hospital(512, seed=7)
+    db = raven.connect(ds.tables, stats="auto", cache_dir=cache_dir)
+    db.register_model("m", pipe)
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) AS p "
+        "WHERE score >= :t"
+    ).prepare(transform="sql", params={"t": 0.5})
+    prep.serve("hot")
+    sums = []
+    for i, n in enumerate((100, 200)):
+        req = prep.submit(make_hospital(n, seed=40 + i).tables["patients"])
+        db.flush()
+        sums.append(float(np.sum(req.result["score"])))
+    s = db.cache_stats()
+    print(json.dumps({
+        "traces": s["traces"],
+        "disk_hits": s["disk_hits"],
+        "disk_misses": s["disk_misses"],
+        "warm_started_buckets": s["server"]["warm_started_buckets"],
+        "plan_hits": s["artifact_store"]["plan_hits"],
+        "sums": sums,
+    }))
+
+
+main()
+"""
+
+
+def _run_child(script, cache, pipe_path, perturb=False):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, script, cache, pipe_path, "1" if perturb else "0"],
+        capture_output=True, text=True, timeout=300, env=env, cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_cold_process_warm_start(tmp_path, hospital, hospital_gb):
+    """Process A prepares + serves; process B (fresh interpreter, same
+    cache_dir) re-prepares with disk hits and zero new XLA traces for the
+    buckets A served; a perturbed model misses every key and compiles live."""
+    from repro.ml.pipeline import save_pipeline
+
+    script = str(tmp_path / "cold_child.py")
+    with open(script, "w") as f:
+        f.write(_CHILD)
+    pipe_path = str(tmp_path / "pipe.npz")
+    save_pipeline(hospital_gb, pipe_path)
+    cache = str(tmp_path / "cache")
+
+    a = _run_child(script, cache, pipe_path)
+    assert a["traces"] >= 2 and a["disk_hits"] == 0
+
+    b = _run_child(script, cache, pipe_path)
+    assert b["disk_hits"] > 0
+    assert b["plan_hits"] == 1, "process B must skip re-optimization"
+    assert b["warm_started_buckets"] >= 2
+    assert b["traces"] == 0, (
+        "process B re-traced buckets process A already exported"
+    )
+    np.testing.assert_allclose(a["sums"], b["sums"], rtol=1e-6)
+
+    c = _run_child(script, cache, pipe_path, perturb=True)
+    assert c["disk_hits"] == 0, "changed weights must never reuse artifacts"
+    assert c["traces"] >= 2, "mismatch falls back to live compilation"

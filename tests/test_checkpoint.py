@@ -4,7 +4,6 @@ from __future__ import annotations
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.checkpoint import (
     CheckpointManager,

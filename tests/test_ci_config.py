@@ -1,0 +1,83 @@
+"""The CI definition is part of the contract: it must stay parseable and the
+tier-1 job must invoke the canonical gate script (``tests/run_tier1.sh``) —
+not an ad-hoc pytest line that could drift from what contributors run."""
+from __future__ import annotations
+
+import os
+
+import pytest
+
+yaml = pytest.importorskip("yaml")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKFLOW = os.path.join(REPO, ".github", "workflows", "ci.yml")
+
+
+@pytest.fixture(scope="module")
+def workflow():
+    with open(WORKFLOW) as f:
+        doc = yaml.safe_load(f)
+    assert isinstance(doc, dict)
+    return doc
+
+
+def _run_steps(job: dict) -> list[str]:
+    return [s["run"].strip() for s in job["steps"] if "run" in s]
+
+
+def test_workflow_parses_with_expected_jobs(workflow):
+    assert {"tier1", "lint", "nightly"} <= set(workflow["jobs"])
+    # "on" parses as boolean True in YAML 1.1
+    triggers = workflow.get("on", workflow.get(True))
+    assert "pull_request" in triggers and "push" in triggers
+    assert "schedule" in triggers, "nightly needs a schedule trigger"
+
+
+def test_tier1_invokes_the_gate_script_exactly(workflow):
+    steps = _run_steps(workflow["jobs"]["tier1"])
+    assert "tests/run_tier1.sh" in steps, (
+        "the tier-1 job must run tests/run_tier1.sh itself, not an ad-hoc "
+        f"pytest invocation — got {steps}"
+    )
+    assert not any("pytest" in s for s in steps)
+
+
+def test_tier1_installs_pinned_requirements_with_pip_cache(workflow):
+    job = workflow["jobs"]["tier1"]
+    assert any("-r requirements.txt" in s for s in _run_steps(job))
+    setup = next(
+        s for s in job["steps"]
+        if "actions/setup-python" in s.get("uses", "")
+    )
+    assert setup["with"]["cache"] == "pip"
+
+
+def test_concurrency_cancels_superseded_runs(workflow):
+    assert workflow["concurrency"]["cancel-in-progress"] is True
+
+
+def test_lint_job_runs_ruff(workflow):
+    steps = _run_steps(workflow["jobs"]["lint"])
+    assert any(s.startswith("ruff check") for s in steps)
+
+
+def test_nightly_runs_full_suite_and_benchmark_smoke(workflow):
+    job = workflow["jobs"]["nightly"]
+    assert job["if"] == "github.event_name == 'schedule'"
+    steps = _run_steps(job)
+    # full suite: no `-m "not slow"` filter
+    assert any("pytest" in s and "not slow" not in s for s in steps)
+    assert any("benchmarks/serve_query.py --smoke" in s for s in steps)
+
+
+def test_requirements_are_fully_pinned():
+    with open(os.path.join(REPO, "requirements.txt")) as f:
+        lines = [
+            ln.strip() for ln in f
+            if ln.strip() and not ln.strip().startswith("#")
+        ]
+    assert lines, "requirements.txt must pin the baseline environment"
+    for ln in lines:
+        assert "==" in ln, f"unpinned requirement: {ln!r}"
+    names = {ln.split("==")[0].lower() for ln in lines}
+    assert {"jax", "jaxlib", "numpy", "pytest", "hypothesis", "ruff"} <= names

@@ -2,14 +2,12 @@
 so the main pytest process stays single-device)."""
 from __future__ import annotations
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import numpy as np
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -11,7 +11,6 @@ from repro.ml import (
     OneHotEncoder,
     RandomForestClassifier,
     StandardScaler,
-    fit_pipeline,
     run_pipeline,
 )
 from repro.ml.pipeline import load_pipeline, save_pipeline

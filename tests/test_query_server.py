@@ -17,7 +17,6 @@ from repro.relational.engine import (
 )
 from repro.serve import PredictionQueryServer, row_bucket
 from repro.sql.parser import parse_prediction_query
-from tests.conftest import train_pipeline
 
 SQL_STAR = "SELECT * FROM PREDICT(model='m', data=patients) AS p WHERE score >= 0.6"
 SQL_AGG = (

@@ -10,7 +10,7 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
-from repro.core.ir import LScan, PredictionQuery, TableStats, walk
+from repro.core.ir import LScan, TableStats, walk
 from repro.core.optimizer import OptimizerOptions, RavenOptimizer
 from repro.core.rules.data_induced import apply_data_induced
 from repro.core.rules.predicate_pruning import apply_predicate_pruning
@@ -18,7 +18,7 @@ from repro.core.rules.projection_pushdown import apply_projection_pushdown
 from repro.relational.engine import Join as PJoin
 from repro.relational.engine import execute_plan, walk_plan
 from repro.sql.parser import parse_prediction_query
-from tests.conftest import predictions_match, train_pipeline
+from tests.conftest import train_pipeline
 
 
 def _count_query(ds, pipe, where=""):

@@ -1,10 +1,9 @@
 """PREDICT-statement SQL frontend."""
 from __future__ import annotations
 
-import numpy as np
 import pytest
 
-from repro.core.ir import LAggregate, LFilter, LJoin, LPredict, LScan, walk
+from repro.core.ir import LAggregate, LFilter, LJoin, LPredict, walk
 from repro.sql.parser import parse_prediction_query
 from tests.conftest import train_pipeline
 

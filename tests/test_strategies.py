@@ -44,7 +44,6 @@ def test_strategy_fit_and_choose(corpus, cls):
     # the strategy must beat always-worst by construction on training data
     res = evaluate_strategy(s, corpus.stats, corpus.labels, corpus.runtimes)
     worst = corpus.runtimes.max(axis=1).sum()
-    opt = corpus.runtimes.min(axis=1).sum()
     chosen = corpus.runtimes[
         np.arange(len(choices)), [TRANSFORMS.index(c) for c in choices]
     ].sum()

@@ -27,7 +27,7 @@ def test_loss_decreases_on_planted_bigrams(tmp_path):
 def test_checkpoint_resume_continues(tmp_path):
     d = str(tmp_path / "ckpt")
     quiet = lambda *a: None
-    a = train_loop(
+    train_loop(
         arch="qwen2-0.5b", steps=10, batch=4, seq=32, ckpt_dir=d,
         ckpt_every=5, log_every=100, print_fn=quiet,
     )

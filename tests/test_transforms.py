@@ -5,7 +5,6 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
-from repro.core.rules.ml_to_dnn import MLtoDNNUnsupported, compile_pipeline_to_dnn
 from repro.core.rules.ml_to_sql import MLtoSQLUnsupported, compile_pipeline_to_sql
 from repro.ml.pipeline import PipelineNode, TrainedPipeline, InputSpec, run_pipeline
 from repro.relational.expr import eval_expr
