@@ -33,12 +33,28 @@ Part 3 — cold-process A/B, the artifact-store payoff:
   reuses it: the optimizer is skipped and every bucket deserializes with
   zero new XLA traces.
 
+Part 4 — mixed workload, the pipelined-scheduler payoff:
+
+  one UDF-heavy query (MLUdf host boundary, bulk batches) and one small
+  latency-sensitive pure query served from the SAME server under concurrent
+  threaded load. ``serial`` runs the old stage-at-a-time group runner on a
+  single pump; ``pipelined`` runs the EDF scheduler + pipelined executor:
+  host boundaries on the boundary pool, device stages dispatched async, the
+  small query's queue flushed by its own deadline. Reports per-class
+  throughput and p50/p99 — the headline is pipelined >= 1.5x serial
+  throughput with the small query's p99 staying near its latency target
+  while bulk groups are in flight.
+
 Reports throughput (rows/s), XLA recompile counts, per-stage timings, and
 request-latency percentiles. Headlines: served/percall >= 5x on the pure
 plan, staged/postudf >= 2x on the multi-stage plan, warm cold-start traces
-== 0.
+== 0, pipelined/serial >= 1.5x on the mixed workload.
 
-    PYTHONPATH=src:. python benchmarks/serve_query.py [--quick | --smoke]
+    PYTHONPATH=src:. python benchmarks/serve_query.py \
+        [--quick | --smoke] [--json [PATH]]
+
+``--json`` writes the headline numbers to BENCH_serving.json (or PATH) —
+the committed baseline + the artifact nightly CI uploads.
 """
 from __future__ import annotations
 
@@ -47,6 +63,7 @@ import os
 import subprocess
 import sys
 import tempfile
+import threading
 import time
 
 import numpy as np
@@ -287,6 +304,163 @@ def run_cold(pipe_path: str) -> dict:
     }
 
 
+def parallel_efficiency() -> float:
+    """How much concurrent CPU this machine actually grants the process.
+
+    Two GIL-free BLAS streams vs one: ~2.0 on an unloaded 2-core box, ~1.0
+    in a cgroup throttled to a single effective core. Host/device overlap
+    cannot beat this ceiling — a pipelined schedule on a 1-core quota just
+    time-slices — so the A/B below reports it alongside the speedup (and CI
+    gates its assertion on it).
+    """
+    import threading
+
+    a = np.random.default_rng(0).random((1024, 1024))
+
+    def work():
+        for _ in range(4):
+            np.dot(a, a)
+
+    work()  # warm BLAS pools
+    t0 = time.perf_counter()
+    work()
+    solo = time.perf_counter() - t0
+    threads = [threading.Thread(target=work) for _ in range(2)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dual = time.perf_counter() - t0
+    return 2.0 * solo / max(dual, 1e-9)
+
+
+def run_mixed(db, sql, quick: bool = False) -> dict:
+    """Part 4: serial vs pipelined scheduling under a mixed concurrent load.
+
+    The heavy class is the UDF (transform='none') plan: its bulk batches
+    arrive as one backlog, so the serial runner pins the pump inside each
+    group's host boundary. The small class is the pure (MLtoSQL) plan, paced
+    as a steady trickle of latency probes on a tight target. Both legs serve
+    both queries from one server; only the execution/scheduling mode
+    differs. Each leg runs twice and keeps its best pass (cgroup throttling
+    on shared CI boxes makes single passes noisy).
+    """
+    n_heavy = 6 if quick else 10
+    heavy_rows = 8192
+    n_small = 16 if quick else 24
+    small_rows = 1024
+    small_every_s = 0.02
+    small_target_ms = 10.0
+    heavy_target_ms = 25.0  # bulk declares it can wait: the scheduler keeps
+    #                         the small query's tighter deadlines ahead of it
+    heavy_batches = [make_hospital(heavy_rows, seed=400 + i).tables["patients"]
+                     for i in range(n_heavy)]
+    small_batches = [make_hospital(small_rows, seed=700 + i).tables["patients"]
+                     for i in range(n_small)]
+    total_rows = n_heavy * heavy_rows + n_small * small_rows
+
+    def one_pass(pipelined: bool) -> dict:
+        clear_plan_cache()
+        # one boundary worker: on this workload the UDF's numpy kernels are
+        # memory-bound, so the overlap win is host-vs-device, not
+        # host-vs-host. max_inflight is raised so the pump keeps feeding
+        # cheap device groups while bulk groups sit in the boundary queue
+        srv = PredictionQueryServer(
+            pipelined=pipelined, boundary_workers=1, max_inflight=32,
+        )
+        # coalesce caps pin each measured group to the bucket shapes the
+        # warmup below compiles, so the A/B measures scheduling — not
+        # whichever leg happens to hit a fresh XLA specialization first
+        heavy = db.sql(sql).prepare(transform="none", params={"t": 0.6}).serve(
+            "heavy", server=srv, max_latency_ms=heavy_target_ms,
+            max_coalesce=heavy_rows,
+        )
+        small = db.sql(sql).prepare(transform="sql", params={"t": 0.6}).serve(
+            "small", server=srv, max_latency_ms=small_target_ms,
+            max_coalesce=small_rows,
+        )
+        # warm every bucket both classes will touch, then measure
+        heavy.submit(heavy_batches[0]).wait(timeout=300)
+        small.submit(small_batches[0]).wait(timeout=300)
+        warm_traces = PLAN_CACHE_STATS.traces
+        h_reqs, s_reqs = [], []
+
+        def small_submitter():
+            for b in small_batches:
+                s_reqs.append(small.submit(b))
+                time.sleep(small_every_s)
+
+        t0 = time.perf_counter()
+        prober = threading.Thread(target=small_submitter)
+        prober.start()
+        for b in heavy_batches:  # the bulk backlog lands at once
+            h_reqs.append(heavy.submit(b))
+        prober.join()
+        for r in h_reqs + s_reqs:
+            r.wait(timeout=600)
+        wall = time.perf_counter() - t0
+        retraces = PLAN_CACHE_STATS.traces - warm_traces
+        h_lat = np.array([r.latency_s * 1e3 for r in h_reqs])
+        s_lat = np.array([r.latency_s * 1e3 for r in s_reqs])
+        snap = srv.stats_snapshot()
+        srv.shutdown()
+        return {
+            "wall_s": wall,
+            "rows_s": total_rows / wall,
+            "heavy_p50_ms": float(np.percentile(h_lat, 50)),
+            "heavy_p99_ms": float(np.percentile(h_lat, 99)),
+            "small_p50_ms": float(np.percentile(s_lat, 50)),
+            "small_p99_ms": float(np.percentile(s_lat, 99)),
+            "retraces_after_warmup": retraces,
+            "overlap_s": snap["pipeline"]["overlap_s"],
+            "overlapped_groups": snap["pipeline"]["overlapped_groups"],
+        }
+
+    def leg(pipelined: bool) -> dict:
+        passes = [one_pass(pipelined) for _ in range(2)]
+        return min(passes, key=lambda r: r["wall_s"])
+
+    eff = parallel_efficiency()
+    serial = leg(pipelined=False)
+    piped = leg(pipelined=True)
+
+    print("serve_query_mixed,variant,wall_s,rows_per_s,small_p50_ms,"
+          "small_p99_ms,heavy_p99_ms,post_warm_retraces")
+    for name, r in (("serial", serial), ("pipelined", piped)):
+        print(f"serve_query_mixed,{name},{r['wall_s']:.3f},"
+              f"{r['rows_s']:.0f},{r['small_p50_ms']:.2f},"
+              f"{r['small_p99_ms']:.2f},{r['heavy_p99_ms']:.2f},"
+              f"{r['retraces_after_warmup']}")
+    speedup = serial["wall_s"] / piped["wall_s"]
+    print(f"serve_query_mixed,speedup,pipelined vs serial = {speedup:.2f}x "
+          f"at parallel_efficiency={eff:.2f} "
+          f"(overlap {piped['overlap_s']:.2f}s across "
+          f"{piped['overlapped_groups']} groups; small-query p99 "
+          f"{serial['small_p99_ms']:.1f} -> {piped['small_p99_ms']:.1f} ms "
+          f"at a {small_target_ms:.0f} ms target)")
+    if eff < 1.4:
+        print("serve_query_mixed,note,this machine grants <1.4x concurrent "
+              "CPU — host/device overlap cannot express a wall-clock win "
+              "here; see parallel_efficiency in the JSON")
+    return {
+        "mixed_rows": total_rows,
+        "mixed_parallel_efficiency": eff,
+        "mixed_serial_s": serial["wall_s"],
+        "mixed_pipelined_s": piped["wall_s"],
+        "mixed_serial_rows_s": serial["rows_s"],
+        "mixed_pipelined_rows_s": piped["rows_s"],
+        "mixed_speedup_pipelined": speedup,
+        "mixed_small_target_ms": small_target_ms,
+        "mixed_small_p99_serial_ms": serial["small_p99_ms"],
+        "mixed_small_p99_pipelined_ms": piped["small_p99_ms"],
+        "mixed_heavy_p99_pipelined_ms": piped["heavy_p99_ms"],
+        "mixed_pipelined_retraces_after_warmup": piped["retraces_after_warmup"],
+        "mixed_overlap_s": piped["overlap_s"],
+        "mixed_overlapped_groups": piped["overlapped_groups"],
+    }
+
+
 def run(quick: bool = False):
     n_requests = 8 if quick else 24
     sizes = _request_sizes(n_requests)
@@ -316,19 +490,46 @@ def run(quick: bool = False):
         pipe_path = os.path.join(d, "pipe.npz")
         save_pipeline(pipe, pipe_path)
         rows.update(run_cold(pipe_path))
+
+    # part 4: mixed workload, serial vs pipelined scheduling
+    rows.update(run_mixed(db, sql, quick=quick))
     return rows
 
 
-def smoke() -> None:
+def _write_json(rows: dict, argv: list) -> None:
+    """Persist the headline numbers when --json [PATH] was requested."""
+    if "--json" not in argv:
+        return
+    i = argv.index("--json")
+    path = (
+        argv[i + 1]
+        if i + 1 < len(argv) and not argv[i + 1].startswith("-")
+        else "BENCH_serving.json"
+    )
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+def smoke() -> dict:
     """CI sanity run: the quick benchmark end to end, asserting the headline
-    invariants (warm serving beats per-call; warm cold-start never traces)."""
+    invariants (warm serving beats per-call; warm cold-start never traces;
+    pipelined mixed serving beats the serial runner without re-tracing)."""
     rows = run(quick=True)
     assert rows["speedup_served"] > 1.0, rows["speedup_served"]
     assert rows["cold_warm_traces"] == 0
     assert rows["cold_warm_disk_hits"] > 0
+    assert rows["mixed_pipelined_retraces_after_warmup"] == 0
+    if rows["mixed_parallel_efficiency"] >= 1.4:
+        # only where the machine actually grants concurrent CPU can overlap
+        # express a wall-clock win (a 1-core cgroup just time-slices)
+        assert rows["mixed_speedup_pipelined"] > 1.0, rows
     print(f"smoke ok: served {rows['speedup_served']:.1f}x, "
           f"staged {rows['speedup_staged']:.1f}x, "
-          f"warm cold-start {rows['cold_speedup_warm']:.1f}x")
+          f"warm cold-start {rows['cold_speedup_warm']:.1f}x, "
+          f"pipelined mixed {rows['mixed_speedup_pipelined']:.1f}x")
+    return rows
 
 
 if __name__ == "__main__":
@@ -336,6 +537,6 @@ if __name__ == "__main__":
         i = sys.argv.index("--cold-child")
         _cold_child(sys.argv[i + 1], sys.argv[i + 2])
     elif "--smoke" in sys.argv:
-        smoke()
+        _write_json(smoke(), sys.argv)
     else:
-        run(quick="--quick" in sys.argv)
+        _write_json(run(quick="--quick" in sys.argv), sys.argv)

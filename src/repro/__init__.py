@@ -20,6 +20,7 @@ Lower layers (``repro.core``, ``repro.sql``, ``repro.relational``,
 """
 from repro.errors import (
     RavenError,
+    ServerOverloadedError,
     SQLSyntaxError,
     StaleQueryError,
     UnboundParameterError,
@@ -52,4 +53,5 @@ __all__ = [
     "UnknownParameterError",
     "UnknownQueryError",
     "StaleQueryError",
+    "ServerOverloadedError",
 ]

@@ -42,6 +42,16 @@ class UnknownQueryError(RavenError):
     """``submit``/``rebind`` named a query never registered with the server."""
 
 
+class ServerOverloadedError(RavenError):
+    """A bounded queue (``serve(max_pending=...)``) rejected a submit.
+
+    Raised by ``submit(..., block=False)`` the moment a query's pending
+    queue is full, or by a blocking submit whose ``timeout`` expired before
+    the scheduler freed space. Backpressure instead of unbounded queueing:
+    the caller sheds load (or retries) rather than the server accumulating
+    an ever-deeper backlog it can never serve within its latency targets."""
+
+
 class StaleQueryError(RavenError):
     """A served handle no longer matches the registration under its name.
 

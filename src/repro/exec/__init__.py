@@ -1,22 +1,28 @@
-"""Physical execution layer: the StageGraph IR, the request pump, and the
-persistent artifact store.
+"""Physical execution layer: the StageGraph IR, the pipelined executor, the
+request scheduler, and the persistent artifact store.
 
 ``repro.exec.stages`` is the typed intermediate representation between the
 optimizer's physical plan and the runtime: a linear graph of declarative,
 content-fingerprinted stages (maximal pure-jnp segments and MLUdf host
-boundaries). ``repro.exec.pump`` drives latency-targeted background flushing
-for the serving layer. ``repro.exec.artifact_store`` persists optimizer
-output and AOT-exported stage executables across processes, keyed on the
-stage IR's chained content fingerprints.
+boundaries). ``repro.exec.pipeline`` executes that graph with host/device
+overlap across request groups; ``repro.exec.scheduler`` is the fair,
+backpressured multi-queue pump that feeds it (``repro.exec.pump`` keeps the
+original single-deadline pump for simple embedders).
+``repro.exec.artifact_store`` persists optimizer output and AOT-exported
+stage executables across processes, keyed on the stage IR's chained content
+fingerprints.
 """
 from repro.exec.artifact_store import ArtifactStore, StoreStats, env_digest
+from repro.exec.pipeline import PipelineExecutor
 from repro.exec.pump import RequestPump
+from repro.exec.scheduler import QueryQueue, Scheduler
 from repro.exec.stages import (
     RunResult,
     Stage,
     StageGraph,
     build_stage_graph,
     describe_segments,
+    donation_enabled,
     plan_segments,
     run_graph,
     seg_bucket,
@@ -24,14 +30,18 @@ from repro.exec.stages import (
 
 __all__ = [
     "ArtifactStore",
+    "PipelineExecutor",
+    "QueryQueue",
     "RequestPump",
     "RunResult",
+    "Scheduler",
     "StoreStats",
     "env_digest",
     "Stage",
     "StageGraph",
     "build_stage_graph",
     "describe_segments",
+    "donation_enabled",
     "plan_segments",
     "run_graph",
     "seg_bucket",

@@ -31,12 +31,16 @@ oldest-first eviction.
 """
 from __future__ import annotations
 
+import atexit
 import hashlib
 import json
 import os
 import pickle
+import queue
 import shutil
 import tempfile
+import threading
+import time
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -49,6 +53,23 @@ _STAGES = "stages"
 _META = "meta.json"
 _PLAN_BLOB = "plan.pkl"
 _STAGE_BLOB = "exported.bin"
+
+
+def abstract_env(env: dict[str, Any]) -> dict[str, Any]:
+    """Reduce an execution environment to its shape/dtype structure
+    (``jax.ShapeDtypeStruct`` leaves; already-abstract leaves pass through).
+
+    The single definition of the shapes-only snapshot used both by the
+    engine (which must take it *before* a donating call invalidates the
+    volatile buffers) and by the store's background writer (which must not
+    pin device arrays in its queue).
+    """
+    return jax.tree_util.tree_map(
+        lambda x: x if isinstance(x, jax.ShapeDtypeStruct)
+        else jax.ShapeDtypeStruct(jax.numpy.shape(x),
+                                  jax.numpy.result_type(x)),
+        env,
+    )
 
 
 def env_digest(env: dict[str, Any]) -> str:
@@ -91,6 +112,7 @@ class StoreStats:
     skipped: int = 0       # content not cross-process stable; not persisted
     save_errors: int = 0
     evictions: int = 0
+    background_writes: int = 0  # stage exports handed to the writer thread
 
     def snapshot(self) -> dict[str, int]:
         return dict(self.__dict__)
@@ -105,10 +127,20 @@ class ArtifactStore:
     caller compiles live.
     """
 
-    def __init__(self, root: str, *, max_entries: int = 512):
+    def __init__(
+        self,
+        root: str,
+        *,
+        max_entries: int = 512,
+        max_bytes: Optional[int] = None,
+    ):
         self.root = os.path.abspath(os.path.expanduser(root))
         self.max_entries = int(max_entries)
+        self.max_bytes = None if max_bytes is None else int(max_bytes)
         self.stats = StoreStats()
+        self._write_queue: Optional[queue.Queue] = None
+        self._writer: Optional[threading.Thread] = None
+        self._writer_lock = threading.Lock()
         os.makedirs(os.path.join(self.root, _PLANS), exist_ok=True)
         os.makedirs(os.path.join(self.root, _STAGES), exist_ok=True)
 
@@ -189,6 +221,8 @@ class ArtifactStore:
 
         ``fn`` must be the *raw* stage function (not the trace-accounting
         wrapper) so the export trace doesn't inflate retrace counters.
+        ``env`` may carry real arrays or ``jax.ShapeDtypeStruct`` leaves —
+        the export only needs the structure.
         """
         from jax import export
 
@@ -203,6 +237,92 @@ class ArtifactStore:
             os.path.join(self.root, _STAGES, stage_fp, digest),
             {_STAGE_BLOB: bytes(blob)}, meta,
         )
+
+    def save_stage_async(
+        self, stage_fp: str, digest: str, fn: Callable, env: dict[str, Any]
+    ) -> None:
+        """Queue one stage export for the background writer thread.
+
+        The first compile of a new bucket used to pay ``jax.export``
+        serialization + the disk write inline on the request path; this
+        hands both to a daemon writer. ``env`` is reduced to shapes/dtypes
+        immediately (:func:`abstract_env`), so the queue never pins device
+        buffers (and a donated entry buffer can't be touched after
+        invalidation). ``drain()`` blocks until queued writes land —
+        registered via ``atexit`` too, so a short-lived process still
+        persists what it compiled.
+        """
+        abstract = abstract_env(env)
+        with self._writer_lock:
+            if self._write_queue is None:
+                self._write_queue = queue.Queue()
+                self._writer = threading.Thread(
+                    target=self._writer_loop, name="raven-artifact-writer",
+                    daemon=True,
+                )
+                self._writer.start()
+                atexit.register(self.drain)
+            self.stats.background_writes += 1
+            self._write_queue.put((stage_fp, digest, fn, abstract))
+
+    def _writer_loop(self) -> None:
+        q = self._write_queue
+        while True:
+            item = q.get()
+            try:
+                if item is not None:
+                    self.save_stage(*item)
+            except BaseException:  # noqa: BLE001 — the writer must survive
+                self.stats.save_errors += 1
+            finally:
+                q.task_done()
+            if item is None:
+                return
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every queued background write has been attempted.
+
+        ``timeout`` bounds the wait (None = until the queue empties); safe
+        to call from any thread, any number of times.
+        """
+        with self._writer_lock:
+            q = self._write_queue
+        if q is None:
+            return
+        if timeout is None:
+            q.join()
+            return
+        # poll with a deadline instead of spawning a joiner thread: a stuck
+        # write must not leak one permanently-parked thread per timed call
+        end = time.monotonic() + timeout
+        while q.unfinished_tasks and time.monotonic() < end:
+            time.sleep(0.01)
+
+    def close(self) -> None:
+        """Flush pending writes, stop the writer thread, and drop the
+        ``atexit`` hook. Long-lived processes that open many stores
+        (per-tenant sessions, reconnects) would otherwise accumulate one
+        parked writer thread — and one atexit reference pinning the store —
+        per store. A closed store stays usable: the next async save simply
+        starts a fresh writer."""
+        with self._writer_lock:
+            q, writer = self._write_queue, self._writer
+            self._write_queue = None
+            self._writer = None
+        if q is None:
+            return
+        q.put(None)  # writes ahead of the sentinel still land (FIFO)
+        if writer is not None:
+            writer.join(timeout=30.0)
+        try:
+            atexit.unregister(self.drain)
+        except Exception:  # pragma: no cover - unregister is best-effort
+            pass
+
+    def pending_writes(self) -> int:
+        with self._writer_lock:
+            q = self._write_queue
+        return 0 if q is None else q.unfinished_tasks
 
     def load_stage(self, stage_fp: str, digest: str) -> Optional[Callable]:
         """Deserialize one exported stage program, or None.
@@ -329,18 +449,52 @@ class ArtifactStore:
                     out.extend(os.path.join(d, n) for n in os.listdir(d))
         return [d for d in out if os.path.exists(os.path.join(d, _META))]
 
+    @staticmethod
+    def _entry_bytes(d: str) -> int:
+        total = 0
+        try:
+            for name in os.listdir(d):
+                try:
+                    total += os.path.getsize(os.path.join(d, name))
+                except OSError:
+                    pass
+        except OSError:
+            pass
+        return total
+
+    def total_bytes(self) -> int:
+        """Bytes held by complete entries (the ``max_bytes`` accounting)."""
+        return sum(self._entry_bytes(d) for d in self._entries())
+
     def _evict(self) -> None:
-        """Oldest-first eviction keeps the cache dir bounded."""
+        """Oldest-first eviction keeps the cache dir bounded — by entry
+        count (``max_entries``) and, when configured, by total size
+        (``max_bytes``): exported stage programs for wide buckets run to
+        megabytes each, so a count cap alone can still blow a disk quota."""
         entries = self._entries()
-        if len(entries) <= self.max_entries:
-            return
+        if len(entries) <= self.max_entries and self.max_bytes is None:
+            return  # common case: one length check, no stat storm
+
         def mtime(d: str) -> float:
             try:
                 return os.path.getmtime(os.path.join(d, _META))
             except OSError:
                 return 0.0
+
         entries.sort(key=mtime)
-        for d in entries[: len(entries) - self.max_entries]:
+        drop = max(0, len(entries) - self.max_entries)
+        victims = entries[:drop]
+        if self.max_bytes is not None:
+            sizes = {d: self._entry_bytes(d) for d in entries}
+            total = sum(sizes[d] for d in entries[drop:])
+            # never evict the newest entry: a single artifact larger than
+            # max_bytes would otherwise thrash the store forever
+            for d in entries[drop:-1]:
+                if total <= self.max_bytes:
+                    break
+                victims.append(d)
+                total -= sizes[d]
+        for d in victims:
             shutil.rmtree(d, ignore_errors=True)
             parent = os.path.dirname(d)
             if os.path.basename(os.path.dirname(parent)) == _STAGES:

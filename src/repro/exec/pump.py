@@ -11,8 +11,12 @@ padded execution while no request waits longer than the latency target.
 The pump owns no queue state of its own: ``notify(t_submit)`` arms a
 deadline, the loop sleeps until it, and the flush callable (the server's
 ``flush``) does the actual draining. Explicit ``server.flush()`` calls remain
-safe at any time — flushing is idempotent on an empty queue and serialized by
-the server's flush lock.
+safe at any time — flushing is idempotent on an empty queue.
+
+.. note:: The serving layer now schedules through
+   :class:`repro.exec.scheduler.Scheduler` — per-query queues, deadlines,
+   coalesce caps, and backpressure. ``RequestPump`` remains as the minimal
+   single-deadline pump for embedders that drive one flush callable.
 """
 from __future__ import annotations
 

@@ -1,0 +1,343 @@
+"""Fair, backpressured multi-queue request scheduling for the serving layer.
+
+This generalizes the single-deadline :class:`~repro.exec.pump.RequestPump`:
+instead of one global pending list flushed wholesale, every served query gets
+its own queue with its own latency target and bounds, and one pump thread
+schedules *groups* across them:
+
+  * **earliest-deadline-first** — each queue's deadline is its oldest
+    request's submit time plus that queue's ``max_latency_ms``, so a small
+    latency-sensitive query is flushed ahead of a bulk query that arrived
+    earlier but can afford to wait;
+  * **coalesce-width cap** — one dispatched group takes at most
+    ``max_coalesce`` rows off a queue, so a huge backlog is served as a
+    sequence of bounded groups (which the pipelined executor overlaps)
+    instead of one monolithic flush that monopolizes the server;
+  * **bounded queues / backpressure** — ``max_pending`` caps a queue's
+    depth; a submit against a full queue blocks until the scheduler frees
+    space (or its timeout expires) or fails fast with
+    :class:`~repro.errors.ServerOverloadedError`;
+  * **bounded dispatch** — at most ``max_inflight`` groups run concurrently,
+    so the pump never buries the device/boundary pool under an unbounded
+    pile of dispatched work.
+
+The scheduler owns no execution logic: ``dispatch(name, group)`` — supplied
+by the server — must return a future resolving when the group's requests
+are finished (it is expected to contain its own failures by marking the
+affected requests; the scheduler just records ``last_error`` and moves on).
+``drain()`` is the synchronous path: it pops and dispatches *everything*
+immediately, which is exactly the old ``server.flush()`` contract, so the
+scheduler works with no pump thread at all.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from repro.errors import ServerOverloadedError
+
+
+@dataclass
+class QueryQueue:
+    """Per-query pending queue + scheduling knobs."""
+
+    name: str
+    reqs: deque = field(default_factory=deque)  # (request, n_rows)
+    max_latency_ms: Optional[float] = None  # None -> scheduler default
+    max_pending: Optional[int] = None       # None -> unbounded
+    max_coalesce: Optional[int] = None      # rows/group; None -> sched default
+    last_pop: float = 0.0  # when this queue last got service (fairness key)
+
+    @property
+    def depth(self) -> int:
+        return len(self.reqs)
+
+
+class Scheduler:
+    """One pump thread, many queues; EDF flush order; bounded everything."""
+
+    def __init__(
+        self,
+        dispatch: Callable[[str, list], "Future"],
+        *,
+        default_latency_ms: float = 5.0,
+        default_coalesce: Optional[int] = None,
+        max_inflight: int = 4,
+    ):
+        self._dispatch = dispatch
+        self.default_latency_ms = float(default_latency_ms)
+        self.default_coalesce = default_coalesce
+        self.max_inflight = max(1, int(max_inflight))
+        self._cv = threading.Condition()
+        self._queues: dict[str, QueryQueue] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._stopped = False
+        self._inflight = 0
+        # pump-group generations: drain() waits only for groups the pump
+        # had popped *before* it was called (bounded under sustained load)
+        self._pump_started = 0
+        self._pump_settled = 0
+        # counters (reads are advisory; mutations under _cv)
+        self.flushes = 0  # pump-initiated group dispatches
+        self.backpressure_waits = 0
+        self.overloads = 0
+        self.max_queue_depth = 0
+        self.last_error: Optional[BaseException] = None
+
+    # -- queue management -----------------------------------------------------
+
+    def configure(
+        self,
+        name: str,
+        *,
+        max_latency_ms: Optional[float] = None,
+        max_pending: Optional[int] = None,
+        max_coalesce: Optional[int] = None,
+    ) -> QueryQueue:
+        """Create (or retune) the queue for ``name``; None leaves a knob."""
+        with self._cv:
+            q = self._queues.get(name)
+            if q is None:
+                q = self._queues[name] = QueryQueue(name=name)
+            if max_latency_ms is not None:
+                q.max_latency_ms = float(max_latency_ms)
+            if max_pending is not None:
+                q.max_pending = int(max_pending)
+            if max_coalesce is not None:
+                q.max_coalesce = int(max_coalesce)
+            return q
+
+    def depths(self) -> dict[str, int]:
+        with self._cv:
+            return {n: q.depth for n, q in self._queues.items() if q.depth}
+
+    def snapshot(self) -> dict[str, Any]:
+        with self._cv:
+            return {
+                "pump_flushes": self.flushes,
+                "groups_inflight": self._inflight,
+                "backpressure_waits": self.backpressure_waits,
+                "overloads": self.overloads,
+                "max_queue_depth": self.max_queue_depth,
+            }
+
+    # -- producer side --------------------------------------------------------
+
+    def enqueue(
+        self,
+        name: str,
+        req,
+        n_rows: int,
+        *,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> None:
+        """Queue one request; applies the queue's ``max_pending`` bound."""
+        with self._cv:
+            q = self._queues.get(name)
+            if q is None:
+                q = self._queues[name] = QueryQueue(name=name)
+            if q.max_pending is not None and q.depth >= q.max_pending:
+                if not block:
+                    self.overloads += 1
+                    raise ServerOverloadedError(self._overload_msg(q))
+                if timeout is None and not self.running:
+                    # nothing will ever free space: the synchronous protocol
+                    # drains via flush(), which this blocked caller can
+                    # never reach — fail fast instead of hanging forever
+                    self.overloads += 1
+                    raise ServerOverloadedError(
+                        self._overload_msg(q) + " (no pump thread is "
+                        "running: call flush(), or submit with a timeout)"
+                    )
+                self.backpressure_waits += 1
+                end = None if timeout is None else time.monotonic() + timeout
+                while q.depth >= q.max_pending:
+                    if timeout is None and not self.running:
+                        # the pump died (stop() racing this wait): nothing
+                        # will free space anymore — reject, don't strand
+                        self.overloads += 1
+                        raise ServerOverloadedError(self._overload_msg(q))
+                    left = None if end is None else end - time.monotonic()
+                    if left is not None and left <= 0:
+                        self.overloads += 1
+                        raise ServerOverloadedError(self._overload_msg(q))
+                    self._cv.wait(left if left is not None else 1.0)
+            q.reqs.append((req, int(n_rows)))
+            self.max_queue_depth = max(self.max_queue_depth, q.depth)
+            self._cv.notify_all()
+
+    def _overload_msg(self, q: QueryQueue) -> str:
+        return (
+            f"query '{q.name}' is overloaded: {q.depth} pending requests "
+            f"at max_pending={q.max_pending} — shed load, raise the bound, "
+            f"or wait for the scheduler to catch up"
+        )
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def start(self) -> "Scheduler":
+        with self._cv:
+            if self._thread is not None and self._thread.is_alive():
+                return self
+            self._stopped = False
+            self._thread = threading.Thread(
+                target=self._loop, name="raven-scheduler", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        """Stop the pump thread, then drain anything still pending."""
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join(timeout)
+        self.drain()
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    # -- scheduling -----------------------------------------------------------
+
+    def _deadline(self, q: QueryQueue) -> float:
+        target = (
+            q.max_latency_ms if q.max_latency_ms is not None
+            else self.default_latency_ms
+        )
+        return q.reqs[0][0].t_submit + target / 1e3
+
+    def _earliest(self, now: Optional[float] = None) -> Optional[QueryQueue]:
+        """The nonempty queue to serve next: earliest deadline first, with a
+        fairness guard — among queues *already past* their deadline, the
+        least-recently-served wins. Pure EDF would let a deep bulk backlog
+        (every group maximally overdue) monopolize the pump: a small query's
+        later-submitted requests have later deadlines, so they would starve
+        exactly when the server is busiest. Rotating overdue queues bounds a
+        small query's wait to ~one group of every other queue."""
+        if now is None:
+            now = time.perf_counter()
+        best: Optional[QueryQueue] = None
+        best_key: tuple = ()
+        for q in self._queues.values():
+            if not q.reqs:
+                continue
+            d = self._deadline(q)
+            # not yet due: sort by deadline after every overdue queue;
+            # overdue: sort by last service time (then deadline)
+            key = (
+                (1, d, 0.0) if d > now else (0, q.last_pop, d)
+            )
+            if best is None or key < best_key:
+                best, best_key = q, key
+        return best
+
+    def _pop_group(self, q: QueryQueue) -> list:
+        """Take the head of ``q`` up to its coalesce-width cap (>= 1 req)."""
+        cap = (
+            q.max_coalesce if q.max_coalesce is not None
+            else self.default_coalesce
+        )
+        group = []
+        rows = 0
+        while q.reqs:
+            req, n = q.reqs[0]
+            if group and cap is not None and rows + n > cap:
+                break
+            q.reqs.popleft()
+            group.append(req)
+            rows += n
+        q.last_pop = time.perf_counter()
+        self._cv.notify_all()  # wake backpressured submitters
+        return group
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                q: Optional[QueryQueue] = None
+                while not self._stopped:
+                    q = self._earliest()
+                    if q is None:
+                        self._cv.wait()
+                        continue
+                    wait_s = self._deadline(q) - time.perf_counter()
+                    if wait_s > 0:
+                        # coalescing window still open: later submits ride
+                        # along; an earlier deadline re-notifies the cv
+                        self._cv.wait(wait_s)
+                        continue
+                    if self._inflight >= self.max_inflight:
+                        self._cv.wait(0.05)
+                        continue
+                    break
+                if self._stopped:
+                    return
+                group = self._pop_group(q)
+                self._inflight += 1
+                self._pump_started += 1
+                self.flushes += 1
+                name = q.name
+            fut = self._dispatch_safe(name, group)
+            fut.add_done_callback(self._group_done)
+
+    def _group_done(self, fut: "Future") -> None:
+        e = fut.exception()
+        with self._cv:
+            self._inflight -= 1
+            self._pump_settled += 1
+            if e is not None:
+                self.last_error = e
+            self._cv.notify_all()
+
+    def _dispatch_safe(self, name: str, group: list) -> "Future":
+        try:
+            return self._dispatch(name, group)
+        except BaseException as e:  # noqa: BLE001 — contain; requests carry it
+            f: Future = Future()
+            f.set_exception(e)
+            return f
+
+    # -- the synchronous path -------------------------------------------------
+
+    def drain(self) -> list:
+        """Snapshot and dispatch every *currently pending* request (EDF
+        order), wait for completion, and return the drained requests.
+        Re-raises the first group failure after every group has settled —
+        the old synchronous ``flush()`` contract.
+
+        Bounded under sustained load: requests submitted after the snapshot
+        ride the next flush, and the final wait covers only pump groups
+        popped before this call — so "submit, flush, read the result" stays
+        correct even when the pump raced this call to the queue, without
+        flush() chasing global quiescence forever."""
+        todo: list[tuple[str, list]] = []
+        with self._cv:
+            pump_target = self._pump_started
+            while True:
+                q = self._earliest()
+                if q is None:
+                    break
+                todo.append((q.name, self._pop_group(q)))
+        dispatched = [
+            (group, self._dispatch_safe(name, group)) for name, group in todo
+        ]
+        drained = [r for _name, group in todo for r in group]
+        first: Optional[BaseException] = None
+        for _group, fut in dispatched:
+            e = fut.exception()  # blocks until the group settles
+            if e is not None and first is None:
+                first = e
+        with self._cv:
+            while self._pump_settled < pump_target:
+                self._cv.wait(1.0)
+        if first is not None:
+            self.last_error = first
+            raise first
+        return drained

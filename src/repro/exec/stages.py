@@ -28,6 +28,7 @@ re-tracing on data-dependent shape churn.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
@@ -63,6 +64,27 @@ MID_SEG = "__seg__"
 
 # state threaded through stages: (columns, valid-mask, segment-ids-or-None)
 State = tuple[dict[str, jnp.ndarray], jnp.ndarray, Optional[jnp.ndarray]]
+
+
+def donation_enabled() -> bool:
+    """Whether pure stages donate their entry buffers to XLA.
+
+    Donation lets the compiler reuse the (single-use) padded fact-spine
+    buffers in place instead of allocating fresh outputs. XLA:CPU does not
+    implement input-output aliasing, so by default donation is on only for
+    accelerator backends; ``RAVEN_DONATE=1``/``0`` forces it either way
+    (the forced-on CPU path still computes correctly — jax just warns that
+    the donated buffers were not usable).
+    """
+    flag = os.environ.get("RAVEN_DONATE")
+    if flag is not None:
+        return flag not in ("0", "false", "")
+    return jax.default_backend() != "cpu"
+
+
+# env keys that are per-execution (single-use) rather than database-resident:
+# eligible for donation alongside the donated fact tables
+VOLATILE_KEYS = (ROW_VALID_KEY, ROW_SEG_KEY, MID_TABLE)
 
 
 def seg_bucket(k: int, min_bucket: int = 4) -> int:
@@ -236,6 +258,13 @@ class Stage:
     traces: int = 0
     calls: int = 0
     total_s: float = 0.0
+    # pipelined-execution accounting: async_calls counts executions where a
+    # pure stage was *dispatched* without waiting for the device (dispatch_s
+    # is that enqueue cost; the device time overlaps other stages), and for
+    # host stages the wall time spent off the dispatch thread on the
+    # boundary pool
+    async_calls: int = 0
+    dispatch_s: float = 0.0
     # bucket programs served from the persistent artifact store instead of
     # being traced in this process (warm-start preloads + lazy disk hits)
     disk_loads: int = 0
@@ -250,10 +279,15 @@ class Stage:
         out = ", ".join(self.out_columns)
         pin = f" params=({', '.join(sorted(self.params))})" if self.params else ""
         disk = f" disk_loads={self.disk_loads}" if self.disk_loads else ""
+        pipe = ""
+        if self.async_calls:
+            d = 1e3 * self.dispatch_s / self.async_calls
+            word = "overlap" if self.kind == "host" else "dispatch"
+            pipe = f" pipelined={self.async_calls} {word}={d:.2f}ms"
         return (
             f"[{self.index}] {self.kind:<4} {self.label}  "
             f"fp={self.fingerprint[:12]}…  out=({out}){pin}  "
-            f"traces={self.traces} calls={self.calls} avg={avg}{disk}"
+            f"traces={self.traces} calls={self.calls} avg={avg}{pipe}{disk}"
         )
 
 
@@ -520,57 +554,115 @@ class RunResult:
     timings: list[float] = field(default_factory=list)
 
 
+def call_pure(stage: Stage, env: dict[str, Any],
+              donate: frozenset = frozenset()) -> State:
+    """Invoke one pure stage — the jitted runner when the engine installed
+    one (it understands the donation set), else the raw composed fn."""
+    if stage.runner is not None:
+        return stage.runner(env, donate=donate)
+    return stage.fn(env)
+
+
+def strip_consumed(env: dict[str, Any], donate: frozenset) -> dict[str, Any]:
+    """Drop the entry stage's single-use inputs from the env once consumed.
+
+    Under donation the entry stage aliased the padded fact spine (and the
+    row-validity/segment vectors) into its outputs, so later stages must not
+    see those now-invalid buffers; without donation this is a no-op so the
+    env pytree structure — and therefore every warm jit specialization and
+    on-disk artifact digest — is unchanged from the serial, non-donating
+    layout.
+    """
+    if not donate or not donation_enabled():
+        return env
+    drop = set(donate) | {ROW_VALID_KEY, ROW_SEG_KEY}
+    return {k: v for k, v in env.items() if k not in drop}
+
+
+def host_step(
+    stage: Stage,
+    state: State,
+    env: dict[str, Any],
+    *,
+    bucketer: Optional[Callable[[int], int]] = None,
+    on_mid_bucket: Optional[Callable[[int, int], None]] = None,
+) -> tuple[State, dict[str, Any]]:
+    """Run one MLUdf host boundary: synchronize the upstream device state,
+    compact to valid rows, run the interpreted pipeline, re-pad the output
+    to a shape bucket, and re-wrap it as the ``__mid__`` pseudo-table.
+
+    This is the graph's only synchronization point — ``np.asarray`` blocks
+    on the device work the upstream pure stages dispatched — which is what
+    lets the pipelined executor run it on a boundary worker thread while
+    the dispatch thread keeps feeding the device. Returns the new state and
+    the env (with ``__mid__`` installed) for the downstream stages.
+    """
+    cols, valid, seg = state
+    np_cols = {k: np.asarray(v) for k, v in cols.items()}
+    mask = np.asarray(valid)
+    np_cols = {k: v[mask] for k, v in np_cols.items()}  # compact
+    np_seg = np.asarray(seg)[mask] if seg is not None else None
+    out = run_udf(stage.udf, np_cols)
+    n = len(next(iter(out.values()))) if out else 0
+    b = bucketer(n) if bucketer is not None else n
+    if b > n:
+        out = {
+            k: np.concatenate([v, np.zeros(b - n, dtype=v.dtype)])
+            for k, v in out.items()
+        }
+        if np_seg is not None:
+            np_seg = np.concatenate(
+                [np_seg, np.zeros(b - n, dtype=np_seg.dtype)]
+            )
+    if on_mid_bucket is not None:
+        on_mid_bucket(stage.index, b)
+    mid = {k: jnp.asarray(v) for k, v in out.items()}
+    mid[MID_VALID] = jnp.asarray(np.arange(b) < n)
+    if np_seg is not None:
+        mid[MID_SEG] = jnp.asarray(np_seg, dtype=jnp.int32)
+    env = dict(env)
+    env[MID_TABLE] = mid
+    return _from_mid(env), env
+
+
 def run_graph(
     graph: StageGraph,
     env: dict[str, Any],
     *,
     bucketer: Optional[Callable[[int], int]] = None,
     on_mid_bucket: Optional[Callable[[int, int], None]] = None,
+    donate: frozenset = frozenset(),
 ) -> RunResult:
-    """Execute a stage graph over an environment.
+    """Execute a stage graph over an environment, one stage at a time.
 
     ``bucketer`` (serving layer) maps a host boundary's compacted row count
     to a padded bucket, so the *next* pure stage sees power-of-two shapes
     instead of data-dependent churn; ``on_mid_bucket(stage_index, bucket)``
     lets the caller account mid-graph bucket hits/misses. Without a
     ``bucketer`` the boundary output runs at its exact compacted shape (the
-    one-shot ``execute_plan`` path).
+    one-shot ``execute_plan`` path). ``donate`` names env tables whose
+    buffers are single-use (the serving layer's freshly padded fact spine)
+    and may be aliased into stage outputs on accelerator backends.
+
+    This serial runner blocks at every stage; the pipelined executor in
+    :mod:`repro.exec.pipeline` runs the same stages — same jitted programs,
+    same env structure — with device dispatch overlapped across request
+    groups.
     """
     state: Optional[State] = None
     timings: list[float] = []
     for stage in graph.stages:
         t0 = time.perf_counter()
         if stage.kind == "pure":
-            run = stage.runner if stage.runner is not None else stage.fn
-            state = run(env)
+            state = call_pure(stage, env, donate)
             jax.block_until_ready(state[:2])
+            if stage.index == 0:
+                env = strip_consumed(env, donate)
         else:
-            cols, valid, seg = state
-            np_cols = {k: np.asarray(v) for k, v in cols.items()}
-            mask = np.asarray(valid)
-            np_cols = {k: v[mask] for k, v in np_cols.items()}  # compact
-            np_seg = np.asarray(seg)[mask] if seg is not None else None
-            out = run_udf(stage.udf, np_cols)
-            n = len(next(iter(out.values()))) if out else 0
-            b = bucketer(n) if bucketer is not None else n
-            if b > n:
-                out = {
-                    k: np.concatenate([v, np.zeros(b - n, dtype=v.dtype)])
-                    for k, v in out.items()
-                }
-                if np_seg is not None:
-                    np_seg = np.concatenate(
-                        [np_seg, np.zeros(b - n, dtype=np_seg.dtype)]
-                    )
-            if on_mid_bucket is not None:
-                on_mid_bucket(stage.index, b)
-            mid = {k: jnp.asarray(v) for k, v in out.items()}
-            mid[MID_VALID] = jnp.asarray(np.arange(b) < n)
-            if np_seg is not None:
-                mid[MID_SEG] = jnp.asarray(np_seg, dtype=jnp.int32)
-            env = dict(env)
-            env[MID_TABLE] = mid
-            state = _from_mid(env)  # also the final state if this is the root
+            state, env = host_step(
+                stage, state, env,
+                bucketer=bucketer, on_mid_bucket=on_mid_bucket,
+            )
         dt = time.perf_counter() - t0
         stage.calls += 1
         stage.total_s += dt

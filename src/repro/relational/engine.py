@@ -107,9 +107,11 @@ from repro.exec.stages import (  # noqa: E402  (plan nodes must exist first)
     ROW_VALID_KEY,
     SEG_COUNT_KEY,
     SEG_SLOTS_KEY,
+    VOLATILE_KEYS,
     RunResult,
     StageGraph,
     build_stage_graph,
+    donation_enabled,
     run_graph,
     seg_bucket,
 )
@@ -240,21 +242,16 @@ class CompiledPlan:
                 n += stage.runner.preload(store)
         return n
 
-    def run(
+    def _env(
         self,
         database: dict[str, dict[str, jnp.ndarray]],
-        row_valid: Optional[jnp.ndarray] = None,
-        params: Optional[dict[str, Any]] = None,
-        segments: Optional[tuple[np.ndarray, int]] = None,
-        bucketer: Optional[Callable[[int], int]] = None,
-        on_mid_bucket: Optional[Callable[[int, int], None]] = None,
-    ) -> RunResult:
-        """Execute the stage graph; the full-fidelity serving entry point.
-
-        ``segments=(seg_ids, n_requests)`` threads per-row request-segment
-        ids through the graph (coalesced serving); ``bucketer`` re-pads host
-        boundary outputs to shape buckets so post-UDF stages stay warm.
-        """
+        row_valid: Optional[jnp.ndarray],
+        params: Optional[dict[str, Any]],
+        segments: Optional[tuple[np.ndarray, int]],
+    ) -> dict[str, Any]:
+        """Build the execution environment shared by the serial runner and
+        the pipelined executor — one construction path, so both execute the
+        exact same jit specializations."""
         env: dict[str, Any] = dict(database)
         if row_valid is not None:
             env[ROW_VALID_KEY] = jnp.asarray(row_valid, dtype=bool)
@@ -273,8 +270,58 @@ class CompiledPlan:
             env[ROW_SEG_KEY] = jnp.asarray(seg_ids, dtype=jnp.int32)
             env[SEG_SLOTS_KEY] = jnp.arange(ns, dtype=jnp.int32)
             env[SEG_COUNT_KEY] = jnp.asarray(count, dtype=jnp.int32)
+        return env
+
+    def run(
+        self,
+        database: dict[str, dict[str, jnp.ndarray]],
+        row_valid: Optional[jnp.ndarray] = None,
+        params: Optional[dict[str, Any]] = None,
+        segments: Optional[tuple[np.ndarray, int]] = None,
+        bucketer: Optional[Callable[[int], int]] = None,
+        on_mid_bucket: Optional[Callable[[int, int], None]] = None,
+        donate: frozenset = frozenset(),
+    ) -> RunResult:
+        """Execute the stage graph; the full-fidelity serving entry point.
+
+        ``segments=(seg_ids, n_requests)`` threads per-row request-segment
+        ids through the graph (coalesced serving); ``bucketer`` re-pads host
+        boundary outputs to shape buckets so post-UDF stages stay warm;
+        ``donate`` names fact tables whose (single-use, freshly padded)
+        buffers the entry stage may alias into its outputs on accelerator
+        backends.
+        """
+        env = self._env(database, row_valid, params, segments)
         return run_graph(
-            self.graph, env, bucketer=bucketer, on_mid_bucket=on_mid_bucket
+            self.graph, env, bucketer=bucketer, on_mid_bucket=on_mid_bucket,
+            donate=frozenset(donate),
+        )
+
+    def run_async(
+        self,
+        database: dict[str, dict[str, jnp.ndarray]],
+        *,
+        executor: Any,
+        row_valid: Optional[jnp.ndarray] = None,
+        params: Optional[dict[str, Any]] = None,
+        segments: Optional[tuple[np.ndarray, int]] = None,
+        bucketer: Optional[Callable[[int], int]] = None,
+        on_mid_bucket: Optional[Callable[[int, int], None]] = None,
+        donate: frozenset = frozenset(),
+    ):
+        """Pipelined execution: returns a ``Future[RunResult]``.
+
+        Pure stages dispatch asynchronously on the calling thread and host
+        boundaries run on ``executor``'s boundary pool (see
+        :class:`repro.exec.pipeline.PipelineExecutor`), so one request
+        group's host work overlaps another's device work. Runs the same
+        stage programs over the same env structure as :meth:`run` — a
+        bucket warmed by either path stays warm for both.
+        """
+        env = self._env(database, row_valid, params, segments)
+        return executor.run_graph_async(
+            self.graph, env, bucketer=bucketer, on_mid_bucket=on_mid_bucket,
+            donate=frozenset(donate),
         )
 
     def __call__(
@@ -293,9 +340,18 @@ class _StageRunner:
     With one, each new env shape/dtype structure (= one jit specialization =
     one bucket variant) first consults the store under the stage's chained
     content fingerprint: a hit deserializes the AOT-exported program and
-    runs it (zero traces, ever); a miss traces live and then exports the
-    freshly-specialized program so the *next* process warm-starts. The
-    per-digest outcome is memoized, so steady-state calls never touch disk.
+    runs it (zero traces, ever); a miss traces live and then hands the
+    freshly-specialized program to the store's background writer so the
+    *next* process warm-starts without this request paying the export cost.
+    The per-digest outcome is memoized, so steady-state calls never touch
+    disk.
+
+    On accelerator backends (or under ``RAVEN_DONATE=1``) a call carrying a
+    non-empty ``donate`` set runs through a second jit specialization whose
+    first argument — the single-use serving inputs: donated fact tables,
+    the row-validity/segment vectors, the ``__mid__`` pseudo-table — is
+    donated to XLA, letting the compiler alias the padded entry buffers
+    into stage outputs instead of allocating fresh ones.
     """
 
     def __init__(self, stage):
@@ -313,22 +369,45 @@ class _StageRunner:
             return _fn(env)
 
         self.jitted = jax.jit(traced)
+        self._jitted_donating: Optional[Callable] = None  # built on demand
         # env digest -> deserialized exported call, or None (= run live)
         self._known: dict[str, Optional[Callable]] = {}
 
-    def __call__(self, env):
+    def _run_live(self, env, donate: frozenset):
+        if not donate or not donation_enabled():
+            return self.jitted(env)
+        if self._jitted_donating is None:
+            def traced2(volatile, resident, _fn=self.stage.fn,
+                        _stage=self.stage):
+                _stage.traces += 1
+                PLAN_CACHE_STATS.traces += 1
+                PLAN_CACHE_STATS.stage_traces[_stage.fingerprint] = (
+                    PLAN_CACHE_STATS.stage_traces.get(_stage.fingerprint, 0)
+                    + 1
+                )
+                return _fn({**resident, **volatile})
+
+            self._jitted_donating = jax.jit(traced2, donate_argnums=(0,))
+        volatile = {
+            k: v for k, v in env.items()
+            if k in donate or k in VOLATILE_KEYS
+        }
+        resident = {k: v for k, v in env.items() if k not in volatile}
+        return self._jitted_donating(volatile, resident)
+
+    def __call__(self, env, donate: frozenset = frozenset()):
         store = get_artifact_store()
         if store is None or not self.stage.content_stable:
             # identity-hashed fingerprint components are meaningless in any
             # other process (and a recycled id could alias a different
             # stage), so an unstable stage never touches the disk tier
-            return self.jitted(env)
+            return self._run_live(env, donate)
         from repro.exec.artifact_store import env_digest
 
         digest = env_digest(env)
         if digest in self._known:
             fn = self._known[digest]
-            return self.jitted(env) if fn is None else fn(env)
+            return self._run_live(env, donate) if fn is None else fn(env)
         fn = store.load_stage(self.stage.fingerprint, digest)
         if fn is not None:
             PLAN_CACHE_STATS.disk_hits += 1
@@ -337,10 +416,19 @@ class _StageRunner:
             return fn(env)
         PLAN_CACHE_STATS.disk_misses += 1
         self._known[digest] = None
-        out = self.jitted(env)  # live trace for this new structure
+        # snapshot the env's structure (shapes/dtypes only) *before* running:
+        # under donation the live call invalidates the volatile buffers, and
+        # the background writer must not pin real device arrays anyway
+        from repro.exec.artifact_store import abstract_env
+
+        abstract = abstract_env(env)
+        out = self._run_live(env, donate)  # live trace for this structure
         # export the raw stage fn (not ``traced``: the export's own trace
-        # must not inflate retrace accounting)
-        store.save_stage(self.stage.fingerprint, digest, self.stage.fn, env)
+        # must not inflate retrace accounting); the store's writer thread
+        # serializes off the request path
+        store.save_stage_async(
+            self.stage.fingerprint, digest, self.stage.fn, abstract
+        )
         return out
 
     def preload(self, store) -> int:

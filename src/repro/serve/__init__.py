@@ -1,4 +1,6 @@
+from repro.exec.pipeline import PipelineExecutor
 from repro.exec.pump import RequestPump
+from repro.exec.scheduler import Scheduler
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.query_server import (
     PredictionQueryServer,
@@ -11,6 +13,8 @@ from repro.serve.query_server import (
 __all__ = [
     "Request",
     "RequestPump",
+    "PipelineExecutor",
+    "Scheduler",
     "ServeEngine",
     "PredictionQueryServer",
     "QueryRequest",

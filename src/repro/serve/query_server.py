@@ -16,9 +16,18 @@ call. ``PredictionQueryServer`` closes that gap on top of the StageGraph IR:
     coalesce into one padded execution. Pure row-aligned plans are sliced
     back by position; host-boundary and aggregate plans thread per-request
     *segment ids* through the graph (compaction-proof) and split on them.
-  * An optional :class:`~repro.exec.pump.RequestPump` drives flushing against
-    a latency target, so callers need never invoke ``flush`` themselves
-    (``prep.serve(max_latency_ms=...)`` on the session front door).
+  * Request scheduling is a :class:`~repro.exec.scheduler.Scheduler`: every
+    query gets its own bounded queue (``max_pending`` backpressure raising
+    :class:`~repro.errors.ServerOverloadedError`), its own latency target,
+    and a coalesce-width cap; the background pump flushes queues
+    earliest-deadline-first so a small latency-sensitive query is never
+    starved behind a bulk one.
+  * Dispatched groups execute through the **pipelined**
+    :class:`~repro.exec.pipeline.PipelineExecutor`: pure stages dispatch to
+    the device asynchronously and MLUdf boundaries run on a boundary thread
+    pool, so one group's host work overlaps another group's device work
+    (``pipelined=False`` restores the serial stage-at-a-time runner for
+    A/B measurement).
 
 Without a pump the server stays synchronous — ``submit`` enqueues, ``flush``
 drains — so tests and examples can drive it deterministically.
@@ -28,6 +37,7 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -43,7 +53,8 @@ from repro.errors import (
     UnknownQueryError,
     check_params,
 )
-from repro.exec.pump import RequestPump
+from repro.exec.pipeline import PipelineExecutor
+from repro.exec.scheduler import Scheduler
 from repro.relational.engine import (
     Aggregate,
     CompiledPlan,
@@ -61,6 +72,24 @@ def row_bucket(n: int, min_bucket: int = 64) -> int:
     while b < n:
         b <<= 1
     return b
+
+
+def canonical_dtype(dt: np.dtype) -> np.dtype:
+    """The dtype a column actually runs under on device (x64 disabled).
+
+    Registered schemas and submitted batches are normalized to this *at
+    submit time*, on the submitter's thread: converting float64 → float32
+    during ``jnp.asarray`` is an element-wise cast, and paying it per group
+    on the scheduler thread serializes the whole server behind it. After
+    normalization the serving path's host→device transfers are plain
+    memcpys.
+    """
+    dt = np.dtype(dt)
+    if dt.kind == "f" and dt.itemsize > 4:
+        return np.dtype(np.float32)
+    if dt.kind in "iu" and dt.itemsize > 4:
+        return np.dtype(np.int32)
+    return dt
 
 
 @dataclass
@@ -116,7 +145,8 @@ class ServerStats:
     requests_served: int = 0
     coalesced_requests: int = 0  # requests that shared a batch with others
     segmented_batches: int = 0   # coalesced executions split by segment ids
-    flushes: int = 0
+    pipelined_groups: int = 0    # groups dispatched through the async path
+    flushes: int = 0             # dispatched request groups
     rows_in: int = 0
     rows_padded: int = 0
 
@@ -163,6 +193,9 @@ class PredictionQueryServer:
         min_bucket: int = 64,
         max_bucket: int = 1 << 20,
         mid_bucketing: bool = True,
+        pipelined: bool = True,
+        boundary_workers: int = 2,
+        max_inflight: int = 4,
     ):
         self.optimizer = RavenOptimizer(strategy=strategy, options=options)
         self.min_bucket = min_bucket
@@ -171,18 +204,24 @@ class PredictionQueryServer:
         # pure stage (False reproduces the old exact-shape post-UDF path —
         # kept for A/B benchmarks)
         self.mid_bucketing = mid_bucketing
+        # pipelined=False restores the serial stage-at-a-time group runner
+        # (the baseline the mixed-workload benchmark measures against)
+        self.pipelined = pipelined
         self.stats = ServerStats()
         self.queries: dict[str, RegisteredQuery] = {}
+        self.executor = PipelineExecutor(workers=boundary_workers)
+        self.scheduler = Scheduler(
+            self._dispatch_group,
+            default_coalesce=max_bucket,
+            max_inflight=max_inflight,
+        )
         self._optimized: dict[str, tuple[PhysicalPlan, OptimizationReport]] = {}
         self._pins: list[Any] = []  # keeps identity-hashed objects alive
         self._seen_buckets: set[tuple[str, tuple, int]] = set()
         self._seen_mid_buckets: set[tuple[str, int, int]] = set()
         self._rid = itertools.count()
         self._reg_serial = itertools.count()
-        self._pending: list[QueryRequest] = []
-        self._lock = threading.Lock()        # guards the pending queue
-        self._flush_lock = threading.Lock()  # serializes flush bodies
-        self._pump: Optional[RequestPump] = None
+        self._lock = threading.Lock()  # guards stats/seen-bucket mutation
 
     # -- registration --------------------------------------------------------
 
@@ -195,6 +234,9 @@ class PredictionQueryServer:
         *,
         optimized: Optional[tuple[PhysicalPlan, OptimizationReport]] = None,
         params: Optional[dict[str, Any]] = None,
+        max_latency_ms: Optional[float] = None,
+        max_pending: Optional[int] = None,
+        max_coalesce: Optional[int] = None,
     ) -> RegisteredQuery:
         """Optimize + compile ``query`` and make it servable under ``name``.
 
@@ -205,6 +247,14 @@ class PredictionQueryServer:
         the same fingerprint the server would compute itself. ``params``
         binds the query's ``:param`` placeholders; re-bind via :meth:`rebind`
         without touching the compiled plan.
+
+        The scheduling knobs configure this query's scheduler queue:
+        ``max_latency_ms`` its flush deadline (earliest-deadline-first across
+        queries), ``max_pending`` its backpressure bound (a submit against a
+        full queue blocks or raises
+        :class:`~repro.errors.ServerOverloadedError`), ``max_coalesce`` the
+        most rows one dispatched group may take (so a bulk backlog cannot
+        monopolize a flush).
         """
         if optimized is not None:
             # externally optimized (the session's PreparedQuery path): the
@@ -267,7 +317,7 @@ class PredictionQueryServer:
             fact_table=fact_table,
             scan_columns=scan_columns,
             fact_dtypes={
-                c: np.asarray(database[fact_table][c]).dtype
+                c: canonical_dtype(np.asarray(database[fact_table][c]).dtype)
                 for c in scan_columns
             },
             has_aggregate=any(isinstance(p, Aggregate) for p in walk_plan(plan)),
@@ -275,6 +325,10 @@ class PredictionQueryServer:
             params={k: jnp.asarray(v, jnp.float32) for k, v in bound.items()},
         )
         self.queries[name] = reg
+        self.scheduler.configure(
+            name, max_latency_ms=max_latency_ms, max_pending=max_pending,
+            max_coalesce=max_coalesce,
+        )
         self.stats.queries_registered += 1
         return reg
 
@@ -305,31 +359,34 @@ class PredictionQueryServer:
 
     # -- the pump ------------------------------------------------------------
 
-    def start_pump(self, max_latency_ms: float = 5.0) -> RequestPump:
-        """Start (or retune) the background pump: submitted requests flush
-        automatically once the oldest has waited ``max_latency_ms``."""
-        with self._lock:
-            if self._pump is None:
-                self._pump = RequestPump(
-                    self.flush, max_latency_ms=max_latency_ms
-                )
-                self._pump.start()
-            else:
-                # served queries share one pump: the tightest target wins
-                self._pump.max_latency_ms = min(
-                    self._pump.max_latency_ms, float(max_latency_ms)
-                )
-            return self._pump
+    def start_pump(self, max_latency_ms: float = 5.0) -> Scheduler:
+        """Start (or retune) the background pump thread: submitted requests
+        flush automatically, each queue by its own deadline (queues without
+        an explicit ``max_latency_ms`` use the scheduler default, which the
+        tightest ``start_pump`` call wins)."""
+        sch = self.scheduler
+        if sch.running:
+            sch.default_latency_ms = min(
+                sch.default_latency_ms, float(max_latency_ms)
+            )
+        else:
+            sch.default_latency_ms = float(max_latency_ms)
+            sch.start()
+        return sch
 
     def stop_pump(self) -> None:
-        with self._lock:
-            pump, self._pump = self._pump, None
-        if pump is not None:
-            pump.stop()  # outside the lock: stop() drains via flush()
+        if self.scheduler.running:
+            self.scheduler.stop()  # drains pending requests
 
     @property
-    def pump(self) -> Optional[RequestPump]:
-        return self._pump
+    def pump(self) -> Optional[Scheduler]:
+        """The scheduler, when its pump thread is running (else None)."""
+        return self.scheduler if self.scheduler.running else None
+
+    def shutdown(self) -> None:
+        """Stop the pump (draining) and release the boundary pool."""
+        self.stop_pump()
+        self.executor.shutdown()
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -339,12 +396,20 @@ class PredictionQueryServer:
         columns: dict[str, np.ndarray],
         *,
         expect_token: Optional[str] = None,
+        block: bool = True,
+        timeout: Optional[float] = None,
     ) -> QueryRequest:
         """Enqueue one batch of fact rows for ``name``; run via ``flush`` (or
         the pump). ``expect_token`` guards against serving through a stale
         handle: if ``name`` has been re-registered since the caller's
         ``serve()`` — different plan *or* different bound params — the
-        submit is rejected instead of silently answering the wrong query."""
+        submit is rejected instead of silently answering the wrong query.
+
+        When the query was registered with ``max_pending`` and its queue is
+        full, a blocking submit waits (up to ``timeout`` seconds) for the
+        scheduler to free space; ``block=False`` — or an expired timeout —
+        raises :class:`~repro.errors.ServerOverloadedError` instead.
+        """
         reg = self._registered(name)
         if expect_token is not None and expect_token != reg.token:
             raise StaleQueryError(
@@ -373,49 +438,16 @@ class PredictionQueryServer:
             rid=next(self._rid), query=name, columns=cols, n_rows=n,
             t_submit=time.perf_counter(),
         )
+        self.scheduler.enqueue(name, req, n, block=block, timeout=timeout)
         with self._lock:
-            self._pending.append(req)
             self.stats.rows_in += n
-            pump = self._pump  # racing stop_pump(): read once, under the lock
-        if pump is not None:
-            pump.notify(req.t_submit)
         return req
 
     def flush(self) -> list[QueryRequest]:
-        """Execute all pending requests (coalescing per query) and return
-        them with results filled. Safe to call from any thread; concurrent
-        flushes serialize, and an empty queue is a no-op."""
-        with self._flush_lock:
-            with self._lock:
-                pending, self._pending = self._pending, []
-            if not pending:
-                return []
-            # account before running: waiters wake the instant their request
-            # finishes, and must observe consistent flush counters
-            self.stats.requests_served += len(pending)
-            self.stats.flushes += 1
-            by_query: dict[str, list[QueryRequest]] = {}
-            for r in pending:
-                by_query.setdefault(r.query, []).append(r)
-            first_error: Optional[BaseException] = None
-            for name, reqs in by_query.items():
-                reg = self.queries[name]
-                for group in self._coalesce(reqs):
-                    try:
-                        self._run_group(reg, group)
-                    except BaseException as e:
-                        # contain the blast radius: fail this group's
-                        # requests (waiters re-raise from wait()) but keep
-                        # serving the other groups in this flush
-                        for r in group:
-                            if not r.done:
-                                r.error = e
-                                r._event.set()
-                        if first_error is None:
-                            first_error = e
-            if first_error is not None:
-                raise first_error
-        return pending
+        """Execute all pending requests (coalescing per query, earliest
+        deadline first) and return them with results filled. Safe to call
+        from any thread; an empty queue is a no-op."""
+        return self.scheduler.drain()
 
     def execute(
         self, name: str, columns: dict[str, np.ndarray]
@@ -427,31 +459,106 @@ class PredictionQueryServer:
         # this request; either way the result is ready once both finish
         return req.wait(timeout=60.0)
 
+    # -- group dispatch (called by the scheduler) -----------------------------
+
+    def _dispatch_group(self, name: str, group: list[QueryRequest]) -> Future:
+        """Execute one scheduler group; returns a future resolving when every
+        request in the group is finished (or failed). Never raises — a
+        failure is attached to the group's requests and the future."""
+        done: Future = Future()
+        try:
+            reg = self._registered(name)
+            with self._lock:
+                self.stats.flushes += 1
+                self.stats.requests_served += len(group)
+            if not self.pipelined:
+                self._run_group(reg, group)
+                done.set_result(group)
+                return done
+            n = sum(r.n_rows for r in group)
+            if reg.sliceable and n > self.max_bucket:
+                # oversized spine: the serial chunked path keeps compiled
+                # programs bounded at max_bucket; run it off-thread so the
+                # pump stays responsive
+                f = self.executor.pool.submit(self._run_group, reg, group)
+
+                def _chunked_done(f2, _group=group, _done=done):
+                    e = f2.exception()
+                    if e is not None:
+                        self._fail_group(_group, e)
+                        _done.set_exception(e)
+                    else:
+                        _done.set_result(_group)
+
+                f.add_done_callback(_chunked_done)
+                return done
+            with self._lock:
+                self.stats.pipelined_groups += 1
+            cat, n, segments = self._group_batch(reg, group)
+            gfut = self._execute_padded_async(reg, cat, n, segments=segments)
+
+            def _complete(f2, _reg=reg, _group=group, _n=n, _done=done):
+                try:
+                    res = f2.result()
+                    self._split_group(_reg, _group, res, _n)
+                    _done.set_result(_group)
+                except BaseException as e:  # noqa: BLE001
+                    self._fail_group(_group, e)
+                    _done.set_exception(e)
+
+            gfut.add_done_callback(_complete)
+        except BaseException as e:  # noqa: BLE001
+            self._fail_group(group, e)
+            if not done.done():
+                done.set_exception(e)
+        return done
+
+    def _fail_group(self, group: list[QueryRequest], e: BaseException) -> None:
+        """Contain the blast radius: fail this group's requests (waiters
+        re-raise from wait()) while the server keeps serving other groups."""
+        for r in group:
+            if not r.done:
+                r.error = e
+                r._event.set()
+
     # -- internals -----------------------------------------------------------
 
-    def _coalesce(self, reqs: list[QueryRequest]) -> list[list[QueryRequest]]:
-        """Pack pending requests into shared executions ≤ ``max_bucket``."""
-        groups: list[list[QueryRequest]] = []
-        cur: list[QueryRequest] = []
-        cur_rows = 0
-        for r in reqs:
-            if cur and cur_rows + r.n_rows > self.max_bucket:
-                groups.append(cur)
-                cur, cur_rows = [], 0
-            cur.append(r)
-            cur_rows += r.n_rows
-        if cur:
-            groups.append(cur)
-        return groups
+    def _group_batch(
+        self, reg: RegisteredQuery, group: list[QueryRequest]
+    ) -> tuple[dict[str, np.ndarray], int, Optional[tuple[np.ndarray, int]]]:
+        """Concatenate a group into one fact batch (+ segment ids when the
+        plan cannot be split positionally)."""
+        n = sum(r.n_rows for r in group)
+        if len(group) == 1:
+            return group[0].columns, n, None
+        cat = {
+            c: np.concatenate([r.columns[c] for r in group])
+            for c in reg.scan_columns
+        }
+        with self._lock:
+            self.stats.coalesced_requests += len(group)
+        if reg.sliceable:
+            return cat, n, None
+        # host boundaries compact data-dependently and aggregates fold the
+        # spine, so positional slicing is impossible: thread per-request
+        # segment ids through the stage graph instead
+        seg_ids = np.repeat(
+            np.arange(len(group), dtype=np.int32),
+            [r.n_rows for r in group],
+        )
+        with self._lock:
+            self.stats.segmented_batches += 1
+        return cat, n, (seg_ids, len(group))
 
-    def _execute_padded(
+    def _padded_kwargs(
         self,
         reg: RegisteredQuery,
         fact_np: dict[str, np.ndarray],
         n: int,
         segments: Optional[tuple[np.ndarray, int]] = None,
-    ):
-        """Pad ``n`` fact rows to their bucket and run the stage graph."""
+    ) -> dict[str, Any]:
+        """Pad ``n`` fact rows to their bucket; returns the kwargs shared by
+        ``CompiledPlan.run`` and ``run_async`` (plus bucket accounting)."""
         bucket = row_bucket(n, self.min_bucket)
         fact: dict[str, jnp.ndarray] = {}
         for c in reg.scan_columns:
@@ -471,24 +578,28 @@ class PredictionQueryServer:
 
         schema = tuple((c, str(reg.fact_dtypes[c])) for c in reg.scan_columns)
         key = (reg.compiled.fingerprint, schema, bucket)
-        if key in self._seen_buckets:
-            self.stats.bucket_hits += 1
-        else:
-            self.stats.bucket_misses += 1
-            self._seen_buckets.add(key)
+        with self._lock:
+            if key in self._seen_buckets:
+                self.stats.bucket_hits += 1
+            else:
+                self.stats.bucket_misses += 1
+                self._seen_buckets.add(key)
+            self.stats.batches_executed += 1
+            self.stats.rows_padded += bucket - n
 
         def track_mid(stage_index: int, b: int) -> None:
             mid_key = (reg.compiled.fingerprint, stage_index, b)
-            if mid_key in self._seen_mid_buckets:
-                self.stats.mid_bucket_hits += 1
-            else:
-                self.stats.mid_bucket_misses += 1
-                self._seen_mid_buckets.add(mid_key)
+            with self._lock:
+                if mid_key in self._seen_mid_buckets:
+                    self.stats.mid_bucket_hits += 1
+                else:
+                    self.stats.mid_bucket_misses += 1
+                    self._seen_mid_buckets.add(mid_key)
 
         db = dict(reg.database)
         db[reg.fact_table] = fact
-        res = reg.compiled.run(
-            db,
+        return dict(
+            database=db,
             row_valid=jnp.asarray(row_valid),
             params=reg.params if reg.param_names else None,
             segments=segments,
@@ -497,24 +608,96 @@ class PredictionQueryServer:
                 if self.mid_bucketing else None
             ),
             on_mid_bucket=track_mid,
+            # the padded fact spine is freshly built per group: safe to
+            # donate to XLA on backends that support aliasing
+            donate=frozenset((reg.fact_table,)),
         )
-        self.stats.batches_executed += 1
-        self.stats.rows_padded += bucket - n
-        return res
+
+    def _execute_padded(
+        self,
+        reg: RegisteredQuery,
+        fact_np: dict[str, np.ndarray],
+        n: int,
+        segments: Optional[tuple[np.ndarray, int]] = None,
+    ):
+        """Serial padded execution (blocks at every stage)."""
+        return reg.compiled.run(**self._padded_kwargs(reg, fact_np, n, segments))
+
+    def _execute_padded_async(
+        self,
+        reg: RegisteredQuery,
+        fact_np: dict[str, np.ndarray],
+        n: int,
+        segments: Optional[tuple[np.ndarray, int]] = None,
+    ) -> Future:
+        """Pipelined padded execution; returns ``Future[RunResult]``."""
+        return reg.compiled.run_async(
+            executor=self.executor,
+            **self._padded_kwargs(reg, fact_np, n, segments),
+        )
 
     def _finish(self, req: QueryRequest) -> None:
         req.done = True
         req.t_done = time.perf_counter()
         req._event.set()
 
-    def _run_group(self, reg: RegisteredQuery, group: list[QueryRequest]) -> None:
-        n = sum(r.n_rows for r in group)
+    def _positional_split(
+        self,
+        group: list[QueryRequest],
+        cols: dict[str, np.ndarray],
+        valid: np.ndarray,
+    ) -> None:
+        """Output rows align 1:1 with the fact spine: slice each request's
+        span, then compact by its validity slice."""
+        off = 0
+        for r in group:
+            sl = slice(off, off + r.n_rows)
+            m = valid[sl]
+            r.result = {k: v[sl][m] for k, v in cols.items()}
+            self._finish(r)
+            off += r.n_rows
+
+    def _split_group(
+        self,
+        reg: RegisteredQuery,
+        group: list[QueryRequest],
+        res,
+        n: int,
+    ) -> None:
+        """Split one executed group's result back per request and finish
+        them. Runs on whichever thread completed the group (the dispatching
+        thread for pure graphs, a boundary worker otherwise)."""
         if reg.sliceable:
-            cat = {
-                c: np.concatenate([r.columns[c] for r in group])
-                if len(group) > 1 else group[0].columns[c]
-                for c in reg.scan_columns
+            cols = {
+                k: np.asarray(v)[:n] for k, v in res.table.columns.items()
             }
+            valid = np.asarray(res.table.valid)[:n]
+            self._positional_split(group, cols, valid)
+        elif len(group) == 1:
+            # a lone host-boundary/aggregate request: no splitting needed
+            req = group[0]
+            req.result = res.table.to_numpy(compact=True)
+            self._finish(req)
+        else:
+            cols = {k: np.asarray(v) for k, v in res.table.columns.items()}
+            valid = np.asarray(res.table.valid)
+            if reg.has_aggregate:
+                # segmented fold: output row i belongs to request i
+                for i, r in enumerate(group):
+                    r.result = {k: v[i:i + 1] for k, v in cols.items()}
+                    self._finish(r)
+            else:
+                seg = np.asarray(res.seg)
+                for i, r in enumerate(group):
+                    m = valid & (seg == i)
+                    r.result = {k: v[m] for k, v in cols.items()}
+                    self._finish(r)
+
+    def _run_group(self, reg: RegisteredQuery, group: list[QueryRequest]) -> None:
+        """Serial group execution (the ``pipelined=False`` baseline, and the
+        chunked path for sliceable spines wider than ``max_bucket``)."""
+        cat, n, segments = self._group_batch(reg, group)
+        if reg.sliceable and n > self.max_bucket:
             # row-aligned output lets a spine wider than max_bucket run as
             # max_bucket-sized chunks, keeping the compiled-program count
             # bounded by log2(max_bucket / min_bucket) + 1 per query
@@ -530,54 +713,23 @@ class PredictionQueryServer:
                     out_cols.setdefault(k, []).append(np.asarray(v)[:span])
             cols = {k: np.concatenate(v) for k, v in out_cols.items()}
             valid = np.concatenate(out_valid)
-            if len(group) > 1:
-                self.stats.coalesced_requests += len(group)
-            # output rows align 1:1 with the fact spine: slice each request's
-            # span, then compact by its validity slice
-            off = 0
-            for r in group:
-                sl = slice(off, off + r.n_rows)
-                m = valid[sl]
-                r.result = {k: v[sl][m] for k, v in cols.items()}
-                self._finish(r)
-                off += r.n_rows
-        elif len(group) == 1:
-            # a lone host-boundary/aggregate request: no splitting needed
-            req = group[0]
-            res = self._execute_padded(reg, req.columns, req.n_rows)
-            req.result = res.table.to_numpy(compact=True)
-            self._finish(req)
-        else:
-            # host boundaries compact data-dependently and aggregates fold
-            # the spine, so positional slicing is impossible: thread
-            # per-request segment ids through the stage graph instead
-            cat = {
-                c: np.concatenate([r.columns[c] for r in group])
-                for c in reg.scan_columns
-            }
-            seg_ids = np.repeat(
-                np.arange(len(group), dtype=np.int32),
-                [r.n_rows for r in group],
-            )
-            res = self._execute_padded(
-                reg, cat, n, segments=(seg_ids, len(group))
-            )
-            self.stats.coalesced_requests += len(group)
-            self.stats.segmented_batches += 1
-            cols = {k: np.asarray(v) for k, v in res.table.columns.items()}
-            valid = np.asarray(res.table.valid)
-            if reg.has_aggregate:
-                # segmented fold: output row i belongs to request i
-                for i, r in enumerate(group):
-                    r.result = {k: v[i:i + 1] for k, v in cols.items()}
-                    self._finish(r)
-            else:
-                seg = np.asarray(res.seg)
-                for i, r in enumerate(group):
-                    m = valid & (seg == i)
-                    r.result = {k: v[m] for k, v in cols.items()}
-                    self._finish(r)
+            self._positional_split(group, cols, valid)
+            return
+        res = self._execute_padded(reg, cat, n, segments=segments)
+        self._split_group(reg, group, res, n)
+
+    # -- introspection --------------------------------------------------------
 
     def recompiles(self) -> int:
         """Total XLA stage compiles across all registered queries."""
         return sum(r.compiled.traces for r in self.queries.values())
+
+    def stats_snapshot(self) -> dict[str, Any]:
+        """Server counters merged with the scheduler's queue gauges and the
+        pipelined executor's overlap gauges (what ``db.cache_stats()``
+        surfaces under ``"server"``)."""
+        out = self.stats.snapshot()
+        out.update(self.scheduler.snapshot())
+        out["queue_depths"] = self.scheduler.depths()
+        out["pipeline"] = self.executor.snapshot()
+        return out

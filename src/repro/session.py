@@ -81,6 +81,7 @@ def connect(
     strategy=None,
     options: Optional[OptimizerOptions] = None,
     cache_dir: Optional[str] = None,
+    cache_max_bytes: Optional[int] = None,
 ) -> "Session":
     """Open a session over a database of named column-dict tables.
 
@@ -101,10 +102,13 @@ def connect(
     stale or corrupted cache falls back to live compilation — never wrong
     results. The store is installed process-wide (the compiled-plan cache it
     backs is process-wide too); the most recent ``connect`` wins.
+    ``cache_max_bytes`` bounds the cache dir by total size (oldest entries
+    evicted first) on top of the store's entry-count cap.
     """
     return Session(
         tables, stats, partition_cols=partition_cols,
         strategy=strategy, options=options, cache_dir=cache_dir,
+        cache_max_bytes=cache_max_bytes,
     )
 
 
@@ -120,6 +124,7 @@ class Session:
         strategy=None,
         options: Optional[OptimizerOptions] = None,
         cache_dir: Optional[str] = None,
+        cache_max_bytes: Optional[int] = None,
     ):
         self.tables = {
             t: {c: np.asarray(v) for c, v in cols.items()}
@@ -148,7 +153,9 @@ class Session:
         if cache_dir is not None:
             from repro.exec.artifact_store import ArtifactStore
 
-            self.artifact_store = ArtifactStore(cache_dir)
+            self.artifact_store = ArtifactStore(
+                cache_dir, max_bytes=cache_max_bytes
+            )
         # the most recent connect wins — including a cache-less connect,
         # which must *clear* a previous session's store rather than let it
         # keep intercepting (and writing to) every later compilation
@@ -205,30 +212,37 @@ class Session:
         Returns the engine's :class:`CacheStats` snapshot (``hits``/
         ``misses``/``traces``/``disk_hits``/``disk_misses`` plus per-stage
         ``stage_traces`` keyed by stage fingerprint) merged with the session
-        server's :class:`ServerStats` under ``"server"`` and — when the
-        session was opened with ``cache_dir`` — the artifact store's
-        :class:`~repro.exec.artifact_store.StoreStats` under
-        ``"artifact_store"``, so benchmarks and tests can assert zero-retrace
-        warm paths without reaching into module globals.
+        server's :class:`ServerStats` under ``"server"`` — including the
+        scheduler's queue gauges (``queue_depths``, ``max_queue_depth``,
+        ``backpressure_waits``, ``overloads``) and the pipelined executor's
+        overlap gauges under ``"server"]["pipeline"`` (groups in flight,
+        ``overlap_s`` wall time with ≥2 groups overlapping, host-pool busy
+        time) — and, when the session was opened with ``cache_dir``, the
+        artifact store's :class:`~repro.exec.artifact_store.StoreStats`
+        under ``"artifact_store"``, so benchmarks and tests can assert
+        zero-retrace warm paths without reaching into module globals.
         """
         from repro.relational.engine import PLAN_CACHE_STATS
 
         out = PLAN_CACHE_STATS.snapshot()
         if self._server is not None:
-            out["server"] = self._server.stats.snapshot()
+            out["server"] = self._server.stats_snapshot()
             out["server"]["recompiles"] = self._server.recompiles()
         if self.artifact_store is not None:
             out["artifact_store"] = self.artifact_store.stats.snapshot()
         return out
 
     def close(self) -> None:
-        """Stop the background request pump (drains pending requests) and
-        uninstall this session's artifact store (if still the active one)."""
+        """Stop the background request pump (drains pending requests),
+        release the boundary pool, flush the artifact store's background
+        writer, and uninstall this session's artifact store (if still the
+        active one)."""
         if self._server is not None:
-            self._server.stop_pump()
+            self._server.shutdown()
         if self.artifact_store is not None:
             from repro.relational.engine import get_artifact_store, set_artifact_store
 
+            self.artifact_store.close()  # flush writes + stop the writer
             if get_artifact_store() is self.artifact_store:
                 set_artifact_store(None)
 
@@ -486,14 +500,24 @@ class PreparedQuery:
         server: Optional[PredictionQueryServer] = None,
         *,
         max_latency_ms: Optional[float] = None,
+        max_pending: Optional[int] = None,
+        max_coalesce: Optional[int] = None,
     ) -> "PreparedQuery":
         """Register into the session-owned server (bucketed, coalesced hot
         path): afterwards ``prep.submit(batch)`` enqueues.
 
         With ``max_latency_ms`` a background pump flushes automatically once
-        the oldest pending request has waited that long — results arrive via
-        ``request.wait()`` with no ``db.flush()`` required. Without it the
-        protocol stays synchronous (caller drives ``db.flush()``).
+        this query's oldest pending request has waited that long — results
+        arrive via ``request.wait()`` with no ``db.flush()`` required, and
+        queues are flushed earliest-deadline-first so a tight target keeps
+        its priority next to bulk queries. Without it the protocol stays
+        synchronous (caller drives ``db.flush()``).
+
+        ``max_pending`` bounds this query's queue: a submit against a full
+        queue blocks (``prep.submit(..., block=True)``) or raises
+        :class:`~repro.errors.ServerOverloadedError`. ``max_coalesce`` caps
+        how many rows one dispatched group may coalesce, so a huge backlog
+        is pipelined as bounded groups instead of monopolizing a flush.
         """
         session = self.query.session
         srv = server if server is not None else session.server
@@ -503,6 +527,9 @@ class PreparedQuery:
             fact_table=self._fact_table(),
             optimized=(self.plan, self.report),
             params=self.params,
+            max_latency_ms=max_latency_ms,
+            max_pending=max_pending,
+            max_coalesce=max_coalesce,
         )
         self._serve_token = reg.token
         self._server = srv
@@ -510,19 +537,29 @@ class PreparedQuery:
             srv.start_pump(max_latency_ms)
         return self
 
-    def submit(self, columns: dict[str, np.ndarray]) -> QueryRequest:
+    def submit(
+        self,
+        columns: dict[str, np.ndarray],
+        *,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> QueryRequest:
         """Enqueue one fact-row batch (requires :meth:`serve` first); results
         land on the returned request after ``db.flush()`` — or, when the
         query is served with a latency target, after the pump's next flush
         (``request.wait()``). Submitting through a handle whose serve name
         was since re-registered (different plan or bound params) raises
-        :class:`~repro.errors.StaleQueryError`."""
+        :class:`~repro.errors.StaleQueryError`; a submit against a full
+        bounded queue (``serve(max_pending=...)``) blocks up to ``timeout``
+        seconds or (``block=False``) raises
+        :class:`~repro.errors.ServerOverloadedError`."""
         if self._server is None:
             raise RavenError(
                 "query is not served — call .serve() before .submit()"
             )
         return self._server.submit(
             self._serve_name, columns, expect_token=self._serve_token,
+            block=block, timeout=timeout,
         )
 
     # -- introspection -------------------------------------------------------

@@ -50,7 +50,10 @@ def _isolated_store():
 
 def _serve_once(tables, pipe, cache_dir, *, sizes=(100, 200), transform="sql"):
     """connect -> prepare -> serve -> submit one batch per size (flushing
-    between, so each size lands its own bucket). Returns (session, scores)."""
+    between, so each size lands its own bucket). Returns (session, scores).
+
+    Drains the store's background export writer before returning so the
+    on-disk state is deterministic for the assertions that follow."""
     db = raven.connect(tables, stats="auto", cache_dir=cache_dir)
     db.register_model("m", pipe)
     prep = db.sql(SQL).prepare(transform=transform, params={"t": 0.5})
@@ -60,6 +63,7 @@ def _serve_once(tables, pipe, cache_dir, *, sizes=(100, 200), transform="sql"):
         req = prep.submit(make_hospital(n, seed=40 + i).tables["patients"])
         db.flush()
         outs.append(np.sort(np.asarray(req.result["score"])))
+    db.artifact_store.drain()
     return db, outs
 
 
@@ -341,6 +345,78 @@ def test_eviction_cap_bounds_the_cache_dir(tmp_path, hospital, hospital_gb):
     # evicted entries miss cleanly; survivors still load
     assert store.load_plan("q0") is None
     assert store.load_plan("q7") is not None
+
+
+def test_size_based_eviction_bounds_total_bytes(tmp_path, hospital, hospital_gb):
+    db = raven.connect(hospital.tables, stats="auto")
+    db.register_model("m", hospital_gb)
+    prep = db.sql(SQL).prepare(transform="sql", params={"t": 0.5})
+    probe = ArtifactStore(str(tmp_path / "probe"))
+    assert probe.save_plan("probe", prep.plan, prep.report)
+    entry_bytes = probe.total_bytes()
+    assert entry_bytes > 0
+    # cap at ~3 entries' worth of bytes with a generous count cap: the size
+    # bound must do the evicting
+    store = ArtifactStore(
+        str(tmp_path / "cap"), max_entries=1000,
+        max_bytes=int(entry_bytes * 3.5),
+    )
+    for i in range(8):
+        assert store.save_plan(f"q{i}", prep.plan, prep.report)
+    assert store.total_bytes() <= int(entry_bytes * 3.5)
+    assert store.stats.evictions >= 4
+    assert store.load_plan("q7") is not None  # newest survives
+    assert store.load_plan("q0") is None      # oldest evicted
+
+
+def test_oversized_single_entry_is_kept_not_thrashed(tmp_path, hospital, hospital_gb):
+    db = raven.connect(hospital.tables, stats="auto")
+    db.register_model("m", hospital_gb)
+    prep = db.sql(SQL).prepare(transform="sql", params={"t": 0.5})
+    store = ArtifactStore(str(tmp_path), max_bytes=1)  # everything oversize
+    assert store.save_plan("q0", prep.plan, prep.report)
+    assert store.save_plan("q1", prep.plan, prep.report)
+    # the newest entry always survives (evicting it would thrash forever)
+    assert store.load_plan("q1") is not None
+
+
+def test_background_writer_persists_stage_exports(tmp_path):
+    import jax
+    import jax.numpy as jnp
+
+    store = ArtifactStore(str(tmp_path))
+
+    def fn(env):
+        return {"y": env["t"]["x"] * 3.0}
+
+    env = {"t": {"x": jnp.arange(16, dtype=jnp.float32)}}
+    digest = env_digest(env)
+    # async save accepts abstract (shape/dtype) envs — the queue never pins
+    # device buffers
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)), env
+    )
+    store.save_stage_async("stagefp", digest, fn, abstract)
+    store.drain()
+    assert store.stats.background_writes == 1
+    assert store.stats.stage_saves == 1
+    assert store.pending_writes() == 0
+    call = store.load_stage("stagefp", digest)
+    assert call is not None
+    np.testing.assert_allclose(np.asarray(call(env)["y"]), np.arange(16) * 3.0)
+    store.drain()  # idempotent
+
+
+def test_first_compile_export_rides_the_writer_thread(tmp_path, hospital, hospital_gb):
+    """Serving a fresh bucket must not pay jax.export inline: the save lands
+    via the background writer (visible after drain), keyed identically to a
+    synchronous save."""
+    cache = str(tmp_path / "cache")
+    db, _ = _serve_once(hospital.tables, hospital_gb, cache, sizes=(100,))
+    stats = db.cache_stats()["artifact_store"]
+    assert stats["background_writes"] >= 1
+    assert stats["stage_saves"] >= 1
+    assert db.artifact_store.pending_writes() == 0
 
 
 # ---------------------------------------------------------------------------

@@ -4,6 +4,7 @@ not an ad-hoc pytest line that could drift from what contributors run."""
 from __future__ import annotations
 
 import os
+import subprocess
 
 import pytest
 
@@ -68,6 +69,66 @@ def test_nightly_runs_full_suite_and_benchmark_smoke(workflow):
     # full suite: no `-m "not slow"` filter
     assert any("pytest" in s and "not slow" not in s for s in steps)
     assert any("benchmarks/serve_query.py --smoke" in s for s in steps)
+
+
+def test_nightly_uploads_benchmark_baseline(workflow):
+    job = workflow["jobs"]["nightly"]
+    assert any("--json" in s for s in _run_steps(job)), (
+        "nightly must write the serving benchmark JSON"
+    )
+    uploads = [
+        s for s in job["steps"] if "upload-artifact" in s.get("uses", "")
+    ]
+    assert uploads, "nightly must upload the benchmark JSON as an artifact"
+    assert uploads[0]["with"]["path"] == "BENCH_serving.json"
+
+
+def test_benchmark_baseline_is_committed():
+    """The first perf baseline rides in the repo so regressions have a
+    reference point; nightly CI refreshes it as an artifact."""
+    path = os.path.join(REPO, "BENCH_serving.json")
+    assert os.path.exists(path), "commit BENCH_serving.json (serve_query --json)"
+    import json
+
+    with open(path) as f:
+        rows = json.load(f)
+    for key in ("speedup_served", "cold_warm_traces",
+                "mixed_speedup_pipelined", "mixed_parallel_efficiency"):
+        assert key in rows, f"baseline missing {key}"
+
+
+def test_lint_job_guards_against_tracked_bytecode(workflow):
+    # the repo once carried 117 committed .pyc files; the guard step keeps
+    # them from coming back
+    steps = _run_steps(workflow["jobs"]["lint"])
+    assert any("__pycache__" in s and "git ls-files" in s for s in steps)
+
+
+def test_no_tracked_bytecode_or_caches():
+    """Mirror of the CI guard, runnable locally: tracked files must never
+    include bytecode, __pycache__ dirs, or build artifacts."""
+    try:
+        out = subprocess.run(
+            ["git", "ls-files"], capture_output=True, text=True,
+            timeout=60, cwd=REPO,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip("not a git checkout")
+    bad = [
+        ln for ln in out.stdout.splitlines()
+        if "__pycache__/" in ln or ln.endswith((".pyc", ".pyo", ".pyd"))
+        or ".egg-info" in ln
+    ]
+    assert not bad, f"tracked bytecode/build artifacts: {bad[:10]}"
+
+
+def test_gitignore_covers_bytecode_and_caches():
+    with open(os.path.join(REPO, ".gitignore")) as f:
+        text = f.read()
+    for pat in ("__pycache__/", "*.py[cod]", ".pytest_cache/"):
+        assert pat in text, f".gitignore must cover {pat!r}"
 
 
 def test_requirements_are_fully_pinned():
