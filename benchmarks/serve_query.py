@@ -45,10 +45,20 @@ Part 4 — mixed workload, the pipelined-scheduler payoff:
   throughput with the small query's p99 staying near its latency target
   while bulk groups are in flight.
 
+Part 5 — wide-row fused featurization, the partial-MLtoDNN payoff:
+
+  a wide synthetic table (dozens of scaled numerics + one-hot categoricals)
+  predicted by a tree ensemble. ``host`` runs transform='none': the whole
+  pipeline is one MLUdf host boundary. ``fused`` runs transform='dnn': the
+  scaler/one-hot/concat chain collapses into the fused featurize kernel and
+  the tree into the GEMM program, all inside one pure TensorOp stage — the
+  former host boundary *vanishes* (``n_host_boundaries`` 1 -> 0).
+
 Reports throughput (rows/s), XLA recompile counts, per-stage timings, and
 request-latency percentiles. Headlines: served/percall >= 5x on the pure
 plan, staged/postudf >= 2x on the multi-stage plan, warm cold-start traces
-== 0, pipelined/serial >= 1.5x on the mixed workload.
+== 0, pipelined/serial >= 1.5x on the mixed workload, host boundary count
+1 -> 0 on the wide-row featurize workload.
 
     PYTHONPATH=src:. python benchmarks/serve_query.py \
         [--quick | --smoke] [--json [PATH]]
@@ -461,6 +471,109 @@ def run_mixed(db, sql, quick: bool = False) -> dict:
     }
 
 
+def _wide_table(n_rows: int, n_num: int, n_cat: int, card: int, seed: int = 0):
+    """Wide synthetic featurization workload: ``n_num`` numerics to scale,
+    ``n_cat`` categoricals to one-hot (``card`` categories each)."""
+    rng = np.random.default_rng(seed)
+    cols = {
+        f"f{i}": rng.normal(size=n_rows) * (i + 1) for i in range(n_num)
+    }
+    for j in range(n_cat):
+        cols[f"c{j}"] = rng.integers(0, card, size=n_rows).astype(np.int64)
+    label = (
+        sum(cols[f"f{i}"] for i in range(min(4, n_num)))
+        + (cols["c0"] if n_cat else 0) > 1.0
+    ).astype(np.int64)
+    return cols, label
+
+
+def run_featurize(quick: bool = False) -> dict:
+    """Part 5: the wide-row featurize+tree workload where partial MLtoDNN +
+    the fused featurize kernel erase the host boundary outright."""
+    from repro.ml import GradientBoostingClassifier
+    from repro.ml.pipeline import fit_pipeline, run_pipeline
+
+    n_rows = 8_192 if quick else 32_768
+    n_num, n_cat, card = 32, 12, 8
+    cols, label = _wide_table(n_rows, n_num, n_cat, card)
+    numeric = [f"f{i}" for i in range(n_num)]
+    categorical = [f"c{j}" for j in range(n_cat)]
+    cats = {c: np.arange(card) for c in categorical}
+    pipe = fit_pipeline(
+        cols, label, numeric, categorical,
+        GradientBoostingClassifier(n_estimators=8, max_depth=3),
+        categories=cats,
+    )
+
+    dbw = raven.connect({"wide": cols}, stats="auto")
+    dbw.register_model("w", pipe)
+    sqlw = (
+        "SELECT * FROM PREDICT(model='w', data=wide) AS p "
+        "WHERE score >= :t"
+    )
+    sizes = [1024, 2000, 4096] if quick else [1024, 2000, 4096, 8192]
+    reps = 2 if quick else 4
+    batches = [
+        {k: v[:n] for k, v in _wide_table(n, n_num, n_cat, card, seed=30 + i)[0].items()}
+        for i, n in enumerate(sizes)
+    ]
+    total_rows = sum(sizes) * reps
+
+    def leg(transform: str):
+        clear_plan_cache()
+        prep = dbw.sql(sqlw).prepare(transform=transform, params={"t": -1e9})
+        outs = [prep(b) for b in batches]  # warm every shape
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for b in batches:
+                jax.block_until_ready(prep(b)["score"])
+        return prep, outs, time.perf_counter() - t0
+
+    host_prep, host_outs, t_host = leg("none")
+    fused_prep, fused_outs, t_fused = leg("dnn")
+
+    nb_host = host_prep.compiled.graph.n_host_boundaries
+    nb_fused = fused_prep.compiled.graph.n_host_boundaries
+    fused_note = any(
+        "fused featurize" in n for n in fused_prep.report.notes
+    )
+    for h, f in zip(host_outs, fused_outs):
+        np.testing.assert_allclose(
+            f["score"], h["score"], rtol=5e-3, atol=1e-5
+        )
+
+    # the ML-runtime floor the paper compares against: op-at-a-time numpy
+    in_names = [s.name for s in pipe.inputs]
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for b in batches:
+            run_pipeline(pipe, {k: b[k] for k in in_names})
+    t_mlrt = time.perf_counter() - t0
+
+    print("serve_query_featurize,variant,seconds,rows_per_s,host_boundaries")
+    print(f"serve_query_featurize,mlruntime,{t_mlrt:.3f},"
+          f"{total_rows / t_mlrt:.0f},-")
+    print(f"serve_query_featurize,host,{t_host:.3f},"
+          f"{total_rows / t_host:.0f},{nb_host}")
+    print(f"serve_query_featurize,fused,{t_fused:.3f},"
+          f"{total_rows / t_fused:.0f},{nb_fused}")
+    print(f"serve_query_featurize,speedup,fused vs host = "
+          f"{t_host / t_fused:.1f}x (host boundaries {nb_host} -> "
+          f"{nb_fused}; fused featurize kernel engaged: {fused_note})")
+    return {
+        "featurize_rows": total_rows,
+        "featurize_mlruntime_s": t_mlrt,
+        "featurize_host_s": t_host,
+        "featurize_fused_s": t_fused,
+        "featurize_host_rows_s": total_rows / t_host,
+        "featurize_fused_rows_s": total_rows / t_fused,
+        "featurize_fused_speedup": t_host / t_fused,
+        "featurize_host_boundaries_none": nb_host,
+        "featurize_host_boundaries_fused": nb_fused,
+        "featurize_fused_kernel": bool(fused_note),
+    }
+
+
 def run(quick: bool = False):
     n_requests = 8 if quick else 24
     sizes = _request_sizes(n_requests)
@@ -493,6 +606,9 @@ def run(quick: bool = False):
 
     # part 4: mixed workload, serial vs pipelined scheduling
     rows.update(run_mixed(db, sql, quick=quick))
+
+    # part 5: wide-row fused featurization (the vanished host boundary)
+    rows.update(run_featurize(quick=quick))
     return rows
 
 
@@ -525,10 +641,18 @@ def smoke() -> dict:
         # only where the machine actually grants concurrent CPU can overlap
         # express a wall-clock win (a 1-core cgroup just time-slices)
         assert rows["mixed_speedup_pipelined"] > 1.0, rows
+    # the partial-MLtoDNN headline: the wide-row featurize workload's host
+    # boundary vanishes and the fused kernel path carries the plan
+    assert rows["featurize_host_boundaries_none"] >= 1
+    assert rows["featurize_host_boundaries_fused"] == 0, rows
+    assert rows["featurize_fused_kernel"], rows
     print(f"smoke ok: served {rows['speedup_served']:.1f}x, "
           f"staged {rows['speedup_staged']:.1f}x, "
           f"warm cold-start {rows['cold_speedup_warm']:.1f}x, "
-          f"pipelined mixed {rows['mixed_speedup_pipelined']:.1f}x")
+          f"pipelined mixed {rows['mixed_speedup_pipelined']:.1f}x, "
+          f"fused featurize {rows['featurize_fused_speedup']:.1f}x "
+          f"(host boundaries {rows['featurize_host_boundaries_none']} -> "
+          f"{rows['featurize_host_boundaries_fused']})")
     return rows
 
 

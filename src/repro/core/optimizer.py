@@ -29,7 +29,12 @@ from repro.core.ir import (
     PredictionQuery,
 )
 from repro.core.rules.data_induced import apply_data_induced
-from repro.core.rules.ml_to_dnn import MLtoDNNUnsupported, compile_pipeline_to_dnn
+from repro.core.rules.ml_to_dnn import (
+    MLtoDNNUnsupported,
+    compile_pipeline_to_dnn,  # noqa: F401  (public rule API)
+    compile_pipeline_to_dnn_partial,
+)
+from repro.ml.pipeline import _node_label as _pipeline_node_label
 from repro.core.rules.ml_to_sql import (
     MLtoSQLUnsupported,
     compile_pipeline_to_sql,
@@ -80,6 +85,12 @@ class OptimizationReport:
     # physical stage ("pure: Scan[t]→Project" / "host: MLUdf"), matching the
     # StageGraph the engine will build from the plan
     stages: list[str] = field(default_factory=list)
+    # per-node runtime placement, one list per lowered predict node (in
+    # lowering order): (pipeline-node label, runtime), where runtime is
+    # "tensor" / "host" / "sql", suffixed with the split segment
+    # ("tensor/prefix", "host/residual", "tensor/suffix") when the
+    # pipeline-splitting MLtoDNN lowering cut the pipeline
+    placement: list[list[tuple[str, str]]] = field(default_factory=list)
 
 
 class RavenOptimizer:
@@ -181,40 +192,126 @@ class RavenOptimizer:
                     t = "none"
             if t == "dnn":
                 try:
-                    comp = compile_pipeline_to_dnn(
+                    part = compile_pipeline_to_dnn_partial(
                         p.pipeline, strategy=opt.tensor_strategy,
                         use_pallas=opt.use_pallas,
+                        rename=dict(zip(p.pipeline.outputs, p.output_names)),
                     )
-                    outs = list(p.pipeline.outputs)
-                    names = list(p.output_names)
-
-                    def fn(cols, _c=comp, _o=outs, _n=names):
-                        res = _c.fn(cols)
-                        return {
-                            n: (res[o].reshape(-1) if res[o].ndim > 1 else res[o])
-                            for o, n in zip(_o, _n)
-                        }
-
-                    # canonical content token: the closure's behaviour is a
-                    # pure function of (pipeline, outputs, strategy), so two
-                    # MLtoDNN lowerings of the same pipeline — even in
-                    # different processes — fingerprint identically
-                    fn.__fingerprint_token__ = fingerprint(
-                        "mltodnn", p.pipeline, outs, names,
-                        opt.tensor_strategy, opt.use_pallas,
-                    )
-                    # consumed-column schema for the StageGraph (the closure
-                    # is otherwise opaque to schema inference)
-                    fn.__input_names__ = tuple(comp.input_names)
-                    return TensorOp(child, fn, names)
+                    return self._emit_dnn(p, child, part, report)
                 except MLtoDNNUnsupported as e:
                     report.notes.append(f"MLtoDNN fallback: {e}")
                     t = "none"
+            report.placement.append(
+                [(_pipeline_node_label(n), "host") for n in p.pipeline.nodes]
+            )
             return MLUdf(
                 child, p.pipeline, list(p.output_names),
                 batch_size=opt.udf_batch_size,
             )
         raise TypeError(type(p))
+
+    def _emit_dnn(self, p: LPredict, child, part, report) -> PhysicalPlan:
+        """Emit the physical plan for an MLtoDNN lowering — a single fused
+        TensorOp when the whole pipeline is supported, else the split
+        ``TensorOp(prefix) → MLUdf(residual) → TensorOp(suffix)`` chain with
+        cut values threaded as reserved block columns."""
+        opt = self.options
+        if part.full is not None:
+            comp = part.full
+            outs = list(p.pipeline.outputs)
+            names = list(p.output_names)
+
+            def fn(cols, _c=comp, _o=outs, _n=names):
+                res = _c.fn(cols)
+                return {
+                    n: (res[o].reshape(-1) if res[o].ndim > 1 else res[o])
+                    for o, n in zip(_o, _n)
+                }
+
+            # canonical content token: the closure's behaviour is a pure
+            # function of (pipeline, outputs, strategy) — the compiler's own
+            # token folds in its emission version (e.g. featurize fusion) —
+            # so two MLtoDNN lowerings of the same pipeline, even in
+            # different processes, fingerprint identically
+            fn.__fingerprint_token__ = fingerprint(
+                "mltodnn", p.pipeline, outs, names,
+                opt.tensor_strategy, opt.use_pallas,
+                comp.fn.__fingerprint_token__,
+            )
+            # consumed-column schema for the StageGraph (the closure is
+            # otherwise opaque to schema inference)
+            fn.__input_names__ = tuple(comp.input_names)
+            if comp.fused:
+                report.notes.append(
+                    "MLtoDNN fused featurize kernel: "
+                    + ", ".join(comp.fused)
+                )
+            report.placement.append(
+                [(label, "tensor") for label, _ in part.split.placement]
+            )
+            return TensorOp(child, fn, names)
+
+        runtime = {
+            "prefix": "tensor/prefix",
+            "residual": "host/residual",
+            "suffix": "tensor/suffix",
+        }
+        report.placement.append(
+            [(label, runtime[seg]) for label, seg in part.split.placement]
+        )
+        final = set(p.output_names)
+
+        def tensor_wrap(comp, seg, tag):
+            def fn(cols, _c=comp, _seg=seg):
+                res = _c.fn(cols)
+                out = {}
+                for o, name in zip(_seg.pipeline.outputs, _seg.out_cols):
+                    v = res[o]
+                    out[name] = (
+                        v.reshape(-1) if name in final and v.ndim > 1 else v
+                    )
+                return out
+
+            fn.__fingerprint_token__ = fingerprint(
+                "mltodnn_split", tag, seg.pipeline, seg.out_cols,
+                seg.consumes, opt.tensor_strategy, opt.use_pallas,
+                comp.fn.__fingerprint_token__,
+            )
+            fn.__input_names__ = tuple(comp.input_names)
+            return fn
+
+        plan: PhysicalPlan = child
+        fused: list[str] = []
+        if part.prefix is not None:
+            comp, seg = part.prefix
+            fused += list(comp.fused)
+            plan = TensorOp(
+                plan, tensor_wrap(comp, seg, "prefix"),
+                list(seg.out_cols), consumes=tuple(seg.consumes),
+            )
+        seg = part.residual
+        plan = MLUdf(
+            plan, seg.pipeline, list(seg.out_cols),
+            batch_size=opt.udf_batch_size, consumes=tuple(seg.consumes),
+        )
+        if part.suffix is not None:
+            comp, seg = part.suffix
+            fused += list(comp.fused)
+            plan = TensorOp(
+                plan, tensor_wrap(comp, seg, "suffix"),
+                list(seg.out_cols), consumes=tuple(seg.consumes),
+            )
+        n_res = sum(1 for _, s in part.split.placement if s == "residual")
+        n_all = len(part.split.placement)
+        report.notes.append(
+            f"MLtoDNN split: {n_all - n_res}/{n_all} pipeline ops lowered to "
+            f"the tensor runtime; {n_res}-op residual stays on host"
+        )
+        if fused:
+            report.notes.append(
+                "MLtoDNN fused featurize kernel: " + ", ".join(fused)
+            )
+        return plan
 
     def _lower_sql(self, p: LPredict, child: PhysicalPlan, report) -> PhysicalPlan:
         """MLtoSQL lowering, incl. per-partition specialized expressions."""
@@ -259,6 +356,9 @@ class RavenOptimizer:
                     f"score column '{p.output_names[0]}' emitted in logit "
                     "space (threshold filters rewritten)"
                 )
+        report.placement.append(
+            [(_pipeline_node_label(n), "sql") for n in p.pipeline.nodes]
+        )
         return Project(child, None, exprs)
 
 

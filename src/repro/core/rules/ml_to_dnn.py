@@ -5,11 +5,26 @@ coverage is everything the tensor compiler supports — featurizers, linear
 models, tree ensembles (GEMM or gather strategy). The LPredict node's
 physical lowering becomes a TensorOp whose function is jitted and fused
 with the surrounding relational program.
+
+Partial lowering: when a pipeline contains unsupported nodes, the rule no
+longer abandons the whole pipeline. :func:`compile_pipeline_to_dnn_partial`
+runs the coverage/frontier split (:func:`repro.ml.pipeline.split_pipeline`),
+compiles the supported prefix/suffix slices to tensor programs, and leaves
+only the minimal residual for the host runtime — the optimizer emits
+``TensorOp(prefix) → MLUdf(residual) → TensorOp(suffix)``.
+:exc:`MLtoDNNUnsupported` is raised only when nothing at all can be lowered.
 """
 from __future__ import annotations
 
-from repro.ml.pipeline import TrainedPipeline
-from repro.tensor.compile import TensorCompilation, compile_pipeline_tensor
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.ml.pipeline import PipelineSplit, SplitSegment, TrainedPipeline, split_pipeline
+from repro.tensor.compile import (
+    TensorCompilation,
+    compile_pipeline_tensor,
+    tensor_supported,
+)
 
 
 class MLtoDNNUnsupported(Exception):
@@ -19,7 +34,72 @@ class MLtoDNNUnsupported(Exception):
 def compile_pipeline_to_dnn(
     pipe: TrainedPipeline, strategy: str = "auto", use_pallas: bool | None = None
 ) -> TensorCompilation:
+    """Whole-pipeline compilation (raises on any unsupported node)."""
     try:
         return compile_pipeline_tensor(pipe, strategy=strategy, use_pallas=use_pallas)
     except (ValueError, KeyError) as e:  # unsupported op kinds
         raise MLtoDNNUnsupported(str(e)) from e
+
+
+@dataclass
+class PartialDNNLowering:
+    """Outcome of the pipeline-splitting MLtoDNN lowering.
+
+    Exactly one of two shapes: ``full`` set (pipeline fully supported — the
+    classic single-TensorOp lowering), or a split with a host ``residual``
+    and compiled ``prefix``/``suffix`` tensor slices (either may be None
+    when its slice is empty). ``split`` carries the per-node placement for
+    the optimizer's report.
+    """
+
+    split: PipelineSplit
+    full: Optional[TensorCompilation] = None
+    prefix: Optional[tuple[TensorCompilation, SplitSegment]] = None
+    residual: Optional[SplitSegment] = None
+    suffix: Optional[tuple[TensorCompilation, SplitSegment]] = None
+
+
+def compile_pipeline_to_dnn_partial(
+    pipe: TrainedPipeline,
+    strategy: str = "auto",
+    use_pallas: bool | None = None,
+    rename: Optional[dict[str, str]] = None,
+) -> PartialDNNLowering:
+    """Split-aware MLtoDNN: lower the maximal supported prefix and suffix,
+    keep the minimal residual on host.
+
+    ``rename`` maps pipeline graph outputs to plan column names so segment
+    ``out_cols`` land directly in the engine's namespace. Raises
+    :exc:`MLtoDNNUnsupported` when neither a prefix nor a suffix can be
+    lowered (the plan falls back to one monolithic MLUdf).
+    """
+    split = split_pipeline(pipe, tensor_supported, rename=rename)
+    if split.fully_supported:
+        return PartialDNNLowering(
+            split=split,
+            full=compile_pipeline_to_dnn(
+                pipe, strategy=strategy, use_pallas=use_pallas
+            ),
+        )
+    if split.prefix is None and split.suffix is None:
+        raise MLtoDNNUnsupported(
+            "no supported prefix or suffix to split out: "
+            + ", ".join(label for label, _ in split.placement)
+        )
+
+    def _compile(seg: Optional[SplitSegment]):
+        if seg is None:
+            return None
+        return (
+            compile_pipeline_tensor(
+                seg.pipeline, strategy=strategy, use_pallas=use_pallas
+            ),
+            seg,
+        )
+
+    return PartialDNNLowering(
+        split=split,
+        prefix=_compile(split.prefix),
+        residual=split.residual,
+        suffix=_compile(split.suffix),
+    )

@@ -162,6 +162,10 @@ def propagate_intervals(
         elif node.op in ("tree_ensemble", "linear"):
             for o in node.outputs:
                 vals[o] = [TOP]
+        elif node.op == "python_udf":
+            # opaque host callable: same column count as its input, but
+            # nothing can be said about the values — every column goes TOP
+            vals[node.outputs[0]] = [TOP] * len(vals[node.inputs[0]])
         else:
             raise ValueError(node.op)
     return vals

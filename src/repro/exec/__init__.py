@@ -6,16 +6,15 @@ optimizer's physical plan and the runtime: a linear graph of declarative,
 content-fingerprinted stages (maximal pure-jnp segments and MLUdf host
 boundaries). ``repro.exec.pipeline`` executes that graph with host/device
 overlap across request groups; ``repro.exec.scheduler`` is the fair,
-backpressured multi-queue pump that feeds it (``repro.exec.pump`` keeps the
-original single-deadline pump for simple embedders).
+backpressured multi-queue pump that feeds it (it also keeps the original
+single-deadline ``RequestPump`` for simple embedders).
 ``repro.exec.artifact_store`` persists optimizer output and AOT-exported
 stage executables across processes, keyed on the stage IR's chained content
 fingerprints.
 """
 from repro.exec.artifact_store import ArtifactStore, StoreStats, env_digest
 from repro.exec.pipeline import PipelineExecutor
-from repro.exec.pump import RequestPump
-from repro.exec.scheduler import QueryQueue, Scheduler
+from repro.exec.scheduler import QueryQueue, RequestPump, Scheduler
 from repro.exec.stages import (
     RunResult,
     Stage,

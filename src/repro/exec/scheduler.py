@@ -1,9 +1,9 @@
 """Fair, backpressured multi-queue request scheduling for the serving layer.
 
-This generalizes the single-deadline :class:`~repro.exec.pump.RequestPump`:
-instead of one global pending list flushed wholesale, every served query gets
-its own queue with its own latency target and bounds, and one pump thread
-schedules *groups* across them:
+This generalizes the single-deadline :class:`RequestPump` (kept below for
+embedders that drive one flush callable): instead of one global pending list
+flushed wholesale, every served query gets its own queue with its own latency
+target and bounds, and one pump thread schedules *groups* across them:
 
   * **earliest-deadline-first** — each queue's deadline is its oldest
     request's submit time plus that queue's ``max_latency_ms``, so a small
@@ -341,3 +341,96 @@ class Scheduler:
             self.last_error = first
             raise first
         return drained
+
+
+# ---------------------------------------------------------------------------
+# The original single-deadline pump
+# ---------------------------------------------------------------------------
+
+
+class RequestPump:
+    """Background thread driving one ``flush`` callable against a latency
+    target — the minimal pump for embedders that don't need per-query queues.
+
+    The :class:`Scheduler` above subsumes this for the serving layer (it is
+    what :class:`~repro.serve.query_server.PredictionQueryServer` runs); the
+    pump owns no queue state of its own: ``notify(t_submit)`` arms a deadline
+    tracking the *oldest* pending request, the loop sleeps until it, and the
+    flush callable does the actual draining. Explicit ``flush()`` calls
+    remain safe at any time — flushing is idempotent on an empty queue.
+    """
+
+    def __init__(self, flush: Callable[[], list], max_latency_ms: float = 5.0):
+        self._flush = flush
+        self.max_latency_ms = float(max_latency_ms)
+        self._cv = threading.Condition()
+        self._deadline: float | None = None
+        self._stopped = False
+        self._thread: threading.Thread | None = None
+        self.flushes = 0  # flushes this pump initiated
+        self.last_error: BaseException | None = None  # most recent flush failure
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "RequestPump":
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._loop, name="raven-request-pump", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        """Stop the pump after draining anything already pending."""
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+        self._flush()  # drain stragglers deterministically
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    # -- producer side -------------------------------------------------------
+
+    def notify(self, t_submit: float | None = None) -> None:
+        """Arm the flush deadline for a newly submitted request.
+
+        The deadline tracks the oldest pending request: later submits never
+        push it back, they just ride along in the same flush.
+        """
+        t = time.perf_counter() if t_submit is None else t_submit
+        with self._cv:
+            deadline = t + self.max_latency_ms / 1e3
+            if self._deadline is None or deadline < self._deadline:
+                self._deadline = deadline
+            self._cv.notify_all()
+
+    # -- the loop ------------------------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._stopped and self._deadline is None:
+                    self._cv.wait()
+                if self._stopped:
+                    return
+                wait_s = self._deadline - time.perf_counter()
+                if wait_s > 0:
+                    self._cv.wait(wait_s)
+                    continue  # re-check: stop/new earlier deadline may race
+                self._deadline = None
+            # count before running: waiters wake *inside* flush (their
+            # request's event sets mid-drain), so counting after would let a
+            # woken waiter observe flushes == 0 for the flush that served it
+            self.flushes += 1
+            try:
+                self._flush()
+            except BaseException as e:  # noqa: BLE001
+                # the server already attached the error to the affected
+                # requests (their wait() re-raises); the pump must survive a
+                # bad batch or every later submit would hang forever
+                self.last_error = e

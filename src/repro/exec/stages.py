@@ -165,6 +165,8 @@ def pure_step(plan, inner: Optional[Callable[[dict], State]]) -> Callable[[dict]
             cols, valid, seg = inner(env)
             out = dict(cols)
             out.update(_plan.fn(cols))
+            for c in _plan.consumes:  # block columns ending here (split)
+                out.pop(c, None)
             return out, valid, seg
         return fn
 
@@ -420,6 +422,7 @@ def _segment_out_cols(ops, in_cols: Optional[list[str]]) -> list[str]:
             base = list(op.keep) if op.keep is not None else cur
             cur = base + [c for c in op.exprs if c not in base]
         elif isinstance(op, (MLUdf, TensorOp)):
+            cur = [c for c in cur if c not in op.consumes]
             cur = cur + [c for c in op.output_names if c not in cur]
         elif isinstance(op, Aggregate):
             cur = [a[0] for a in op.aggs]
@@ -531,11 +534,19 @@ def run_udf(udf, cols: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         res = run_pipeline(udf.pipeline, batch)
         for o in udf.pipeline.outputs:
             outs[o].append(np.asarray(res[o]))
+    if n == 0:
+        # run the pipeline over the zero-row slice anyway: outputs must keep
+        # their true trailing shape (split-lowering block columns are 2-D),
+        # or the downstream pure stage would trace against the wrong rank
+        res = run_pipeline(udf.pipeline, {k: cols[k][:0] for k in in_names})
+        for o in udf.pipeline.outputs:
+            outs[o].append(np.asarray(res[o]))
     result = dict(cols)
     for o, name in zip(udf.pipeline.outputs, udf.output_names):
-        result[name] = (
-            np.concatenate(outs[o]) if outs[o] else np.empty((0,))
-        )
+        result[name] = np.concatenate(outs[o])
+    for c in udf.consumes:  # block columns ending at this boundary (split)
+        if c not in udf.output_names:
+            result.pop(c, None)
     return result
 
 
@@ -607,7 +618,7 @@ def host_step(
     b = bucketer(n) if bucketer is not None else n
     if b > n:
         out = {
-            k: np.concatenate([v, np.zeros(b - n, dtype=v.dtype)])
+            k: np.concatenate([v, np.zeros((b - n,) + v.shape[1:], dtype=v.dtype)])
             for k, v in out.items()
         }
         if np_seg is not None:

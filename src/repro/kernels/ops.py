@@ -93,15 +93,12 @@ def featurize_op(
         use_pallas = _on_tpu()
     if not (use_pallas or interpret):
         return _ref.featurize_ref(num, cat, offset, scale, cat_values, cat_segments)
-    N = num.shape[0]
-    Np = _round_up(max(N, 1), block_n)
-    nump = jnp.pad(num, ((0, Np - N), (0, 0)))
-    catp = jnp.pad(cat, ((0, Np - N), (0, 0)), constant_values=-1)
-    out = _featurize_kernel(
-        nump, catp, offset, scale, cat_values, cat_segments,
+    # row padding/cropping (and zero-width operand widening) live in the
+    # kernel wrapper itself — natural shapes in, natural shapes out
+    return _featurize_kernel(
+        num, cat, offset, scale, cat_values, cat_segments,
         block_n=block_n, interpret=interpret,
     )
-    return out[:N]
 
 
 # ---------------------------------------------------------------------------

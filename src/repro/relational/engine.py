@@ -67,6 +67,9 @@ class MLUdf:
     pipeline: Any  # TrainedPipeline
     output_names: list[str]  # graph outputs -> column names
     batch_size: int = 10_000
+    # upstream block columns (split-lowering cut values) this node is the
+    # last consumer of — dropped from its output schema
+    consumes: tuple[str, ...] = ()
 
 
 @dataclass
@@ -76,6 +79,8 @@ class TensorOp:
     child: "PhysicalPlan"
     fn: Callable[[dict[str, jnp.ndarray]], dict[str, jnp.ndarray]]
     output_names: list[str]
+    # upstream block columns this node is the last consumer of (see MLUdf)
+    consumes: tuple[str, ...] = ()
 
 
 @dataclass
@@ -592,7 +597,8 @@ def _out_cols(plan: PhysicalPlan) -> list[str]:
         base = _out_cols(plan.child) if plan.keep is None else list(plan.keep)
         return base + list(plan.exprs)
     if isinstance(plan, (MLUdf, TensorOp)):
-        return _out_cols(plan.child) + list(plan.output_names)
+        base = [c for c in _out_cols(plan.child) if c not in plan.consumes]
+        return base + [c for c in plan.output_names if c not in base]
     if isinstance(plan, Aggregate):
         return [a[0] for a in plan.aggs]
     raise TypeError(type(plan))

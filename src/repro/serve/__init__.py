@@ -1,6 +1,5 @@
 from repro.exec.pipeline import PipelineExecutor
-from repro.exec.pump import RequestPump
-from repro.exec.scheduler import Scheduler
+from repro.exec.scheduler import RequestPump, Scheduler
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.query_server import (
     PredictionQueryServer,

@@ -583,6 +583,24 @@ class PreparedQuery:
         lines.append("-- chosen runtimes " + "-" * 36)
         for i, t in sorted(self.report.transforms.items()):
             lines.append(f"predict[{i}] -> {t}")
+        if self.report.placement:
+            lines.append("-- runtime placement (per pipeline op) " + "-" * 17)
+            for i, nodes in enumerate(self.report.placement):
+                runtimes = {r for _, r in nodes}
+                if any("/" in r for r in runtimes):
+                    # split lowering: summarize each contiguous segment
+                    lines.append(f"predict[{i}]: split across runtimes")
+                    for label, r in nodes:
+                        lines.append(f"  {r:<16} {label}")
+                else:
+                    only = runtimes.pop() if len(runtimes) == 1 else None
+                    if only is not None:
+                        lines.append(
+                            f"predict[{i}]: all {len(nodes)} ops on {only}"
+                        )
+                    else:
+                        for label, r in nodes:
+                            lines.append(f"  {r:<16} {label}")
         scans = [s for s in walk_plan(self.plan) if isinstance(s, Scan)]
         if scans:
             lines.append("-- pushed projections " + "-" * 33)

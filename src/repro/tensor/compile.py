@@ -35,6 +35,154 @@ class TensorCompilation:
     # columns the fused program consumes — surfaced so the StageGraph can
     # infer schema through an otherwise-opaque TensorOp closure
     input_names: tuple[str, ...] = ()
+    # values produced by a scaler/one-hot/concat chain collapsed into the
+    # fused Pallas featurize kernel (jnp oracle on CPU)
+    fused: tuple[str, ...] = ()
+
+
+# ---------------------------------------------------------------------------
+# Coverage predicate (drives the pipeline-splitting partial lowering)
+# ---------------------------------------------------------------------------
+
+_SUPPORTED_OPS = frozenset(
+    {
+        "concat",
+        "scaler",
+        "one_hot",
+        "label_encode",
+        "feature_extractor",
+        "constant",
+        "normalizer",
+        "tree_ensemble",
+        "linear",
+    }
+)
+
+
+def tensor_supported(node) -> bool:
+    """Can this pipeline node run in the tensor runtime?
+
+    Unknown ops (e.g. ``python_udf`` — an opaque host callable) are out, as
+    are encoders over string/object categories: numpy compares strings fine
+    on host, but a jnp program cannot hold them. These are exactly the nodes
+    the split analysis routes to the host residual.
+    """
+    if node.op not in _SUPPORTED_OPS:
+        return False
+    if node.op == "one_hot":
+        return np.asarray(node.attrs["categories"]).dtype.kind not in "OUSV"
+    if node.op == "label_encode":
+        return np.asarray(node.attrs["classes"]).dtype.kind not in "OUSV"
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Fused-featurize targeting: scaler/one-hot/concat chains -> Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def _detect_featurize_fusions(pipe: TrainedPipeline):
+    """Find concat nodes whose whole input chain is the standard featurize
+    pattern — ``concat(scaler(concat(numerics)), one_hot(c1), ...)`` over
+    graph inputs — and describe each as one fused kernel call.
+
+    Returns ``(fusions, swallowed)``: ``fusions`` maps the id() of each
+    fusable final concat node to its kernel arguments; ``swallowed`` holds
+    the ids of chain members replaced by the fused step. Intermediates must
+    be single-consumer and not graph outputs, so fusing never orphans a
+    value. The numeric part, when present, must be the concat's first input
+    (the kernel emits numerics-first layout).
+    """
+    graph_inputs = {s.name for s in pipe.inputs}
+    producer = {o: n for n in pipe.nodes for o in n.outputs}
+    n_consumers: dict[str, int] = {}
+    for n in pipe.nodes:
+        for v in n.inputs:
+            n_consumers[v] = n_consumers.get(v, 0) + 1
+    out_set = set(pipe.outputs)
+
+    def _single_use_intermediate(v: str) -> bool:
+        return n_consumers.get(v, 0) == 1 and v not in out_set
+
+    fusions: dict[int, dict] = {}
+    swallowed: set[int] = set()
+    for node in pipe.nodes:
+        if node.op != "concat" or not node.inputs or id(node) in swallowed:
+            continue
+        numeric: list[str] = []
+        offset = scale = None
+        cat_cols: list[str] = []
+        cat_vals: list[np.ndarray] = []
+        segments: list[tuple[int, int]] = []
+        members: list = []
+        start = 0
+        ok = True
+        for pos, v in enumerate(node.inputs):
+            p = producer.get(v)
+            if p is None or not _single_use_intermediate(v):
+                ok = False
+                break
+            if p.op == "scaler" and pos == 0 and not numeric:
+                src = producer.get(p.inputs[0])
+                if (
+                    src is None
+                    or src.op != "concat"
+                    or not _single_use_intermediate(p.inputs[0])
+                    or not src.inputs
+                    or any(c not in graph_inputs or c in producer for c in src.inputs)
+                ):
+                    ok = False
+                    break
+                offset = np.asarray(p.attrs["offset"], np.float32).reshape(-1)
+                scale = np.asarray(p.attrs["scale"], np.float32).reshape(-1)
+                if offset.shape[0] != len(src.inputs):
+                    ok = False
+                    break
+                numeric = list(src.inputs)
+                members += [src, p]
+            elif p.op == "one_hot":
+                src_col = p.inputs[0]
+                cats = np.asarray(p.attrs["categories"])
+                if (
+                    src_col not in graph_inputs
+                    or src_col in producer
+                    or cats.dtype.kind not in "iu"
+                ):
+                    ok = False
+                    break
+                segments.append((start, int(cats.shape[0])))
+                start += int(cats.shape[0])
+                cat_vals.append(cats.astype(np.int32))
+                cat_cols.append(src_col)
+                members.append(p)
+            else:
+                ok = False
+                break
+        if not ok or len(members) < 2:
+            continue
+        fusions[id(node)] = {
+            "numeric": tuple(numeric),
+            "offset": offset if offset is not None else np.zeros(0, np.float32),
+            "scale": scale if scale is not None else np.zeros(0, np.float32),
+            "categorical": tuple(cat_cols),
+            "cat_values": (
+                np.concatenate(cat_vals)
+                if cat_vals
+                else np.zeros(0, np.int32)
+            ),
+            "segments": tuple(segments),
+            "out": node.outputs[0],
+        }
+        swallowed.update(id(m) for m in members)
+    return fusions, swallowed
+
+
+def _featurize_block_n(n_rows: int) -> int:
+    """Row-block size for the fused kernel: the row count's power-of-two
+    bucket (serving already pads batches to one), clamped to [8, 256] so the
+    kernel never pads small batches up to a full 256-row block."""
+    b = 1 << max(3, (max(n_rows, 1) - 1).bit_length())
+    return min(b, 256)
 
 
 def _choose_tree_strategy(ens: TreeEnsemble) -> str:
@@ -61,10 +209,24 @@ def _choose_tree_strategy(ens: TreeEnsemble) -> str:
 def compile_pipeline_tensor(
     pipe: TrainedPipeline, strategy: str = "auto", use_pallas: bool | None = None
 ) -> TensorCompilation:
+    # eager coverage validation: reject unsupported pipelines at compile
+    # time, not at first trace inside the closure — the partial-lowering
+    # path relies on this to decide splits before any plan is built
+    bad = sorted({n.op for n in pipe.nodes if not tensor_supported(n)})
+    if bad:
+        raise ValueError(f"unsupported for tensor lowering: {', '.join(bad)}")
+
+    fusions, swallowed = _detect_featurize_fusions(pipe)
     steps: list[tuple] = []  # (kind, node) in topo order — closed over below
     chosen: dict[str, str] = {}
+    fused_outs: list[str] = []
     for node in pipe.nodes:
-        if node.op == "tree_ensemble":
+        if id(node) in swallowed:
+            continue
+        if id(node) in fusions:
+            steps.append(("featurize", node, fusions[id(node)]))
+            fused_outs.append(node.outputs[0])
+        elif node.op == "tree_ensemble":
             ens = node.attrs["ensemble"]
             strat = strategy if strategy != "auto" else _choose_tree_strategy(ens)
             chosen[node.outputs[0]] = strat
@@ -88,7 +250,34 @@ def compile_pipeline_tensor(
         n = next(iter(vals.values())).shape[0] if vals else 0
         for kind, node, prog in steps:
             a = node.attrs
-            if kind == "concat":
+            if kind == "featurize":
+                from repro.kernels.ops import featurize_op
+
+                info = prog
+                num = (
+                    jnp.concatenate(
+                        [vals[c].astype(jnp.float32) for c in info["numeric"]],
+                        axis=1,
+                    )
+                    if info["numeric"]
+                    else jnp.zeros((n, 0), jnp.float32)
+                )
+                cat = (
+                    jnp.concatenate(
+                        [vals[c].astype(jnp.int32) for c in info["categorical"]],
+                        axis=1,
+                    )
+                    if info["categorical"]
+                    else jnp.zeros((n, 0), jnp.int32)
+                )
+                vals[info["out"]] = featurize_op(
+                    num, cat,
+                    jnp.asarray(info["offset"]), jnp.asarray(info["scale"]),
+                    jnp.asarray(info["cat_values"]), info["segments"],
+                    block_n=_featurize_block_n(num.shape[0]),
+                    use_pallas=use_pallas,
+                )
+            elif kind == "concat":
                 vals[node.outputs[0]] = jnp.concatenate(
                     [vals[i].astype(jnp.float32) for i in node.inputs], axis=1
                 )
@@ -168,10 +357,13 @@ def compile_pipeline_tensor(
     from repro.core.fingerprint import fingerprint as _fingerprint
 
     fn.__fingerprint_token__ = _fingerprint(
-        "tensor_compile", pipe, strategy, use_pallas, sorted(chosen.items())
+        # "fz1" versions the fused-featurize emission so artifacts compiled
+        # before chain fusion existed can never alias the new programs
+        "tensor_compile", "fz1", pipe, strategy, use_pallas,
+        sorted(chosen.items()), tuple(fused_outs),
     )
     fn.__input_names__ = tuple(input_names)
     return TensorCompilation(
         fn=fn, strategy=chosen, n_ops=len(steps),
-        input_names=tuple(input_names),
+        input_names=tuple(input_names), fused=tuple(fused_outs),
     )

@@ -87,19 +87,35 @@ def test_tree_gemm_kernel_sweep(hospital, n_estimators, max_depth):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
-@pytest.mark.parametrize("n_num,segs", [(5, (4, 4, 4)), (1, (2,)), (9, (3, 7, 2, 5))])
-def test_featurize_kernel_sweep(n_num, segs):
+@pytest.mark.kernel_parity
+@pytest.mark.parametrize("N", [0, 100, 256, 257])
+@pytest.mark.parametrize(
+    "n_num,segs",
+    [
+        (5, (4, 4, 4)),
+        (1, (2,)),
+        (9, (3, 7, 2, 5)),
+        (4, ()),   # numeric-only: no one-hot segments
+        (0, (3, 5)),  # categorical-only: no scaler columns
+    ],
+)
+def test_featurize_kernel_sweep(n_num, segs, N):
+    """Fused featurize kernel vs the jnp oracle — including row counts that
+    are not a multiple of ``block_n`` (internal pad/crop) and zero-width
+    numeric/categorical operands."""
     rng = np.random.default_rng(3)
-    N = 256
     num = jnp.asarray(rng.normal(size=(N, n_num)), jnp.float32)
     cat = jnp.asarray(
-        np.stack([rng.integers(0, s, N) for s in segs], 1), jnp.int32
+        np.stack([rng.integers(0, s, N) for s in segs], 1)
+        if segs else np.zeros((N, 0)),
+        jnp.int32,
     )
     offset = jnp.asarray(rng.normal(size=n_num), jnp.float32)
     scale = jnp.asarray(rng.uniform(0.5, 2.0, size=n_num), jnp.float32)
     starts = np.cumsum([0] + list(segs))[:-1]
     cat_values = jnp.asarray(
-        np.concatenate([np.arange(s) for s in segs]), jnp.int32
+        np.concatenate([np.arange(s) for s in segs] or [np.zeros(0)]),
+        jnp.int32,
     )
     cat_segments = tuple(
         (int(s), int(l)) for s, l in zip(starts, segs)
@@ -110,6 +126,39 @@ def test_featurize_kernel_sweep(n_num, segs):
     want = ref.featurize_ref(num, cat, offset, scale, cat_values, cat_segments)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
     assert got.shape == (N, n_num + sum(segs))
+
+
+@pytest.mark.kernel_parity
+def test_featurize_kernel_bitwise_vs_host_featurization():
+    """The fused kernel is *bitwise* identical to the host numpy
+    featurization path for scaler + one-hot columns (both are elementwise
+    f32); this is what lets split plans keep host-path semantics."""
+    rng = np.random.default_rng(7)
+    N, n_num, segs = 300, 6, (4, 9)
+    num_np = rng.normal(size=(N, n_num)).astype(np.float32)
+    cat_np = np.stack([rng.integers(0, s, N) for s in segs], 1).astype(np.int32)
+    offset = rng.normal(size=n_num).astype(np.float32)
+    scale = rng.uniform(0.5, 2.0, size=n_num).astype(np.float32)
+    starts = np.cumsum([0] + list(segs))[:-1]
+    cat_values = np.concatenate([np.arange(s) for s in segs]).astype(np.int32)
+    cat_segments = tuple((int(s), int(l)) for s, l in zip(starts, segs))
+
+    got = np.asarray(
+        ops.featurize_op(
+            jnp.asarray(num_np), jnp.asarray(cat_np), jnp.asarray(offset),
+            jnp.asarray(scale), jnp.asarray(cat_values), cat_segments,
+            interpret=True,
+        )
+    )
+    scaled = (num_np - offset[None, :]) * scale[None, :]
+    onehots = [
+        (cat_np[:, j : j + 1] == cat_values[s : s + l][None, :]).astype(
+            np.float32
+        )
+        for j, (s, l) in enumerate(cat_segments)
+    ]
+    want = np.concatenate([scaled, *onehots], axis=1)
+    assert np.array_equal(got.view(np.uint32), want.view(np.uint32))
 
 
 def test_tree_gemm_padding_is_inert(hospital):
