@@ -100,7 +100,7 @@ def run_variant(query, tables, repeats: int = 3, **opts) -> float:
     return timed(go, repeats)
 
 
-NOOPT = dict(
-    predicate_pruning=False, projection_pushdown=False, data_induced=False,
-    transform="none",
-)
+NOOPT = {
+    "predicate_pruning": False, "projection_pushdown": False,
+    "data_induced": False, "transform": "none",
+}

@@ -19,7 +19,7 @@ def run(quick: bool = False):
         pipe = train_model(train, "dt", depth=depth)
         ens = pipe.model_nodes()[0].attrs["ensemble"]
         unused = len(train.numeric + train.categorical) - len(
-            set(int(f) for f in ens.feature if f >= 0)
+            {int(f) for f in ens.feature if f >= 0}
         )
         q = build_query(infer, pipe)
         t0 = run_variant(q, infer.tables, **NOOPT)

@@ -32,7 +32,7 @@ def run(quick: bool = False, n_pipelines: int = 138, n_repeats: int = 8):
     corpus = build_corpus(n_pipelines=n_pipelines, n_rows=20_000, seed=0)
     rng = np.random.default_rng(0)
     results = {"rule": [], "clf": [], "reg": []}
-    for rep in range(n_repeats):  # n_repeats × 5 folds
+    for _rep in range(n_repeats):  # n_repeats × 5 folds
         folds = _stratified_folds(corpus.labels, 5, rng)
         for i in range(5):
             test = folds[i]

@@ -44,7 +44,7 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    overrides = dict(_parse_override(kv) for kv in args.set)
+    overrides = dict(map(_parse_override, args.set))
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     sp = SHAPES[args.shape]

@@ -66,12 +66,12 @@ print(query.prepare(transform="sql").explain())
 
 print("== execution: no-opt vs Raven (all rules + each runtime) ==")
 for label, kwargs in [
-    ("no-opt        ", dict(options=OptimizerOptions(
+    ("no-opt        ", {"options": OptimizerOptions(
         predicate_pruning=False, projection_pushdown=False,
-        data_induced=False, transform="none"))),
-    ("raven (none)  ", dict(transform="none")),
-    ("raven (sql)   ", dict(transform="sql")),
-    ("raven (dnn)   ", dict(transform="dnn")),
+        data_induced=False, transform="none")}),
+    ("raven (none)  ", {"transform": "none"}),
+    ("raven (sql)   ", {"transform": "sql"}),
+    ("raven (dnn)   ", {"transform": "dnn"}),
 ]:
     prep = query.prepare(**kwargs)
     prep()  # warm

@@ -1,0 +1,32 @@
+"""Static analysis for Raven: plan/StageGraph verifier + concurrency lint.
+
+Public surface:
+
+  * :func:`repro.analysis.verifier.check_logical` /
+    :func:`~repro.analysis.verifier.check_graph` /
+    :func:`~repro.analysis.verifier.check_exec` — the three verifier layers;
+  * :func:`repro.analysis.verifier.verify_plan` — lower + verify in one call;
+  * :func:`repro.analysis.concurrency.lint_repo` — lock-discipline and
+    forbidden-pattern lint over the package sources;
+  * ``python -m repro.analysis`` — both passes as a CI gate.
+"""
+from repro.analysis.rules import (  # noqa: F401
+    AnalysisResult,
+    Rule,
+    VerificationWarning,
+    Violation,
+    rule_catalog,
+)
+from repro.analysis.runtime import (  # noqa: F401
+    RuntimeInvariantError,
+    asserts_enabled,
+    runtime_assert,
+)
+from repro.analysis.verifier import (  # noqa: F401
+    check_exec,
+    check_graph,
+    check_logical,
+    resolve_verify_mode,
+    verify_graph,
+    verify_plan,
+)

@@ -1,0 +1,180 @@
+"""``python -m repro.analysis`` — the static-analysis CI gate.
+
+Runs (1) the concurrency/forbidden-pattern lint over the package sources
+and (2) the plan verifier, in strict coverage, over a deterministic scenario
+sweep that exercises every lowering path the optimizer can emit today:
+MLtoSQL projection plans, fully-fused MLtoDNN TensorOps, split
+``TensorOp → MLUdf → TensorOp`` chains with ``__pv_*`` block columns,
+monolithic host MLUdfs, and segmented aggregates. Exits nonzero on any
+violation, printing each with its rule id.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.analysis.rules import AnalysisResult, rule_catalog
+
+
+def _toy_pipeline(with_udf: bool = False):
+    """A hand-built featurize+linear pipeline (no training: fixed weights,
+    so the gate is deterministic and fast)."""
+    from repro.ml.pipeline import InputSpec, PipelineNode, TrainedPipeline
+
+    nodes = [
+        PipelineNode("concat", ["a", "b"], ["num_raw"], {}),
+        PipelineNode(
+            "scaler", ["num_raw"], ["num_scaled"],
+            {
+                "offset": np.array([0.1, -0.2]),
+                "scale": np.array([1.5, 0.75]),
+            },
+        ),
+        PipelineNode("concat", ["num_scaled"], ["features"], {}),
+    ]
+    feat = "features"
+    if with_udf:
+        def _bump(x):
+            return x + 0.125
+
+        _bump.__fingerprint_token__ = "analysis-cli-python-udf-v1"
+        nodes.append(
+            PipelineNode("python_udf", [feat], ["tweaked"], {"fn": _bump})
+        )
+        feat = "tweaked"
+    nodes.append(
+        PipelineNode(
+            "linear", [feat], ["score", "label"],
+            {
+                "weights": np.array([0.8, -0.5]),
+                "bias": 0.25,
+                "post": "logistic",
+            },
+        )
+    )
+    return TrainedPipeline(
+        inputs=[InputSpec("a", "numeric"), InputSpec("b", "numeric")],
+        outputs=["score", "label"],
+        nodes=nodes,
+    )
+
+
+def _scenarios():
+    """(name, PredictionQuery, OptimizerOptions, tables) per lowering path."""
+    from repro.core.ir import (
+        LAggregate,
+        LFilter,
+        LPredict,
+        LScan,
+        PredictionQuery,
+    )
+    from repro.core.optimizer import OptimizerOptions
+    from repro.relational.expr import Bin, Col, Const
+
+    rng = np.random.default_rng(7)
+    tables = {
+        "t": {
+            "a": rng.normal(size=32),
+            "b": rng.normal(size=32),
+            "k": rng.integers(0, 8, size=32).astype(np.int32),
+        }
+    }
+
+    def scan():
+        return LScan("t", ["a", "b", "k"])
+
+    def predict(child, with_udf=False):
+        return LPredict(
+            child, _toy_pipeline(with_udf), ["score", "label"]
+        )
+
+    def q(plan):
+        return PredictionQuery(plan)
+
+    def opts(transform):
+        return OptimizerOptions(transform=transform, verify="off")
+
+    yield ("mltosql", q(predict(scan())), opts("sql"), tables)
+    yield ("mltodnn-full", q(predict(scan())), opts("dnn"), tables)
+    yield ("mltodnn-split", q(predict(scan(), with_udf=True)),
+           opts("dnn"), tables)
+    yield ("host-udf", q(predict(scan())), opts("none"), tables)
+    yield (
+        "filtered-aggregate",
+        q(LAggregate(
+            LFilter(predict(scan()), Bin("gt", Col("score"), Const(0.5))),
+            [("n", "count", ""), ("avg_score", "mean", "score")],
+        )),
+        opts("dnn"),
+        tables,
+    )
+
+
+def _verify_scenarios() -> AnalysisResult:
+    from repro.analysis.verifier import check_exec, check_graph, check_logical
+    from repro.core.optimizer import RavenOptimizer
+    from repro.exec.stages import build_stage_graph
+
+    res = AnalysisResult()
+    for name, query, opts, tables in _scenarios():
+        vs = check_logical(query, where="input")
+        plan, _report = RavenOptimizer(options=opts).optimize(query)
+        graph = build_stage_graph(plan)
+        vs += check_graph(graph)
+        vs += check_exec(graph, tables)
+        for v in vs:
+            v.where = f"{name}: {v.where}" if v.where else name
+        res.violations += vs
+        if not vs:
+            res.passed.append(
+                f"scenario {name!r}: {len(graph.stages)} stage(s) verified "
+                f"(logical+graph+exec)"
+            )
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Raven static analysis: plan verifier + concurrency lint",
+    )
+    ap.add_argument(
+        "--lint-only", action="store_true",
+        help="run only the source lint (skip plan verification)",
+    )
+    ap.add_argument(
+        "--verify-only", action="store_true",
+        help="run only the plan-verification sweep (skip the source lint)",
+    )
+    ap.add_argument(
+        "--rules", action="store_true", help="print the rule catalog and exit",
+    )
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        for r in rule_catalog():
+            print(f"{r.id:<28} {r.scope:<8} {r.description}")
+        return 0
+
+    result = AnalysisResult()
+    if not args.verify_only:
+        from repro.analysis.concurrency import lint_repo
+
+        result.extend(lint_repo())
+    if not args.lint_only:
+        result.extend(_verify_scenarios())
+
+    print(result.describe())
+    if result.violations:
+        print(
+            f"\nanalysis FAILED: {len(result.violations)} violation(s)",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

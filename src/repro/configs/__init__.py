@@ -47,14 +47,14 @@ def get_config(name: str) -> ArchConfig:
 def reduced_config(name: str, dtype: str = "float32") -> ArchConfig:
     """Miniature same-family config for CPU smoke tests."""
     cfg = get_config(name)
-    common = dict(
-        d_model=64,
-        n_heads=4,
-        n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4,
-        vocab_size=128,
-        dtype=dtype,
-        remat=False,
-    )
+    common = {
+        "d_model": 64,
+        "n_heads": 4,
+        "n_kv_heads": 2 if cfg.n_kv_heads < cfg.n_heads else 4,
+        "vocab_size": 128,
+        "dtype": dtype,
+        "remat": False,
+    }
     if cfg.family == "encdec":
         return dataclasses.replace(
             cfg, n_layers=2, encoder_layers=2, d_ff=128,

@@ -52,10 +52,10 @@ def _sample_pipeline_spec(rng: np.random.Generator) -> dict:
         1 if model == "dt"
         else int(np.clip(rng.lognormal(np.log(12), 0.9), 2, 120))
     )
-    return dict(
-        n_num=n_num, n_cat=n_cat, cards=cards, model=model,
-        depth=depth, n_trees=n_trees,
-    )
+    return {
+        "n_num": n_num, "n_cat": n_cat, "cards": cards, "model": model,
+        "depth": depth, "n_trees": n_trees,
+    }
 
 
 def _make_estimator(spec: dict, rng):

@@ -99,7 +99,12 @@ def _feed(h, obj: Any, pins: list) -> None:
             _feed(h, v, pins)
     elif isinstance(obj, dict):
         h.update(b"D" + str(len(obj)).encode())
-        for k in sorted(obj, key=repr):
+        # primitive keys sort by repr (stable, and preserves the historical
+        # byte stream for every existing cache entry); rich keys sort by
+        # their own canonical fingerprint — a repr can embed memory
+        # addresses (`<Foo object at 0x...>`), which would silently make the
+        # key *order* process-dependent even though each key hashes stably
+        for k in sorted(obj, key=_dict_key):
             _feed(h, k, pins)
             _feed(h, obj[k], pins)
     elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
@@ -119,6 +124,15 @@ def _feed(h, obj: Any, pins: list) -> None:
         # opaque (callables, foreign objects): identity hash — see module doc
         h.update(b"O" + str(id(obj)).encode())
         pins.append(obj)
+
+
+_PRIMITIVE_KEYS = (type(None), bool, int, float, str, bytes)
+
+
+def _dict_key(k: Any):
+    if isinstance(k, _PRIMITIVE_KEYS):
+        return (0, repr(k))
+    return (1, fingerprint(k))
 
 
 def _expr_digest(expr, pins: list) -> str:

@@ -75,6 +75,11 @@ class OptimizerOptions:
     tensor_strategy: str = "auto"  # 'auto' | 'gemm' | 'traversal'
     use_pallas: Optional[bool] = None
     udf_batch_size: int = 10_000
+    # plan verification: None defers to $RAVEN_VERIFY (default 'off');
+    # 'warn' reports violations, 'strict' raises PlanVerificationError.
+    # Excluded from plan-cache fingerprints (see session._optimize) so the
+    # mode never forks compiled artifacts.
+    verify: Optional[str] = None
 
 
 @dataclass
@@ -91,6 +96,10 @@ class OptimizationReport:
     # ("tensor/prefix", "host/residual", "tensor/suffix") when the
     # pipeline-splitting MLtoDNN lowering cut the pipeline
     placement: list[list[tuple[str, str]]] = field(default_factory=list)
+    # differential-verification trail (one line per checked rewrite phase),
+    # filled when the verify mode is 'warn' or 'strict'; rendered by
+    # explain()
+    verification: list[str] = field(default_factory=list)
 
 
 class RavenOptimizer:
@@ -104,12 +113,34 @@ class RavenOptimizer:
         opt = self.options
         q = query.copy()
         report = OptimizationReport()
+
+        # differential verification: re-check the plan after every rewrite
+        # rule, so a violation names the rule that introduced it
+        from repro.analysis.verifier import (
+            check_logical,
+            enforce,
+            resolve_verify_mode,
+        )
+
+        verify_mode = resolve_verify_mode(opt.verify)
+
+        def checkpoint(phase: str) -> None:
+            if verify_mode == "off":
+                return
+            report.verification += enforce(
+                check_logical(q, where=phase), verify_mode, phase
+            )
+
+        checkpoint("input")
         if opt.predicate_pruning:
             apply_predicate_pruning(q)
+            checkpoint("after predicate_pruning")
         if opt.data_induced:
             apply_data_induced(q)
+            checkpoint("after data_induced")
         if opt.projection_pushdown:
             apply_projection_pushdown(q)
+            checkpoint("after projection_pushdown")
         else:
             from repro.core.rules.projection_pushdown import (
                 prune_relational_columns,
@@ -118,6 +149,7 @@ class RavenOptimizer:
             # vanilla-engine behaviour: scans don't read columns no operator
             # references, but FK joins survive (join elimination is Raven's)
             prune_relational_columns(q, eliminate_joins=False)
+            checkpoint("after column_pruning")
 
         for i, pred in enumerate(q.predict_nodes()):
             if opt.transform is not None:
@@ -139,10 +171,19 @@ class RavenOptimizer:
                     # score only feeds threshold filters: keep the faster
                     # logit-space emission and move the thresholds instead.
                     rewrite_score_filters(q.plan, score, "logit")
+        checkpoint("after transform_selection")
 
         plan = self._lower(q.plan, report)
         from repro.exec.stages import describe_segments
 
+        if verify_mode != "off":
+            from repro.analysis.verifier import check_graph
+            from repro.exec.stages import build_stage_graph
+
+            report.verification += enforce(
+                check_graph(build_stage_graph(plan)), verify_mode,
+                "after lowering",
+            )
         report.stages = describe_segments(plan)
         n_host = sum(1 for s in report.stages if s.startswith("host"))
         if n_host:
@@ -321,9 +362,7 @@ class RavenOptimizer:
             ]
             space = comps[0][1].score_space
             exprs: dict[str, Expr] = {}
-            for oi, (out, name) in enumerate(
-                zip(p.pipeline.outputs, p.output_names)
-            ):
+            for out, name in zip(p.pipeline.outputs, p.output_names):
                 expr: Expr = comps[-1][1].exprs[out]
                 for key, comp in comps[:-1]:
                     expr = Case(

@@ -70,11 +70,11 @@ def _planted_label(
     """Sparse planted logit: only ~(1-sparsity) of inputs matter."""
     n = len(next(iter({**num_cols, **cat_cols}.values())))
     z = np.zeros(n)
-    for c, v in num_cols.items():
+    for v in num_cols.values():
         if rng.random() > sparsity:
             w = rng.normal(0, 1.5)
             z += w * (v - v.mean()) / (v.std() + 1e-9)
-    for c, v in cat_cols.items():
+    for v in cat_cols.values():
         if rng.random() > sparsity:
             hot = rng.integers(0, max(1, v.max() + 1))
             z += rng.normal(0, 2.0) * (v == hot)

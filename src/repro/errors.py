@@ -52,6 +52,18 @@ class ServerOverloadedError(RavenError):
     an ever-deeper backlog it can never serve within its latency targets."""
 
 
+class PlanVerificationError(RavenError):
+    """The static plan verifier rejected a plan (``verify='strict'``).
+
+    Carries the typed :class:`~repro.analysis.rules.Violation` list in
+    ``violations`` — each names the rule that fired and, for differential
+    checks, the optimizer rewrite rule that introduced the breakage."""
+
+    def __init__(self, message: str, violations=None):
+        super().__init__(message)
+        self.violations = list(violations or [])
+
+
 class StaleQueryError(RavenError):
     """A served handle no longer matches the registration under its name.
 

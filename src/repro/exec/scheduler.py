@@ -38,6 +38,7 @@ from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
+from repro.analysis.runtime import asserts_enabled, runtime_assert
 from repro.errors import ServerOverloadedError
 
 
@@ -256,6 +257,13 @@ class Scheduler:
             rows += n
         q.last_pop = time.perf_counter()
         self._cv.notify_all()  # wake backpressured submitters
+        if asserts_enabled():
+            runtime_assert(len(group) >= 1, "popped an empty group")
+            rids = [id(r) for r in group]
+            runtime_assert(
+                len(rids) == len(set(rids)),
+                f"popped group for '{q.name}' contains duplicate requests",
+            )
         return group
 
     def _loop(self) -> None:
@@ -325,6 +333,12 @@ class Scheduler:
                 if q is None:
                     break
                 todo.append((q.name, self._pop_group(q)))
+        if asserts_enabled():
+            ids = [id(r) for _name, g in todo for r in g]
+            runtime_assert(
+                len(ids) == len(set(ids)),
+                "drain snapshot contains duplicated requests",
+            )
         dispatched = [
             (group, self._dispatch_safe(name, group)) for name, group in todo
         ]
@@ -337,8 +351,9 @@ class Scheduler:
         with self._cv:
             while self._pump_settled < pump_target:
                 self._cv.wait(1.0)
+            if first is not None:
+                self.last_error = first
         if first is not None:
-            self.last_error = first
             raise first
         return drained
 

@@ -233,7 +233,7 @@ def main() -> None:
         print(f"dry-run sweep done; {failures} failures")
         sys.exit(1 if failures else 0)
 
-    overrides = dict(_parse_override(kv) for kv in args.set)
+    overrides = dict(map(_parse_override, args.set))
     rec = lower_cell(args.arch, args.shape, args.multi_pod, overrides or None)
     if overrides:
         rec["overrides"] = overrides

@@ -416,8 +416,8 @@ def _xlstm_forward(params, h, cfg):
         lambda a: a.reshape(ng, mpg, *a.shape[1:]), params["mlayers"]
     )
     for g in range(ng):
-        h, _ = jax.lax.scan(m_body, h, jax.tree.map(lambda a: a[g], ml))
-        sl = jax.tree.map(lambda a: a[g], params["slayers"])
+        h, _ = jax.lax.scan(m_body, h, jax.tree.map(lambda a, g=g: a[g], ml))
+        sl = jax.tree.map(lambda a, g=g: a[g], params["slayers"])
         y = S.slstm_layer(sl, L.rmsnorm(h, sl["ln"], cfg.norm_eps), cfg)
         h = h + y
     return h
@@ -452,11 +452,11 @@ def _xlstm_decode(params, batch, caches, cfg, mesh=None):
     new_mh, new_mn, new_s = [], [], []
     for g in range(ng):
         h, (h2, n2) = jax.lax.scan(
-            m_body, h, (jax.tree.map(lambda a: a[g], ml), mhr[g], mnr[g])
+            m_body, h, (jax.tree.map(lambda a, g=g: a[g], ml), mhr[g], mnr[g])
         )
         new_mh.append(h2)
         new_mn.append(n2)
-        sl = jax.tree.map(lambda a: a[g], params["slayers"])
+        sl = jax.tree.map(lambda a, g=g: a[g], params["slayers"])
         y, st = S.slstm_decode(
             sl, L.rmsnorm(h, sl["ln"], cfg.norm_eps),
             (sc[g], sn[g], sm[g], sy[g]), cfg,

@@ -44,6 +44,13 @@ from typing import Any, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.runtime import asserts_enabled, runtime_assert
+from repro.analysis.verifier import (
+    check_exec,
+    check_graph,
+    enforce,
+    resolve_verify_mode,
+)
 from repro.core.fingerprint import fingerprint
 from repro.core.ir import PredictionQuery
 from repro.core.optimizer import OptimizationReport, OptimizerOptions, RavenOptimizer
@@ -273,20 +280,39 @@ class PredictionQueryServer:
             )
             cached = self._optimized.get(qfp)
             if cached is not None:
-                self.stats.plan_cache_hits += 1
+                with self._lock:
+                    self.stats.plan_cache_hits += 1
                 plan, report = cached
             else:
-                self.stats.plan_cache_misses += 1
+                with self._lock:
+                    self.stats.plan_cache_misses += 1
                 plan, report = self.optimizer.optimize(query)
                 self._optimized[qfp] = (plan, report)
         compiled = compile_plan(plan)
+        verify_mode = resolve_verify_mode(
+            getattr(self.optimizer.options, "verify", None)
+        )
+        if verify_mode != "off":
+            # the disk plan-cache path skips the optimizer's differential
+            # checks, so the server re-verifies the graph it will actually
+            # serve — including abstract execution against the registered
+            # database schema (bucket polymorphism, dtype stability)
+            vs = check_graph(compiled.graph)
+            vs += check_exec(compiled.graph, database)
+            lines = enforce(vs, verify_mode, f"register '{name}'")
+            if lines and report is not None:
+                report.verification += [
+                    ln for ln in lines if ln not in report.verification
+                ]
         # warm start: deserialize every AOT-exported bucket program the
         # artifact store holds for this plan's stages, so previously-served
         # shapes run with zero new XLA traces from the very first submit
         from repro.relational.engine import get_artifact_store
 
         if get_artifact_store() is not None:
-            self.stats.warm_started_buckets += compiled.warm_start()
+            warmed = compiled.warm_start()
+            with self._lock:
+                self.stats.warm_started_buckets += warmed
         param_names = frozenset(plan_params(plan))
         bound = dict(params or {})
         check_params(param_names, bound, context=f"query '{name}'")
@@ -329,7 +355,8 @@ class PredictionQueryServer:
             name, max_latency_ms=max_latency_ms, max_pending=max_pending,
             max_coalesce=max_coalesce,
         )
-        self.stats.queries_registered += 1
+        with self._lock:
+            self.stats.queries_registered += 1
         return reg
 
     def rebind(self, name: str, params: dict[str, Any]) -> RegisteredQuery:
@@ -468,6 +495,18 @@ class PredictionQueryServer:
         done: Future = Future()
         try:
             reg = self._registered(name)
+            if asserts_enabled():
+                runtime_assert(len(group) > 0, "dispatched an empty group")
+                runtime_assert(
+                    all(r.query == name for r in group),
+                    f"group for '{name}' contains misrouted request(s) "
+                    f"{[r.rid for r in group if r.query != name]}",
+                )
+                runtime_assert(
+                    all(not r.done for r in group),
+                    f"group for '{name}' re-dispatches finished request(s) "
+                    f"{[r.rid for r in group if r.done]}",
+                )
             with self._lock:
                 self.stats.flushes += 1
                 self.stats.requests_served += len(group)
@@ -598,20 +637,20 @@ class PredictionQueryServer:
 
         db = dict(reg.database)
         db[reg.fact_table] = fact
-        return dict(
-            database=db,
-            row_valid=jnp.asarray(row_valid),
-            params=reg.params if reg.param_names else None,
-            segments=segments,
-            bucketer=(
+        return {
+            "database": db,
+            "row_valid": jnp.asarray(row_valid),
+            "params": reg.params if reg.param_names else None,
+            "segments": segments,
+            "bucketer": (
                 (lambda m: row_bucket(m, self.min_bucket))
                 if self.mid_bucketing else None
             ),
-            on_mid_bucket=track_mid,
+            "on_mid_bucket": track_mid,
             # the padded fact spine is freshly built per group: safe to
             # donate to XLA on backends that support aliasing
-            donate=frozenset((reg.fact_table,)),
-        )
+            "donate": frozenset((reg.fact_table,)),
+        }
 
     def _execute_padded(
         self,
@@ -637,6 +676,15 @@ class PredictionQueryServer:
         )
 
     def _finish(self, req: QueryRequest) -> None:
+        if asserts_enabled():
+            runtime_assert(
+                not req.done, f"request {req.rid} finished twice"
+            )
+            runtime_assert(
+                not any(k.startswith("__pv_") for k in (req.result or {})),
+                f"request {req.rid} result leaks reserved block column(s) "
+                f"{[k for k in (req.result or {}) if k.startswith('__pv_')]}",
+            )
         req.done = True
         req.t_done = time.perf_counter()
         req._event.set()

@@ -82,6 +82,7 @@ def connect(
     options: Optional[OptimizerOptions] = None,
     cache_dir: Optional[str] = None,
     cache_max_bytes: Optional[int] = None,
+    verify: Union[str, bool, None] = None,
 ) -> "Session":
     """Open a session over a database of named column-dict tables.
 
@@ -104,11 +105,21 @@ def connect(
     backs is process-wide too); the most recent ``connect`` wins.
     ``cache_max_bytes`` bounds the cache dir by total size (oldest entries
     evicted first) on top of the store's entry-count cap.
+
+    ``verify`` sets the session-wide plan-verification mode: ``"off"`` (the
+    default), ``"warn"`` (verifier violations surface as
+    :class:`~repro.analysis.rules.VerificationWarning`), or ``"strict"``
+    (:class:`~repro.errors.PlanVerificationError`). ``True`` means
+    ``"strict"``. Unset, the ``RAVEN_VERIFY`` environment variable applies.
+    The verifier runs differentially after each optimizer rewrite and again
+    over the lowered stage graph at prepare time; the mode never changes
+    which plan is produced, only whether it is checked, so it is excluded
+    from every plan fingerprint and cache key.
     """
     return Session(
         tables, stats, partition_cols=partition_cols,
         strategy=strategy, options=options, cache_dir=cache_dir,
-        cache_max_bytes=cache_max_bytes,
+        cache_max_bytes=cache_max_bytes, verify=verify,
     )
 
 
@@ -125,7 +136,15 @@ class Session:
         options: Optional[OptimizerOptions] = None,
         cache_dir: Optional[str] = None,
         cache_max_bytes: Optional[int] = None,
+        verify: Union[str, bool, None] = None,
     ):
+        if verify is not None:
+            from repro.analysis.verifier import resolve_verify_mode
+
+            options = dataclasses.replace(
+                options or OptimizerOptions(),
+                verify=resolve_verify_mode(verify),
+            )
         self.tables = {
             t: {c: np.asarray(v) for c, v in cols.items()}
             for t, cols in tables.items()
@@ -180,7 +199,7 @@ class Session:
     def sql(self, text: str) -> "Query":
         """Parse PREDICT-statement SQL into a session-bound :class:`Query`."""
         q = Query(self, parse_spec(text))
-        q.ir  # build eagerly: unknown models/tables/columns fail here
+        _ = q.ir  # build eagerly: unknown models/tables/columns fail here
         return q
 
     def table(self, name: str) -> "QueryBuilder":
@@ -296,6 +315,7 @@ class Query:
         transform: Optional[str] = None,
         params: Optional[dict[str, Any]] = None,
         options: Optional[OptimizerOptions] = None,
+        verify: Union[str, bool, None] = None,
     ) -> "PreparedQuery":
         """Run the optimizer once and compile; returns a reusable handle.
 
@@ -303,6 +323,12 @@ class Query:
         picks one from pipeline statistics; ``options`` overrides the full
         optimizer configuration. All ``:param`` placeholders must be bound
         via ``params`` (re-bindable later with :meth:`PreparedQuery.bind`).
+
+        ``verify`` overrides the session's plan-verification mode for this
+        prepare only — ``True`` (= ``"strict"``) raises
+        :class:`~repro.errors.PlanVerificationError` on any verifier
+        violation, ``"warn"`` warns, ``"off"`` disables. The mode does not
+        change the produced plan, its fingerprint, or any cache key.
 
         When the session has an artifact store (``connect(cache_dir=...)``),
         the optimizer's output is persisted per query fingerprint — a fresh
@@ -314,6 +340,10 @@ class Query:
         opts = options or self._session.options or OptimizerOptions()
         if transform is not None:
             opts = dataclasses.replace(opts, transform=transform)
+        if verify is not None:
+            from repro.analysis.verifier import resolve_verify_mode
+
+            opts = dataclasses.replace(opts, verify=resolve_verify_mode(verify))
         strat = strategy if strategy is not None else self._session.strategy
         declared = self.param_names()
         bound = dict(params or {})
@@ -331,9 +361,14 @@ class Query:
         if store is not None:
             # the optimizer is a pure function of (IR plan incl. model
             # weights, stats, options, strategy); a key hashing any component
-            # by identity is not valid in another process, so skip the store
+            # by identity is not valid in another process, so skip the store.
+            # the verify mode only decides whether the plan is *checked*,
+            # never what plan comes out, so it must not fork cache entries
             pins: list = []
-            key = fingerprint(self.ir.plan, self.ir.stats, opts, strat, pins=pins)
+            key = fingerprint(
+                self.ir.plan, self.ir.stats,
+                dataclasses.replace(opts, verify=None), strat, pins=pins,
+            )
             if pins:
                 store.stats.skipped += 1
                 key = None
@@ -424,10 +459,38 @@ class PreparedQuery:
         self.strategy = strategy
         self.params = dict(params)
         self.compiled = compile_plan(plan)
+        self._verify_compiled()
         self.param_names = query.param_names()
         self._serve_name: Optional[str] = None
         self._serve_token: Optional[str] = None
         self._server: Optional[PredictionQueryServer] = None
+
+    def _verify_compiled(self) -> None:
+        """Static verification of the lowered stage graph (mode permitting).
+
+        Runs at prepare time — after ``compile_plan`` — so it also covers
+        plans loaded from the artifact store, which skip the optimizer's
+        differential checks. Verified lines land in
+        ``report.verification`` (rendered by :meth:`explain`); strict mode
+        raises :class:`~repro.errors.PlanVerificationError`.
+        """
+        from repro.analysis.verifier import (
+            check_exec,
+            check_graph,
+            enforce,
+            resolve_verify_mode,
+        )
+
+        mode = resolve_verify_mode(getattr(self.options, "verify", None))
+        if mode == "off":
+            return
+        vs = check_graph(self.compiled.graph)
+        vs += check_exec(self.compiled.graph, self.query.session.tables)
+        lines = enforce(vs, mode, "prepare (stage graph)")
+        ver = getattr(self.report, "verification", None)
+        if ver is None:  # report unpickled from a pre-verifier artifact
+            ver = self.report.verification = []
+        ver += [ln for ln in lines if ln not in ver]
 
     @property
     def fingerprint(self) -> str:
@@ -613,6 +676,11 @@ class PreparedQuery:
             lines.append("-- optimizer notes " + "-" * 36)
             for n in self.report.notes:
                 lines.append(f"* {n}")
+        verification = getattr(self.report, "verification", [])
+        if verification:
+            lines.append("-- plan verification " + "-" * 34)
+            for v in verification:
+                lines.append(f"* {v}")
         graph = self.compiled.graph
         summary = "1 fused XLA program" if self.compiled.is_pure else (
             f"{self.compiled.n_stages} stages, "

@@ -188,7 +188,9 @@ def _value_expr(lit: str) -> Expr:
     try:
         return Const(float(lit))
     except ValueError:
-        raise SQLSyntaxError(f"expected a literal or :param, got {lit!r}")
+        raise SQLSyntaxError(
+            f"expected a literal or :param, got {lit!r}"
+        ) from None
 
 
 def parse_spec(sql: str) -> QuerySpec:

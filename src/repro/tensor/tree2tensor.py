@@ -78,7 +78,7 @@ def build_gemm_program(
         for n, l in leaf_ids.items():
             V[t, l] = np.float32(w * ens.leaf_value[n])
         # ancestor walk: root-to-leaf paths
-        def paths(node, acc):
+        def paths(node, acc, t=t):
             if ens.feature[node] == LEAF:
                 l = leaf_ids[int(node)]
                 Dc[t, l] = np.float32(sum(1 for _, d in acc if d == 1))

@@ -9,4 +9,8 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# Every plan the suite prepares passes strict static verification: a rewrite
+# or lowering that breaks a verifier invariant fails the gate with the
+# offending rule named, not just with whatever downstream symptom it causes.
+export RAVEN_VERIFY=strict
 exec python -m pytest -x -q -m "not slow" "$@"

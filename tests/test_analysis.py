@@ -1,0 +1,690 @@
+"""The static-analysis layer: plan verifier, concurrency lint, runtime asserts.
+
+Three families:
+
+  * positive — every lowering path the optimizer emits today verifies clean,
+    and a seeded sweep of random valid plans shows verified ⇒ executes;
+  * negative — single-field corruptions of valid graphs/sources are rejected
+    with the *right* rule id (each registered rule has at least one test
+    proving it actually fires);
+  * wiring — verify modes thread through connect/prepare/explain without
+    touching any fingerprint, and RAVEN_ANALYSIS_ASSERTS arms the serving
+    path's invariant checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.concurrency import lint_repo, lint_source
+from repro.analysis.rules import VerificationWarning, rule_catalog
+from repro.analysis.runtime import (
+    RuntimeInvariantError,
+    asserts_enabled,
+    runtime_assert,
+)
+from repro.analysis.verifier import (
+    _EXEC_MEMO,
+    check_exec,
+    check_graph,
+    check_logical,
+    enforce,
+    resolve_verify_mode,
+)
+from repro.analysis.__main__ import _scenarios, _toy_pipeline, main as analysis_main
+from repro.core.ir import LAggregate, LFilter, LPredict, LScan, PredictionQuery
+from repro.core.optimizer import OptimizerOptions, RavenOptimizer
+from repro.errors import PlanVerificationError
+from repro.exec.stages import build_stage_graph
+from repro.ml.pipeline import InputSpec, PipelineNode, TrainedPipeline
+from repro.relational.engine import MLUdf, compile_plan
+from repro.relational.expr import Bin, Col, Const
+
+
+def rule_ids(violations):
+    return {v.rule for v in violations}
+
+
+def toy_tables(n=32, seed=7):
+    rng = np.random.default_rng(seed)
+    return {
+        "t": {
+            "a": rng.normal(size=n),
+            "b": rng.normal(size=n),
+            "k": rng.integers(0, 8, size=n).astype(np.int32),
+        }
+    }
+
+
+def lower(transform, *, with_udf=False, filt=False, agg=False, tables=None):
+    """Optimize a toy query down to a StageGraph (verification off)."""
+    tables = tables if tables is not None else toy_tables()
+    plan = LPredict(
+        LScan("t", ["a", "b", "k"]), _toy_pipeline(with_udf), ["score", "label"]
+    )
+    if filt:
+        plan = LFilter(plan, Bin("gt", Col("score"), Const(0.5)))
+    if agg:
+        plan = LAggregate(
+            plan, [("n", "count", ""), ("avg_score", "mean", "score")]
+        )
+    opts = OptimizerOptions(transform=transform, verify="off")
+    physical, _ = RavenOptimizer(options=opts).optimize(PredictionQuery(plan))
+    return build_stage_graph(physical), tables
+
+
+@pytest.fixture(autouse=True)
+def _fresh_exec_memo():
+    # negative tests mutate graphs in ways the exec memo must not mask
+    _EXEC_MEMO.clear()
+    yield
+    _EXEC_MEMO.clear()
+
+
+# ---------------------------------------------------------------------------
+# Positive: every lowering path verifies clean; verified ⇒ executes
+# ---------------------------------------------------------------------------
+
+
+class TestVerifierClean:
+    def test_all_cli_scenarios_verify_clean(self):
+        for name, query, opts, tables in _scenarios():
+            assert check_logical(query) == [], name
+            plan, _ = RavenOptimizer(options=opts).optimize(query)
+            graph = build_stage_graph(plan)
+            assert check_graph(graph) == [], name
+            assert check_exec(graph, tables) == [], name
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_seeded_sweep_verified_implies_executes(self, seed):
+        rng = np.random.default_rng(seed)
+        transform = ["none", "sql", "dnn"][rng.integers(0, 3)]
+        with_udf = bool(rng.integers(0, 2)) and transform == "dnn"
+        filt = bool(rng.integers(0, 2))
+        agg = bool(rng.integers(0, 2))
+        n = int(rng.integers(9, 48))
+        tables = toy_tables(n=n, seed=seed)
+        graph, tables = lower(
+            transform, with_udf=with_udf, filt=filt, agg=agg, tables=tables
+        )
+        assert check_graph(graph) == []
+        assert check_exec(graph, tables) == []
+        # verified ⇒ executes: the real engine agrees with the abstraction
+        compiled = compile_plan(graph.plan)
+        jdb = {
+            t: {c: jnp.asarray(v) for c, v in cols.items()}
+            for t, cols in tables.items()
+        }
+        out = compiled(jdb).to_numpy(compact=True)
+        assert out, "execution produced no columns"
+        for c, v in out.items():
+            assert np.all(np.isfinite(np.asarray(v, dtype=np.float64))), c
+
+    def test_split_lowering_has_expected_shape(self):
+        graph, _ = lower("dnn", with_udf=True)
+        kinds = [s.kind for s in graph.stages]
+        assert kinds == ["pure", "host", "pure"]
+        assert graph.stages[1].udf.consumes  # block columns are accounted
+
+
+# ---------------------------------------------------------------------------
+# Negative: one corruption, one named rule
+# ---------------------------------------------------------------------------
+
+
+class TestGraphRules:
+    def test_graph_shape_rejects_noncontiguous_indices(self):
+        graph, _ = lower("dnn")
+        graph.stages[0].index = 5
+        assert "graph-shape" in rule_ids(check_graph(graph))
+
+    def test_graph_shape_rejects_unknown_kind(self):
+        graph, _ = lower("dnn")
+        graph.stages[0].kind = "quantum"
+        assert "graph-shape" in rule_ids(check_graph(graph))
+
+    def test_schema_chain_rejects_phantom_out_column(self):
+        graph, _ = lower("dnn")
+        graph.stages[-1].out_columns = graph.stages[-1].out_columns + ("phantom",)
+        assert "schema-chain" in rule_ids(check_graph(graph))
+
+    def test_consumes_balance_rejects_dropped_consume(self):
+        graph, _ = lower("dnn", with_udf=True)
+        host = graph.stages[1]
+        host.udf.consumes = ()  # the prefix's __pv_* is now never consumed
+        vs = check_graph(graph)
+        assert "consumes-balance" in rule_ids(vs)
+        msg = "\n".join(str(v) for v in vs)
+        assert "__pv_" in msg
+
+    def test_block_leak_rejects_pv_in_output_schema(self):
+        graph, _ = lower("dnn", with_udf=True)
+        last = graph.stages[-1]
+        last.out_columns = last.out_columns + ("__pv_features",)
+        assert "block-leak" in rule_ids(check_graph(graph))
+
+    def test_placement_rejects_host_op_in_pure_stage(self):
+        graph, _ = lower("dnn")
+        udf = MLUdf(None, _toy_pipeline(), ("score", "label"), 64, ())
+        graph.stages[0].ops.append(udf)
+        assert "placement-pure" in rule_ids(check_graph(graph))
+
+    def test_residual_minimal_rejects_oversized_residual(self):
+        graph, _ = lower("dnn", with_udf=True)
+        # a residual that is fully tensor-supported should never have been
+        # left on the host side of the split
+        graph.stages[1].udf.pipeline = _toy_pipeline(with_udf=False)
+        assert "residual-minimal" in rule_ids(check_graph(graph))
+
+    def test_fingerprint_stable_rejects_corrupted_chain(self):
+        graph, _ = lower("dnn")
+        graph.stages[-1].fingerprint = "deadbeef" * 8
+        assert "fingerprint-stable" in rule_ids(check_graph(graph))
+
+    def test_fingerprint_stable_rejects_address_bearing_token(self):
+        graph, _ = lower("dnn")
+        op = graph.stages[0].ops[-1]
+        op.fn.__fingerprint_token__ = f"closure at 0x{id(op):x}"
+        vs = check_graph(graph)
+        assert "fingerprint-stable" in rule_ids(vs)
+        assert any("address" in v.message or "0x" in v.message for v in vs)
+
+    def test_fingerprint_deterministic_rejects_unstable_token(self):
+        class FlakyFn:
+            calls = 0
+
+            @property
+            def __fingerprint_token__(self):
+                FlakyFn.calls += 1
+                return f"tok-{FlakyFn.calls}"
+
+            def __call__(self, cols):
+                return cols
+
+        graph, _ = lower("dnn")
+        graph.stages[0].ops[-1].fn = FlakyFn()
+        assert "fingerprint-deterministic" in rule_ids(check_graph(graph))
+
+
+class TestExecRules:
+    def test_schema_exec_rejects_unknown_column(self):
+        graph, tables = lower("dnn")
+        del tables["t"]["b"]
+        assert "schema-exec" in rule_ids(check_exec(graph, tables))
+
+    def test_schema_exec_rejects_unknown_table(self):
+        graph, _ = lower("dnn")
+        assert "schema-exec" in rule_ids(check_exec(graph, {}))
+
+    def test_schema_dtype_rejects_bucket_dependent_dtype(self):
+        graph, tables = lower("dnn")
+        st = graph.stages[0]
+
+        def drifting(env, _orig=st.fn):
+            cols, valid, seg = _orig(env)
+            if valid.shape[0] == 16:  # static under eval_shape
+                cols = {
+                    k: (v.astype(jnp.float16) if k == "score" else v)
+                    for k, v in cols.items()
+                }
+            return cols, valid, seg
+
+        st.fn = drifting
+        st.fingerprint += ":drifting-dtype"
+        assert "schema-dtype" in rule_ids(check_exec(graph, tables))
+
+    def test_bucket_safety_rejects_non_polymorphic_rows(self):
+        graph, tables = lower("dnn")
+        st = graph.stages[0]
+
+        def padded(env, _orig=st.fn):
+            cols, valid, seg = _orig(env)
+            cols = dict(cols)
+            cols["score"] = jnp.concatenate(
+                [cols["score"], jnp.zeros((1,), cols["score"].dtype)]
+            )
+            return cols, valid, seg
+
+        st.fn = padded
+        st.fingerprint += ":padded-rows"
+        assert "bucket-safety" in rule_ids(check_exec(graph, tables))
+
+    def test_segment_threading_rejects_dropped_seg(self):
+        graph, tables = lower("dnn", agg=True)
+        assert graph.needs_segments
+        st = graph.stages[-1]
+
+        def dropping(env, _orig=st.fn):
+            cols, valid, _seg = _orig(env)
+            return cols, valid, None
+
+        st.fn = dropping
+        st.fingerprint += ":dropped-seg"
+        assert "segment-threading" in rule_ids(check_exec(graph, tables))
+
+
+class TestLogicalRules:
+    def test_pipeline_graph_rejects_duplicate_producer(self):
+        pipe = TrainedPipeline(
+            inputs=[InputSpec("a", "numeric")],
+            outputs=["x"],
+            nodes=[
+                PipelineNode("concat", ["a"], ["x"], {}),
+                PipelineNode("concat", ["a"], ["x"], {}),
+            ],
+        )
+        q = PredictionQuery(LPredict(LScan("t", ["a"]), pipe, ["x"]))
+        assert "pipeline-graph" in rule_ids(check_logical(q))
+
+    def test_pipeline_graph_rejects_unproduced_output(self):
+        pipe = TrainedPipeline(
+            inputs=[InputSpec("a", "numeric")],
+            outputs=["ghost"],
+            nodes=[PipelineNode("concat", ["a"], ["x"], {})],
+        )
+        q = PredictionQuery(LPredict(LScan("t", ["a"]), pipe, ["ghost"]))
+        assert "pipeline-graph" in rule_ids(check_logical(q))
+
+    def test_logical_schema_rejects_unknown_filter_column(self):
+        q = PredictionQuery(
+            LFilter(LScan("t", ["a"]), Bin("gt", Col("nope"), Const(0.0)))
+        )
+        vs = check_logical(q)
+        assert "logical-schema" in rule_ids(vs)
+        assert any("nope" in v.message for v in vs)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: a corrupted partial-DNN lowering is rejected, rule-named
+# ---------------------------------------------------------------------------
+
+
+class TestCorruptedPartialLowering:
+    def test_leaked_block_column_is_rejected_with_rule_id(self):
+        graph, _ = lower("dnn", with_udf=True)
+        # simulate a buggy split: the suffix forgets to strip its block input
+        last = graph.stages[-1]
+        last.out_columns = last.out_columns + ("__pv_tweaked",)
+        vs = check_graph(graph)
+        assert "block-leak" in rule_ids(vs)
+        # the diagnostic names the rule — a bare assert would not
+        assert any(str(v).startswith("[block-leak]") for v in vs)
+
+    def test_double_consume_is_rejected(self):
+        graph, _ = lower("dnn", with_udf=True)
+        host = graph.stages[1]
+        host.udf.consumes = tuple(host.udf.consumes) * 2
+        assert "consumes-balance" in rule_ids(check_graph(graph))
+
+
+# ---------------------------------------------------------------------------
+# Lint rules (synthetic sources) + the repo itself stays clean
+# ---------------------------------------------------------------------------
+
+
+def locked_class(methods: str) -> str:
+    """A synthetic threaded class with ``methods`` appended to its body."""
+    head = textwrap.dedent(
+        """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cv = threading.Condition()
+                self.x = 0
+        """
+    )
+    return head + textwrap.indent(textwrap.dedent(methods), "    ")
+
+
+class TestLintRules:
+    def test_lock_reentry_fires(self):
+        src = locked_class(
+            """
+            def f(self):
+                with self._lock:
+                    with self._lock:
+                        pass
+            """
+        )
+        assert "lock-reentry" in rule_ids(lint_source(src, "exec/fake.py"))
+
+    def test_condition_is_reentrant_safe(self):
+        src = locked_class(
+            """
+            def f(self):
+                with self._cv:
+                    with self._cv:
+                        pass
+            """
+        )
+        assert "lock-reentry" not in rule_ids(lint_source(src, "exec/fake.py"))
+
+    def test_lock_order_inversion_fires(self):
+        src = locked_class(
+            """
+            def f(self):
+                with self._lock:
+                    with self._cv:
+                        pass
+
+            def g(self):
+                with self._cv:
+                    with self._lock:
+                        pass
+            """
+        )
+        assert "lock-order" in rule_ids(lint_source(src, "exec/fake.py"))
+
+    def test_unlocked_mutation_fires(self):
+        src = locked_class(
+            """
+            def f(self):
+                with self._lock:
+                    self.x = 1
+
+            def g(self):
+                self.x = 2
+            """
+        )
+        vs = lint_source(src, "exec/fake.py")
+        assert "unlocked-mutation" in rule_ids(vs)
+        assert any("self.x" in v.message or "x" in v.message for v in vs)
+
+    def test_init_is_exempt_and_helpers_inherit_callers_lock(self):
+        src = locked_class(
+            """
+            def f(self):
+                with self._lock:
+                    self.x = 1
+                    self._accrue()
+
+            def _accrue(self):
+                self.x += 1
+            """
+        )
+        assert lint_source(src, "exec/fake.py") == []
+
+    def test_pragma_suppresses_one_line(self):
+        src = locked_class(
+            """
+            def f(self):
+                with self._lock:
+                    with self._lock:  # analysis: allow[lock-reentry]
+                        pass
+            """
+        )
+        assert "lock-reentry" not in rule_ids(lint_source(src, "exec/fake.py"))
+
+    def test_fingerprint_hygiene_rejects_id_and_fstrings(self):
+        src = textwrap.dedent(
+            """
+            def make(fn, name):
+                fn.__fingerprint_token__ = hex(id(fn))
+                fn.__fingerprint_token__ = f"tok-{name}"
+                return fn
+            """
+        )
+        vs = lint_source(src, "tensor/fake.py")
+        assert "fingerprint-hygiene-src" in rule_ids(vs)
+        # both offending assignment lines are flagged (3: hex/id, 4: f-string)
+        flagged = {v.where for v in vs if v.rule == "fingerprint-hygiene-src"}
+        assert flagged == {"tensor/fake.py:3", "tensor/fake.py:4"}
+
+    def test_fingerprint_hygiene_allows_literal_tokens(self):
+        src = 'def make(fn):\n    fn.__fingerprint_token__ = "v1:linear"\n'
+        assert lint_source(src, "tensor/fake.py") == []
+
+    def test_host_in_jit_fires(self):
+        src = textwrap.dedent(
+            """
+            import jax
+            import numpy as np
+
+            def fn(x):
+                return np.sin(x)
+
+            g = jax.jit(fn)
+            """
+        )
+        assert "host-in-jit" in rule_ids(lint_source(src, "exec/fake.py"))
+
+    def test_wallclock_timing_fires_in_runtime_dirs_only(self):
+        src = "import time\n\ndef f():\n    return time.time()\n"
+        assert "wallclock-timing" in rule_ids(lint_source(src, "exec/fake.py"))
+        assert "wallclock-timing" not in rule_ids(
+            lint_source(src, "benchmarks/fake.py")
+        )
+
+    def test_repo_is_lint_clean(self):
+        result = lint_repo()
+        assert result.ok, result.describe()
+
+    def test_every_rule_is_registered_once(self):
+        ids = [r.id for r in rule_catalog()]
+        assert len(ids) == len(set(ids))
+        assert len(ids) >= 18
+
+
+# ---------------------------------------------------------------------------
+# Modes: off / warn / strict, env default, session + prepare wiring
+# ---------------------------------------------------------------------------
+
+
+class TestVerifyModes:
+    def test_resolve_modes(self, monkeypatch):
+        monkeypatch.delenv("RAVEN_VERIFY", raising=False)
+        assert resolve_verify_mode(None) == "off"
+        assert resolve_verify_mode(True) == "strict"
+        assert resolve_verify_mode(False) == "off"
+        assert resolve_verify_mode("warn") == "warn"
+        monkeypatch.setenv("RAVEN_VERIFY", "strict")
+        assert resolve_verify_mode(None) == "strict"
+        with pytest.raises(ValueError):
+            resolve_verify_mode("loud")
+
+    def test_enforce_strict_raises_with_violations(self):
+        graph, _ = lower("dnn", with_udf=True)
+        graph.stages[1].udf.consumes = ()
+        vs = check_graph(graph)
+        with pytest.raises(PlanVerificationError) as ei:
+            enforce(vs, "strict", "test")
+        assert ei.value.violations == vs
+        assert "consumes-balance" in str(ei.value)
+
+    def test_enforce_warn_warns(self):
+        graph, _ = lower("dnn", with_udf=True)
+        graph.stages[1].udf.consumes = ()
+        vs = check_graph(graph)
+        with pytest.warns(VerificationWarning):
+            lines = enforce(vs, "warn", "test")
+        assert lines and any("consumes-balance" in ln for ln in lines)
+
+    def test_enforce_off_and_clean(self):
+        assert enforce([], "off", "x") == []
+        assert enforce([], "strict", "x") == ["x: ok"]
+
+    def test_strict_session_prepares_and_explains(self):
+        import repro as raven
+
+        db = raven.connect(toy_tables(), verify="strict")
+        db.register_model("m", _toy_pipeline())
+        prep = db.table("t").predict("m").prepare(transform="dnn")
+        ex = prep.explain()
+        assert "plan verification" in ex
+        assert "prepare (stage graph): ok" in ex
+        assert "after lowering: ok" in ex
+        db.close()
+
+    def test_verify_mode_never_changes_fingerprints(self):
+        import repro as raven
+
+        db = raven.connect(toy_tables())
+        db.register_model("m", _toy_pipeline())
+        fps = {
+            db.table("t").predict("m").prepare(transform="sql", verify=v).fingerprint
+            for v in (None, True, "warn", "off")
+        }
+        assert len(fps) == 1
+        db.close()
+
+    def test_env_default_applies(self, monkeypatch):
+        import repro as raven
+
+        monkeypatch.setenv("RAVEN_VERIFY", "strict")
+        db = raven.connect(toy_tables())
+        db.register_model("m", _toy_pipeline())
+        prep = db.table("t").predict("m").prepare(transform="dnn")
+        assert "plan verification" in prep.explain()
+        db.close()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: fingerprints are content-addressed across processes
+# ---------------------------------------------------------------------------
+
+
+_FP_SCRIPT = textwrap.dedent(
+    """
+    import numpy as np
+    from repro.analysis.__main__ import _toy_pipeline
+    from repro.core.fingerprint import fingerprint
+    from repro.core.ir import LPredict, LScan, PredictionQuery
+    from repro.core.optimizer import OptimizerOptions, RavenOptimizer
+    from repro.exec.stages import build_stage_graph
+    from repro.relational.engine import plan_fingerprint
+
+    q = PredictionQuery(
+        LPredict(LScan("t", ["a", "b"]), _toy_pipeline(True), ["score", "label"])
+    )
+    plan, _ = RavenOptimizer(
+        options=OptimizerOptions(transform="dnn", verify="off")
+    ).optimize(q)
+    print(plan_fingerprint(plan))
+    for s in build_stage_graph(plan).stages:
+        print(s.fingerprint, s.content_stable)
+    # dict ordering: rich (dataclass) keys must sort content-stably too
+    from repro.analysis.rules import Rule
+    d1 = {Rule("b", "s", "x"): 2, Rule("a", "s", "x"): 1, "z": 0, None: 3}
+    d2 = {None: 3, "z": 0, Rule("a", "s", "x"): 1, Rule("b", "s", "x"): 2}
+    print(fingerprint(d1), fingerprint(d1) == fingerprint(d2))
+    """
+)
+
+
+class TestFingerprintStability:
+    def test_cross_process_fingerprints_match(self):
+        def run(hashseed):
+            env = dict(os.environ)
+            env["PYTHONHASHSEED"] = hashseed
+            env["PYTHONPATH"] = os.pathsep.join(
+                p for p in (
+                    os.path.join(os.path.dirname(__file__), "..", "src"),
+                    env.get("PYTHONPATH"),
+                ) if p
+            )
+            out = subprocess.run(
+                [sys.executable, "-c", _FP_SCRIPT], env=env,
+                capture_output=True, text=True, timeout=300,
+            )
+            assert out.returncode == 0, out.stderr
+            return out.stdout
+
+
+        a, b = run("0"), run("4242")
+        assert a == b
+        assert a.strip().endswith("True")  # rich-key dict order is canonical
+
+    def test_dict_key_order_is_canonical_in_process(self):
+        from repro.analysis.rules import Rule
+        from repro.core.fingerprint import fingerprint
+
+        k1, k2 = Rule("a", "s", "d"), Rule("b", "s", "d")
+        assert fingerprint({k1: 1, k2: 2}) == fingerprint({k2: 2, k1: 1})
+        # primitive keys keep their historical repr ordering
+        assert fingerprint({1: "a", "1": "b"}) == fingerprint({"1": "b", 1: "a"})
+
+
+# ---------------------------------------------------------------------------
+# Satellite: runtime asserts + threaded serving stress under them
+# ---------------------------------------------------------------------------
+
+
+class TestRuntimeAsserts:
+    def test_disarmed_by_default(self, monkeypatch):
+        monkeypatch.delenv("RAVEN_ANALYSIS_ASSERTS", raising=False)
+        assert not asserts_enabled()
+        runtime_assert(False, "never raises while disarmed")
+
+    def test_armed_raises(self, monkeypatch):
+        monkeypatch.setenv("RAVEN_ANALYSIS_ASSERTS", "1")
+        assert asserts_enabled()
+        runtime_assert(True, "fine")
+        with pytest.raises(RuntimeInvariantError, match="boom"):
+            runtime_assert(False, "boom")
+        assert issubclass(RuntimeInvariantError, AssertionError)
+
+    def test_threaded_submit_drain_stress(self, monkeypatch):
+        import repro as raven
+
+        monkeypatch.setenv("RAVEN_ANALYSIS_ASSERTS", "1")
+        db = raven.connect(toy_tables(), verify="strict")
+        db.register_model("m", _toy_pipeline())
+        prep = db.table("t").predict("m").prepare(transform="dnn")
+        prep.serve("stress", max_latency_ms=2.0)
+
+        n_threads, n_submits, rows = 4, 8, 5
+        errors: list[BaseException] = []
+
+        def worker(tid):
+            rng = np.random.default_rng(tid)
+            try:
+                for _ in range(n_submits):
+                    batch = {
+                        "a": rng.normal(size=rows),
+                        "b": rng.normal(size=rows),
+                        "k": np.zeros(rows, np.int32),
+                    }
+                    req = prep.submit(batch)
+                    out = req.wait(timeout=30.0)
+                    assert len(out["score"]) == rows
+                    assert np.all(np.isfinite(out["score"]))
+            except BaseException as e:  # surfaced to the main thread
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=worker, args=(i,)) for i in range(n_threads)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        db.close()
+        assert not errors, errors
+
+
+# ---------------------------------------------------------------------------
+# The CLI gate itself
+# ---------------------------------------------------------------------------
+
+
+class TestCli:
+    def test_rules_listing(self, capsys):
+        assert analysis_main(["--rules"]) == 0
+        out = capsys.readouterr().out
+        assert "consumes-balance" in out and "lock-order" in out
+
+    def test_full_gate_passes(self, capsys):
+        assert analysis_main([]) == 0
+        out = capsys.readouterr().out
+        assert "lint over" in out
+        assert "mltodnn-split" in out

@@ -27,7 +27,7 @@ def _run_steps(job: dict) -> list[str]:
 
 
 def test_workflow_parses_with_expected_jobs(workflow):
-    assert {"tier1", "lint", "nightly"} <= set(workflow["jobs"])
+    assert {"tier1", "lint", "analysis", "nightly"} <= set(workflow["jobs"])
     # "on" parses as boolean True in YAML 1.1
     triggers = workflow.get("on", workflow.get(True))
     assert "pull_request" in triggers and "push" in triggers
@@ -60,6 +60,19 @@ def test_concurrency_cancels_superseded_runs(workflow):
 def test_lint_job_runs_ruff(workflow):
     steps = _run_steps(workflow["jobs"]["lint"])
     assert any(s.startswith("ruff check") for s in steps)
+
+
+def test_analysis_job_is_the_blocking_static_gate(workflow):
+    job = workflow["jobs"]["analysis"]
+    # blocking on PRs/pushes (no continue-on-error), skipped only on the
+    # nightly schedule like the other PR-gate jobs
+    assert job["if"] == "github.event_name != 'schedule'"
+    step = next(
+        s for s in job["steps"]
+        if "python -m repro.analysis" in s.get("run", "")
+    )
+    assert not step.get("continue-on-error", False)
+    assert step["env"]["PYTHONPATH"] == "src"
 
 
 def test_nightly_runs_full_suite_and_benchmark_smoke(workflow):

@@ -80,7 +80,7 @@ def test_expr_eval_matches_numpy():
 def test_expr_eval_deep_no_recursion_limit():
     # MLtoSQL emits 10k+-node expressions; evaluation must be stack-safe
     e = Col("x")
-    for i in range(30_000):
+    for _ in range(30_000):
         e = Bin("add", e, Const(1.0))
     out = eval_expr(e, {"x": np.zeros(4, np.float32)})
     np.testing.assert_allclose(np.asarray(out), 30_000.0)
