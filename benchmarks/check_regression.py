@@ -1,0 +1,93 @@
+"""Bench-regression guard: compare a fresh serving-benchmark run against the
+committed baseline.
+
+    python benchmarks/check_regression.py CURRENT.json [BASELINE.json]
+                                          [--threshold 0.30]
+
+Every throughput key (``*_rows_s``) present in BOTH files is compared; the
+guard fails (exit 1) if any current value falls more than ``--threshold``
+(default 30%) below the baseline. Keys present in only one file are reported
+but never fail the guard — benchmarks come and go across PRs, and a renamed
+key should not masquerade as a regression. Improvements are printed so the
+nightly log doubles as a coarse perf history.
+
+CI wiring (nightly job): the smoke run writes its numbers to a scratch path,
+then this guard compares them against the checked-in ``BENCH_serving.json``.
+The baseline is refreshed deliberately — by committing a new
+``BENCH_serving.json`` — never silently by CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(current: dict, baseline: dict, threshold: float) -> list[str]:
+    """Return a list of human-readable failures (empty == guard passes)."""
+    failures: list[str] = []
+    keys = sorted(k for k in baseline if k.endswith("_rows_s"))
+    for k in keys:
+        base = baseline[k]
+        if k not in current:
+            print(f"  skip  {k}: present only in baseline")
+            continue
+        cur = current[k]
+        if not (
+            isinstance(base, (int, float)) and isinstance(cur, (int, float))
+        ) or base <= 0:
+            print(f"  skip  {k}: non-numeric or non-positive baseline")
+            continue
+        ratio = cur / base
+        tag = "ok   "
+        if ratio < 1.0 - threshold:
+            tag = "FAIL "
+            failures.append(
+                f"{k}: {cur:,.0f} rows/s is {1 - ratio:.0%} below the "
+                f"baseline {base:,.0f} rows/s (threshold {threshold:.0%})"
+            )
+        elif ratio > 1.0 + threshold:
+            tag = "up   "
+        print(f"  {tag} {k}: {cur:,.0f} vs baseline {base:,.0f} "
+              f"({ratio:.2f}x)")
+    for k in sorted(current):
+        if k.endswith("_rows_s") and k not in baseline:
+            print(f"  new   {k}: {current[k]:,.0f} rows/s (no baseline yet)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail if any *_rows_s key regresses vs the baseline"
+    )
+    ap.add_argument("current", help="JSON written by the fresh benchmark run")
+    ap.add_argument(
+        "baseline", nargs="?", default="BENCH_serving.json",
+        help="committed baseline JSON (default: BENCH_serving.json)",
+    )
+    ap.add_argument(
+        "--threshold", type=float, default=0.30,
+        help="allowed fractional drop before failing (default 0.30)",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    print(f"bench regression guard: {args.current} vs {args.baseline} "
+          f"(threshold {args.threshold:.0%})")
+    failures = compare(current, baseline, args.threshold)
+    if failures:
+        print(f"\nREGRESSION: {len(failures)} throughput key(s) regressed "
+              f"more than {args.threshold:.0%}:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("guard passed: no throughput key regressed beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -54,11 +54,23 @@ Part 5 — wide-row fused featurization, the partial-MLtoDNN payoff:
   the tree into the GEMM program, all inside one pure TensorOp stage — the
   former host boundary *vanishes* (``n_host_boundaries`` 1 -> 0).
 
+Part 6 — relational kernels, the filter→join→group-by payoff:
+
+  a star-schema fact scan filtered, gather-joined against a unique-key dim
+  table, and segment-aggregated (count/sum/mean/min/max). ``host`` is a
+  careful-f32 numpy oracle (the bitwise ground truth); ``jnp`` runs the
+  legacy inline stage composition (``RAVEN_KERNELS=off``); ``kernel`` runs
+  the relational kernel ops (``RAVEN_KERNELS=on`` — Pallas on TPU, fused
+  jnp oracles on CPU). All three legs must agree bit-for-bit (dyadic-
+  rational data keeps f32 sums exact), the kernel leg must not trail the
+  jnp leg, and the warm loop must not re-trace.
+
 Reports throughput (rows/s), XLA recompile counts, per-stage timings, and
 request-latency percentiles. Headlines: served/percall >= 5x on the pure
 plan, staged/postudf >= 2x on the multi-stage plan, warm cold-start traces
 == 0, pipelined/serial >= 1.5x on the mixed workload, host boundary count
-1 -> 0 on the wide-row featurize workload.
+1 -> 0 on the wide-row featurize workload, kernel >= jnp rows/s with
+bitwise-equal results on the relational workload.
 
     PYTHONPATH=src:. python benchmarks/serve_query.py \
         [--quick | --smoke] [--json [PATH]]
@@ -574,6 +586,165 @@ def run_featurize(quick: bool = False) -> dict:
     }
 
 
+def _relational_workload(n_rows: int, m_dim: int, seed: int):
+    """Star schema with dyadic-rational values (small ints × 0.25): f32
+    sums are exact and order-free, so every leg must agree bit-for-bit."""
+    rng = np.random.default_rng(seed)
+
+    def dy(shape):
+        return (rng.integers(-40, 40, size=shape) * 0.25).astype(np.float32)
+
+    dim = {"k": np.arange(m_dim, dtype=np.int64)}
+    for j in range(2):
+        dim[f"v{j}"] = dy(m_dim)
+    fact = {
+        # some keys miss the dim table, so the join actually filters
+        "fk": rng.integers(0, m_dim + m_dim // 4, size=n_rows).astype(np.int64),
+        "x": dy(n_rows),
+    }
+    return fact, dim
+
+
+def _relational_plan():
+    from repro.relational.engine import Aggregate, Filter, Join, Scan
+    from repro.relational.expr import Bin, Col, Const
+
+    # the dashboard shape: full stats (sum/avg/min/max) over each measure.
+    # The legacy composition recomputes a segmented reduction PER AGGREGATE;
+    # the kernel computes each statistic once per column and the aggregates
+    # just index into them
+    measures = ["x", "v0", "v1"]
+    aggs = [("n", "count", "x")]
+    for c in measures:
+        aggs += [
+            (f"sum_{c}", "sum", c), (f"avg_{c}", "mean", c),
+            (f"min_{c}", "min", c), (f"max_{c}", "max", c),
+        ]
+    return Aggregate(
+        Filter(
+            Join(Scan("f", ["fk", "x"]), "d", "fk", "k", ["v0", "v1"]),
+            Bin("gt", Col("x"), Const(0.0)),
+        ),
+        aggs,
+    )
+
+
+def _relational_host(fact, dim):
+    """The numpy oracle: filter→join→aggregate with f32-exact arithmetic."""
+    pos = np.searchsorted(dim["k"], np.clip(fact["fk"], 0, dim["k"][-1]))
+    pos = np.clip(pos, 0, len(dim["k"]) - 1)
+    mask = (dim["k"][pos] == fact["fk"]) & (fact["x"] > 0)
+    p = pos[mask]
+    n = np.float32(mask.sum())
+    one = np.float32(1)
+
+    def s(v):  # dyadic data: the f64 sum is exactly representable in f32
+        return np.float32(v.astype(np.float64).sum())
+
+    out = {"n": n}
+    for c in ("x", "v0", "v1"):
+        v = fact["x"][mask] if c == "x" else dim[c][p]
+        out[f"sum_{c}"] = s(v)
+        out[f"avg_{c}"] = s(v) / max(n, one)
+        out[f"min_{c}"] = v.min() if len(v) else np.float32(0)
+        out[f"max_{c}"] = v.max() if len(v) else np.float32(0)
+    return out
+
+
+def run_relational(quick: bool = False) -> dict:
+    """Part 6: filter→join→group-by A/B — numpy host oracle vs the legacy
+    jnp stage composition (RAVEN_KERNELS=off) vs the relational kernel ops
+    (RAVEN_KERNELS=on)."""
+    from repro.relational.engine import PLAN_CACHE_STATS as _stats
+
+    sizes = [2048, 4096] if quick else [4096, 8192, 16384]
+    reps = 3 if quick else 5
+    m_dim = 1024
+    batches = [_relational_workload(n, m_dim, seed=60 + i)
+               for i, n in enumerate(sizes)]
+    total_rows = sum(sizes) * reps
+    agg_names = [a[0] for a in _relational_plan().aggs]
+
+    def jax_leg(mode: str):
+        """Best-of-3 timed passes over all batches in one RAVEN_KERNELS
+        mode; returns (seconds, results, post-warm retraces)."""
+        prev = os.environ.get("RAVEN_KERNELS")
+        os.environ["RAVEN_KERNELS"] = mode
+        try:
+            clear_plan_cache()
+            cp = compile_plan(_relational_plan(), cache=False)
+            dbs = [{"f": {k: jax.numpy.asarray(v) for k, v in fact.items()},
+                    "d": {k: jax.numpy.asarray(v) for k, v in dim.items()}}
+                   for fact, dim in batches]
+            outs = []
+            for env in dbs:  # warm every shape
+                res = cp.run(env).table.to_numpy(compact=True)
+                outs.append({k: np.asarray(res[k], np.float32).reshape(-1)[0]
+                             for k in agg_names})
+            warm = _stats.traces
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    last = [cp.run(env).table.columns for env in dbs]
+                for cols in last:
+                    jax.block_until_ready(cols)
+                best = min(best, time.perf_counter() - t0)
+            return best, outs, _stats.traces - warm
+        finally:
+            if prev is None:
+                os.environ.pop("RAVEN_KERNELS", None)
+            else:
+                os.environ["RAVEN_KERNELS"] = prev
+            clear_plan_cache()
+
+    # host oracle leg (numpy, best-of-3)
+    t_host = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            host_outs = [_relational_host(fact, dim) for fact, dim in batches]
+        t_host = min(t_host, time.perf_counter() - t0)
+
+    t_jnp, jnp_outs, jnp_retraces = jax_leg("off")
+    t_kern, kern_outs, kern_retraces = jax_leg("on")
+
+    bitwise = True
+    for h, j, k in zip(host_outs, jnp_outs, kern_outs):
+        for name in agg_names:
+            vals = [np.float32(h[name]), np.float32(j[name]),
+                    np.float32(k[name])]
+            bits = {v.view(np.uint32).item() for v in vals}
+            if len(bits) != 1:
+                bitwise = False
+                print(f"serve_query_relational,MISMATCH,{name},"
+                      f"host={vals[0]!r},jnp={vals[1]!r},kernel={vals[2]!r}")
+
+    print("serve_query_relational,variant,seconds,rows_per_s,"
+          "post_warm_retraces")
+    print(f"serve_query_relational,host,{t_host:.3f},"
+          f"{total_rows / t_host:.0f},-")
+    print(f"serve_query_relational,jnp,{t_jnp:.3f},"
+          f"{total_rows / t_jnp:.0f},{jnp_retraces}")
+    print(f"serve_query_relational,kernel,{t_kern:.3f},"
+          f"{total_rows / t_kern:.0f},{kern_retraces}")
+    print(f"serve_query_relational,speedup,kernel vs jnp = "
+          f"{t_jnp / t_kern:.2f}x, kernel vs host = "
+          f"{t_host / t_kern:.2f}x (bitwise_equal={bitwise})")
+    return {
+        "relational_rows": total_rows,
+        "relational_host_s": t_host,
+        "relational_jnp_s": t_jnp,
+        "relational_kernel_s": t_kern,
+        "relational_host_rows_s": total_rows / t_host,
+        "relational_jnp_rows_s": total_rows / t_jnp,
+        "relational_kernel_rows_s": total_rows / t_kern,
+        "relational_kernel_vs_jnp": t_jnp / t_kern,
+        "relational_bitwise_equal": bitwise,
+        "relational_warm_retraces": jnp_retraces + kern_retraces,
+    }
+
+
 def run(quick: bool = False):
     n_requests = 8 if quick else 24
     sizes = _request_sizes(n_requests)
@@ -609,6 +780,9 @@ def run(quick: bool = False):
 
     # part 5: wide-row fused featurization (the vanished host boundary)
     rows.update(run_featurize(quick=quick))
+
+    # part 6: relational kernels (filter→join→group-by A/B)
+    rows.update(run_relational(quick=quick))
     return rows
 
 
@@ -646,13 +820,22 @@ def smoke() -> dict:
     assert rows["featurize_host_boundaries_none"] >= 1
     assert rows["featurize_host_boundaries_fused"] == 0, rows
     assert rows["featurize_fused_kernel"], rows
+    # the relational-kernel headline: bitwise-equal results, zero warm
+    # retraces, and the kernel leg at least matching the jnp stage baseline
+    assert rows["relational_bitwise_equal"], rows
+    assert rows["relational_warm_retraces"] == 0, rows
+    assert (
+        rows["relational_kernel_rows_s"] >= rows["relational_jnp_rows_s"]
+    ), rows
     print(f"smoke ok: served {rows['speedup_served']:.1f}x, "
           f"staged {rows['speedup_staged']:.1f}x, "
           f"warm cold-start {rows['cold_speedup_warm']:.1f}x, "
           f"pipelined mixed {rows['mixed_speedup_pipelined']:.1f}x, "
           f"fused featurize {rows['featurize_fused_speedup']:.1f}x "
           f"(host boundaries {rows['featurize_host_boundaries_none']} -> "
-          f"{rows['featurize_host_boundaries_fused']})")
+          f"{rows['featurize_host_boundaries_fused']}), "
+          f"relational kernel {rows['relational_kernel_vs_jnp']:.2f}x vs "
+          f"jnp (bitwise equal, 0 retraces)")
     return rows
 
 

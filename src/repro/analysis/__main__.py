@@ -5,8 +5,10 @@ and (2) the plan verifier, in strict coverage, over a deterministic scenario
 sweep that exercises every lowering path the optimizer can emit today:
 MLtoSQL projection plans, fully-fused MLtoDNN TensorOps, split
 ``TensorOp → MLUdf → TensorOp`` chains with ``__pv_*`` block columns,
-monolithic host MLUdfs, and segmented aggregates. Exits nonzero on any
-violation, printing each with its rule id.
+monolithic host MLUdfs (both fallback and cost-model-chosen), segmented
+aggregates, and relational-kernel chains (filter→join→group-by with
+min/max over a unique-key dim table). Exits nonzero on any violation,
+printing each with its rule id.
 """
 from __future__ import annotations
 
@@ -63,9 +65,11 @@ def _toy_pipeline(with_udf: bool = False):
 
 def _scenarios():
     """(name, PredictionQuery, OptimizerOptions, tables) per lowering path."""
+    from repro.core.cost import CostModel
     from repro.core.ir import (
         LAggregate,
         LFilter,
+        LJoin,
         LPredict,
         LScan,
         PredictionQuery,
@@ -79,7 +83,12 @@ def _scenarios():
             "a": rng.normal(size=32),
             "b": rng.normal(size=32),
             "k": rng.integers(0, 8, size=32).astype(np.int32),
-        }
+        },
+        # unique int keys + f32 payload: qualifies for the gather-join kernel
+        "d": {
+            "dk": np.arange(8, dtype=np.int32),
+            "v1": (np.arange(8) * 0.25).astype(np.float32),
+        },
     }
 
     def scan():
@@ -110,6 +119,44 @@ def _scenarios():
         opts("dnn"),
         tables,
     )
+    # filter→join→group-by over the relational kernels (gather_join +
+    # segment_agg): join brings an f32 payload off a unique-key dim table,
+    # the filter folds into the aggregate mask, min/max exercise the
+    # extremum lanes
+    yield (
+        "relational-kernels",
+        q(LAggregate(
+            LFilter(
+                LJoin(scan(), "d", "k", "dk", ["v1"]),
+                Bin("gt", Col("a"), Const(0.0)),
+            ),
+            [
+                ("n", "count", ""), ("sum_v1", "sum", "v1"),
+                ("min_v1", "min", "v1"), ("max_v1", "max", "v1"),
+                ("avg_a", "mean", "a"),
+            ],
+        )),
+        opts("none"),
+        tables,
+    )
+    # join feeding a predict split: the kernel join fuses into the pure
+    # prefix stage around the host residual
+    yield (
+        "join-predict-split",
+        q(predict(LJoin(scan(), "d", "k", "dk", ["v1"]), with_udf=True)),
+        opts("dnn"),
+        tables,
+    )
+    # the cost model prices the split's boundary crossings above the tensor
+    # speedup and collapses it to one monolithic host MLUdf
+    cost_opts = OptimizerOptions(
+        transform="dnn", verify="off",
+        cost_model=CostModel(
+            crossing_ns_per_row=1e7, segment_fixed_us=1e6
+        ),
+    )
+    yield ("cost-monolithic", q(predict(scan(), with_udf=True)),
+           cost_opts, tables)
 
 
 def _verify_scenarios() -> AnalysisResult:

@@ -518,7 +518,17 @@ _EXEC_MEMO: dict[tuple, list[Violation]] = {}
 
 
 def _table_schema_key(graph, tables) -> tuple:
+    from repro.relational.engine import Join, dimsort_entry, walk_plan
+
     parts = []
+    # dim-key uniqueness changes the traced Join program (kernel vs jnp
+    # gather), so it must fork the memo entry even at identical schemas
+    for p in walk_plan(graph.plan):
+        if isinstance(p, Join) and p.dim_table in tables:
+            tab = tables[p.dim_table]
+            if p.dim_key in tab:
+                uniq = "unique" in dimsort_entry(tab[p.dim_key])
+                parts.append(("__dimsort__", p.dim_table, uniq))
     for s in graph.stages:
         for t in sorted(s.reads):
             for c in s.reads[t]:
@@ -572,6 +582,7 @@ def _abstract_run(graph, tables, b: int, out: list[Violation]):
     import jax.numpy as jnp
 
     from repro.exec.stages import (
+        DIMSORT_KEY,
         MID_SEG,
         MID_TABLE,
         MID_VALID,
@@ -582,7 +593,7 @@ def _abstract_run(graph, tables, b: int, out: list[Violation]):
         SEG_SLOTS_KEY,
         run_udf,
     )
-    from repro.relational.engine import plan_params
+    from repro.relational.engine import Join, dimsort_entry, plan_params, walk_plan
 
     fact = graph.stages[0].ops[0].table
     env: dict[str, Any] = {}
@@ -605,6 +616,18 @@ def _abstract_run(graph, tables, b: int, out: list[Violation]):
         env[ROW_SEG_KEY] = jax.ShapeDtypeStruct((b,), jnp.int32)
         env[SEG_SLOTS_KEY] = jax.ShapeDtypeStruct((4,), jnp.int32)
         env[SEG_COUNT_KEY] = jax.ShapeDtypeStruct((), jnp.int32)
+    # mirror the engine's baked dim-sort injection (concrete arrays are fine
+    # under eval_shape) so abstract execution traces the same Join program —
+    # including the gather-join kernel path when the join qualifies — that
+    # serving will run, not just the argsort fallback
+    ds = {}
+    for p in walk_plan(graph.plan):
+        if isinstance(p, Join) and p.dim_table in tables:
+            tab = tables[p.dim_table]
+            if p.dim_key in tab:
+                ds[p.dim_table] = dimsort_entry(tab[p.dim_key])
+    if ds:
+        env[DIMSORT_KEY] = ds
 
     state = None
     for stage in graph.stages:

@@ -28,6 +28,7 @@ from repro.core.ir import (
     LogicalPlan,
     PredictionQuery,
 )
+from repro.core.cost import CostModel
 from repro.core.rules.data_induced import apply_data_induced
 from repro.core.rules.ml_to_dnn import (
     MLtoDNNUnsupported,
@@ -51,6 +52,7 @@ from repro.relational.engine import (
     Project,
     Scan,
     TensorOp,
+    walk_plan,
 )
 from repro.core.fingerprint import fingerprint
 from repro.relational.expr import (
@@ -75,6 +77,11 @@ class OptimizerOptions:
     tensor_strategy: str = "auto"  # 'auto' | 'gemm' | 'traversal'
     use_pallas: Optional[bool] = None
     udf_batch_size: int = 10_000
+    # cost model judging pipeline cuts (split vs monolithic); None means a
+    # fresh deterministic CostModel.default() per lowering, so plan-cache
+    # fingerprints stay stable across processes. A calibrated model hashes
+    # by its rate content and forks the cache only when rates change.
+    cost_model: Optional[CostModel] = None
     # plan verification: None defers to $RAVEN_VERIFY (default 'off');
     # 'warn' reports violations, 'strict' raises PlanVerificationError.
     # Excluded from plan-cache fingerprints (see session._optimize) so the
@@ -100,6 +107,10 @@ class OptimizationReport:
     # filled when the verify mode is 'warn' or 'strict'; rendered by
     # explain()
     verification: list[str] = field(default_factory=list)
+    # relational-op runtime placement (Join / Aggregate), filled after
+    # lowering: (op label, runtime description). Reflects the process-wide
+    # RAVEN_KERNELS mode captured when the stage graph is built.
+    relational: list[tuple[str, str]] = field(default_factory=list)
 
 
 class RavenOptimizer:
@@ -185,6 +196,27 @@ class RavenOptimizer:
                 "after lowering",
             )
         report.stages = describe_segments(plan)
+        from repro.kernels.ops import kernels_enabled
+
+        kern = kernels_enabled()
+        for node in walk_plan(plan):
+            if isinstance(node, Join):
+                report.relational.append((
+                    f"Join[{node.dim_table}] on "
+                    f"{node.fact_key}={node.dim_key}",
+                    "tensor/kernel: gather_join, upstream filter mask fused"
+                    " (jnp fallback when shapes don't qualify)"
+                    if kern else
+                    "tensor/jnp: argsort+searchsorted gather",
+                ))
+            elif isinstance(node, Aggregate):
+                aggs = ", ".join(f"{n}={op}({c})" for n, op, c in node.aggs)
+                report.relational.append((
+                    f"Aggregate[{aggs}]",
+                    "tensor/kernel: segment_agg, filter folded in as mask"
+                    if kern else
+                    "tensor/jnp: masked segment_sum/min/max",
+                ))
         n_host = sum(1 for s in report.stages if s.startswith("host"))
         if n_host:
             report.notes.append(
@@ -237,6 +269,7 @@ class RavenOptimizer:
                         p.pipeline, strategy=opt.tensor_strategy,
                         use_pallas=opt.use_pallas,
                         rename=dict(zip(p.pipeline.outputs, p.output_names)),
+                        cost_model=opt.cost_model,
                     )
                     return self._emit_dnn(p, child, part, report)
                 except MLtoDNNUnsupported as e:
@@ -291,6 +324,20 @@ class RavenOptimizer:
                 [(label, "tensor") for label, _ in part.split.placement]
             )
             return TensorOp(child, fn, names)
+
+        if part.decision is not None and part.decision.choice == "monolithic":
+            # the cost model priced the split's boundary crossings above the
+            # tensor speedup: emit one host MLUdf over the whole pipeline
+            # (the same shape as the no-split fallback, so every verifier
+            # rule that holds there holds here)
+            report.placement.append(
+                [(label, "host") for label, _ in part.split.placement]
+            )
+            report.notes.append(part.decision.note())
+            return MLUdf(
+                child, p.pipeline, list(p.output_names),
+                batch_size=opt.udf_batch_size,
+            )
 
         runtime = {
             "prefix": "tensor/prefix",
@@ -348,6 +395,8 @@ class RavenOptimizer:
             f"MLtoDNN split: {n_all - n_res}/{n_all} pipeline ops lowered to "
             f"the tensor runtime; {n_res}-op residual stays on host"
         )
+        if part.decision is not None:
+            report.notes.append(part.decision.note())
         if fused:
             report.notes.append(
                 "MLtoDNN fused featurize kernel: " + ", ".join(fused)

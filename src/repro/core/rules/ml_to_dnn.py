@@ -19,7 +19,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.ml.pipeline import PipelineSplit, SplitSegment, TrainedPipeline, split_pipeline
+from repro.core.cost import CostModel, CutDecision
+from repro.ml.pipeline import PipelineSplit, SplitSegment, TrainedPipeline, select_cut
 from repro.tensor.compile import (
     TensorCompilation,
     compile_pipeline_tensor,
@@ -45,11 +46,15 @@ def compile_pipeline_to_dnn(
 class PartialDNNLowering:
     """Outcome of the pipeline-splitting MLtoDNN lowering.
 
-    Exactly one of two shapes: ``full`` set (pipeline fully supported — the
-    classic single-TensorOp lowering), or a split with a host ``residual``
+    One of three shapes: ``full`` set (pipeline fully supported — the
+    classic single-TensorOp lowering); a split with a host ``residual``
     and compiled ``prefix``/``suffix`` tensor slices (either may be None
-    when its slice is empty). ``split`` carries the per-node placement for
-    the optimizer's report.
+    when its slice is empty); or — when the cost model prices the split's
+    boundary crossings above the tensor speedup — neither, with
+    ``decision.choice == "monolithic"`` telling the optimizer to emit one
+    host MLUdf over the whole pipeline. ``split`` carries the per-node
+    placement for the optimizer's report; ``decision`` (None for fully
+    supported pipelines) carries the cost comparison.
     """
 
     split: PipelineSplit
@@ -57,6 +62,7 @@ class PartialDNNLowering:
     prefix: Optional[tuple[TensorCompilation, SplitSegment]] = None
     residual: Optional[SplitSegment] = None
     suffix: Optional[tuple[TensorCompilation, SplitSegment]] = None
+    decision: Optional[CutDecision] = None
 
 
 def compile_pipeline_to_dnn_partial(
@@ -64,16 +70,26 @@ def compile_pipeline_to_dnn_partial(
     strategy: str = "auto",
     use_pallas: bool | None = None,
     rename: Optional[dict[str, str]] = None,
+    cost_model: Optional[CostModel] = None,
+    rows_hint: Optional[int] = None,
 ) -> PartialDNNLowering:
     """Split-aware MLtoDNN: lower the maximal supported prefix and suffix,
-    keep the minimal residual on host.
+    keep the minimal residual on host — unless the cost model says the
+    split's boundary crossings outweigh the tensor speedup, in which case
+    the decision says "monolithic" and nothing is compiled.
 
     ``rename`` maps pipeline graph outputs to plan column names so segment
-    ``out_cols`` land directly in the engine's namespace. Raises
-    :exc:`MLtoDNNUnsupported` when neither a prefix nor a suffix can be
-    lowered (the plan falls back to one monolithic MLUdf).
+    ``out_cols`` land directly in the engine's namespace. ``cost_model``
+    defaults to a fresh :meth:`CostModel.default` (deterministic, so plan
+    cache keys stay stable); ``rows_hint`` overrides the batch size the
+    decision is priced at. Raises :exc:`MLtoDNNUnsupported` when neither a
+    prefix nor a suffix can be lowered (the plan falls back to one
+    monolithic MLUdf with no decision to make).
     """
-    split = split_pipeline(pipe, tensor_supported, rename=rename)
+    split, decision = select_cut(
+        pipe, tensor_supported, rename=rename,
+        cost_model=cost_model, rows=rows_hint,
+    )
     if split.fully_supported:
         return PartialDNNLowering(
             split=split,
@@ -86,6 +102,8 @@ def compile_pipeline_to_dnn_partial(
             "no supported prefix or suffix to split out: "
             + ", ".join(label for label, _ in split.placement)
         )
+    if decision is not None and decision.choice == "monolithic":
+        return PartialDNNLowering(split=split, decision=decision)
 
     def _compile(seg: Optional[SplitSegment]):
         if seg is None:
@@ -102,4 +120,5 @@ def compile_pipeline_to_dnn_partial(
         prefix=_compile(split.prefix),
         residual=split.residual,
         suffix=_compile(split.suffix),
+        decision=decision,
     )

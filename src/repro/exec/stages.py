@@ -51,6 +51,13 @@ ROW_VALID_KEY = "__row_valid__"
 PARAMS_KEY = "__params__"
 # per-row request-segment ids (int32), present only under coalesced serving
 ROW_SEG_KEY = "__row_seg__"
+# baked dim-table sort data, injected once per execution by the engine:
+# {dim_table: {"keys": sorted_keys, "order": argsort_perm[, "unique": ...]}}.
+# Dim tables are frozen at registration, so the engine computes (and caches)
+# the sorted order on the host instead of re-deriving it inside the traced
+# stage on every call; the Join step falls back to an in-trace argsort when
+# the entry is absent (abstract execution, sharded path).
+DIMSORT_KEY = "__dimsort__"
 # arange(num_segment_slots): its *static length* tells segmented aggregates
 # their output width at trace time (slot count is power-of-two bucketed)
 SEG_SLOTS_KEY = "__seg_slots__"
@@ -127,15 +134,38 @@ def pure_step(plan, inner: Optional[Callable[[dict], State]]) -> Callable[[dict]
         return fn
 
     if isinstance(plan, Join):
-        def fn(env, _plan=plan):
+        # relational-kernel mode is a codegen decision: captured once at
+        # stage-build time, and folded into the stage fingerprint by
+        # build_stage_graph so the two modes never alias compiled artifacts
+        from repro.kernels.ops import kernels_enabled
+
+        use_kernels = kernels_enabled()
+
+        def fn(env, _plan=plan, _kern=use_kernels):
+            from repro.tensor.compile import (
+                emit_join_kernel,
+                join_kernel_qualifies,
+            )
+
             cols, valid, seg = inner(env)
             dim = env[_plan.dim_table]
             keys = dim[_plan.dim_key]
-            order = jnp.argsort(keys)
-            skeys = keys[order]
-            pos = jnp.searchsorted(skeys, cols[_plan.fact_key])
+            fk = cols[_plan.fact_key]
+            ds = env.get(DIMSORT_KEY, {}).get(_plan.dim_table)
+            if _kern and join_kernel_qualifies(_plan, dim, fk, ds):
+                brought, hit = emit_join_kernel(_plan, dim, fk, ds)
+                out = dict(cols)
+                out.update(brought)
+                return out, valid & hit, seg
+            if ds is not None:  # baked at registration (satellite: no
+                order = ds["order"]  # per-call argsort inside the trace)
+                skeys = ds["keys"]
+            else:
+                order = jnp.argsort(keys)
+                skeys = keys[order]
+            pos = jnp.searchsorted(skeys, fk)
             pos = jnp.clip(pos, 0, skeys.shape[0] - 1)
-            hit = skeys[pos] == cols[_plan.fact_key]
+            hit = skeys[pos] == fk
             gather = order[pos]
             out = dict(cols)
             for c in _plan.dim_columns:
@@ -171,20 +201,38 @@ def pure_step(plan, inner: Optional[Callable[[dict], State]]) -> Callable[[dict]
         return fn
 
     if isinstance(plan, Aggregate):
-        def fn(env, _plan=plan):
+        from repro.kernels.ops import kernels_enabled
+
+        use_kernels = kernels_enabled()
+
+        def fn(env, _plan=plan, _kern=use_kernels):
+            from repro.tensor.compile import emit_aggregate_kernel
+
             cols, valid, seg = inner(env)
             w = valid.astype(jnp.float32)
             if seg is None:
+                # global fold: a single output row; the upstream filter is
+                # already folded in as the validity weight
+                if _kern:
+                    sid = jnp.zeros_like(valid, dtype=jnp.int32)
+                    out = emit_aggregate_kernel(_plan.aggs, cols, w, sid, 1)
+                    return out, jnp.ones((1,), dtype=bool), None
                 out = {}
+                sid0 = jnp.zeros_like(valid, dtype=jnp.int32)
+                nvalid = jnp.sum(w)
                 for name, op, col in _plan.aggs:
                     if op == "count":
-                        out[name] = jnp.sum(w)[None]
+                        out[name] = nvalid[None]
                     elif op == "sum":
                         out[name] = jnp.sum(cols[col] * w)[None]
                     elif op == "mean":
                         out[name] = (
-                            jnp.sum(cols[col] * w) / jnp.maximum(jnp.sum(w), 1.0)
+                            jnp.sum(cols[col] * w) / jnp.maximum(nvalid, 1.0)
                         )[None]
+                    elif op in ("min", "max"):
+                        out[name] = _masked_extremum(
+                            op, cols[col], valid, nvalid[None], sid0, 1
+                        )
                     else:
                         raise ValueError(op)
                 return out, jnp.ones((1,), dtype=bool), None
@@ -196,6 +244,9 @@ def pure_step(plan, inner: Optional[Callable[[dict], State]]) -> Callable[[dict]
             ns = slots.shape[0]
             k = env[SEG_COUNT_KEY]
             sid = jnp.where(valid, seg, 0)
+            if _kern:
+                out = emit_aggregate_kernel(_plan.aggs, cols, w, sid, ns)
+                return out, slots < k, slots
             counts = jax.ops.segment_sum(w, sid, num_segments=ns)
             out = {}
             for name, op, col in _plan.aggs:
@@ -208,12 +259,32 @@ def pure_step(plan, inner: Optional[Callable[[dict], State]]) -> Callable[[dict]
                 elif op == "mean":
                     s = jax.ops.segment_sum(cols[col] * w, sid, num_segments=ns)
                     out[name] = s / jnp.maximum(counts, 1.0)
+                elif op in ("min", "max"):
+                    out[name] = _masked_extremum(
+                        op, cols[col], valid, counts, sid, ns
+                    )
                 else:
                     raise ValueError(op)
             return out, slots < k, slots
         return fn
 
     raise TypeError(type(plan))
+
+
+def _masked_extremum(op, values, valid, counts, sid, ns):
+    """Segment min/max over valid rows only; empty segments yield 0.0 (the
+    same convention in the jnp fallback, the CPU oracle, and the Pallas
+    kernel, so every dispatch path agrees)."""
+    v = values.astype(jnp.float32)
+    if op == "min":
+        m = jax.ops.segment_min(
+            jnp.where(valid, v, jnp.inf), sid, num_segments=ns
+        )
+    else:
+        m = jax.ops.segment_max(
+            jnp.where(valid, v, -jnp.inf), sid, num_segments=ns
+        )
+    return jnp.where(counts > 0, m, 0.0)
 
 
 def _from_mid(env) -> State:
@@ -474,6 +545,8 @@ def build_stage_graph(plan, pins: Optional[list] = None) -> StageGraph:
     their chained hash embeds the unstable prefix.
     """
     from repro.core.fingerprint import fingerprint, node_fingerprint
+    from repro.kernels.ops import kernel_mode_token
+    from repro.relational.engine import Aggregate, Join
 
     pins = pins if pins is not None else []
     stages: list[Stage] = []
@@ -483,7 +556,15 @@ def build_stage_graph(plan, pins: Optional[list] = None) -> StageGraph:
     for idx, (kind, ops) in enumerate(plan_segments(plan)):
         stage_pins: list = []
         tokens = [node_fingerprint(op, pins=stage_pins) for op in ops]
-        fp = fingerprint("stage", kind, prev_fp, tokens, pins=stage_pins)
+        # the RAVEN_KERNELS mode changes the program emitted for Join /
+        # Aggregate stages, so it must fork their fingerprints (and only
+        # theirs — other stages keep their historical hashes)
+        extra = (
+            [kernel_mode_token()]
+            if any(isinstance(op, (Join, Aggregate)) for op in ops)
+            else []
+        )
+        fp = fingerprint("stage", kind, prev_fp, tokens, *extra, pins=stage_pins)
         stable = prev_stable and not stage_pins
         pins.extend(stage_pins)
         out_cols = _segment_out_cols(ops, prev_out)

@@ -9,6 +9,7 @@ shapes; padding is constructed to be provably inert (see each pad helper).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +18,10 @@ import numpy as np
 from repro.kernels import ref as _ref
 from repro.kernels.tree_gemm import tree_gemm as _tree_gemm_kernel
 from repro.kernels.featurize import featurize as _featurize_kernel
+from repro.kernels.relational import (
+    gather_join as _gather_join_kernel,
+    segment_agg as _segment_agg_kernel,
+)
 
 
 def _on_tpu() -> bool:
@@ -25,6 +30,23 @@ def _on_tpu() -> bool:
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def kernels_enabled() -> bool:
+    """``RAVEN_KERNELS`` knob: ``off``/``0`` routes relational stages through
+    the legacy jnp composition (argsort/searchsorted/segment_sum inline in
+    the stage fn) instead of the kernel ops. Anything else (the default)
+    uses :func:`gather_join_op`/:func:`segment_agg_op`, which dispatch to
+    the Pallas kernels on TPU and the jnp oracles on CPU."""
+    return os.environ.get("RAVEN_KERNELS", "on").lower() not in ("off", "0")
+
+
+def kernel_mode_token() -> str:
+    """Content token for the relational-kernel codegen mode. Folded into the
+    fingerprints of stages (and plans) containing Join/Aggregate ops so the
+    two ``RAVEN_KERNELS`` modes never alias each other's compiled artifacts.
+    ``rk1`` versions the relational-kernel emission itself."""
+    return "rk1-on" if kernels_enabled() else "rk1-off"
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +119,55 @@ def featurize_op(
     # kernel wrapper itself — natural shapes in, natural shapes out
     return _featurize_kernel(
         num, cat, offset, scale, cat_values, cat_segments,
+        block_n=block_n, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# relational: gather-join and masked segmented aggregate
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "use_pallas", "interpret")
+)
+def gather_join_op(
+    fk, skeys, spay, *, block_n: int = 256,
+    use_pallas: bool | None = None, interpret: bool = False,
+):
+    """Dim-table equi-join gather. fk:(N,) int32; skeys:(M,) sorted *unique*
+    int32 dim keys; spay:(M,P) f32 payload aligned to skeys. Returns
+    ``(out, hit)``: out:(N,P) f32 (zero on miss), hit:(N,) bool. Miss rows
+    zero their payload in every dispatch path, so kernel and oracle agree
+    bitwise on all rows."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not (use_pallas or interpret):
+        return _ref.gather_join_ref(fk, skeys, spay)
+    return _gather_join_kernel(
+        fk, skeys, spay, block_n=block_n, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "block_n", "use_pallas", "interpret"),
+)
+def segment_agg_op(
+    vals, w, sid, *, num_segments: int, block_n: int = 256,
+    use_pallas: bool | None = None, interpret: bool = False,
+):
+    """Masked segmented aggregate. vals:(N,C) f32; w:(N,) f32 validity
+    weights (the fused filter mask); sid:(N,) int32 in [0, num_segments).
+    Returns ``(counts, sums, mins, maxs)`` — counts:(S,), the rest (S,C);
+    mins/maxs are +inf/-inf where a segment has no valid rows (callers
+    replace empties via ``counts > 0``)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not (use_pallas or interpret):
+        return _ref.segment_agg_ref(vals, w, sid, num_segments=num_segments)
+    return _segment_agg_kernel(
+        vals, w, sid, num_segments=num_segments,
         block_n=block_n, interpret=interpret,
     )
 

@@ -30,6 +30,61 @@ def featurize_ref(num, cat, offset, scale, cat_values, cat_segments):
     return jnp.concatenate(parts, axis=1)
 
 
+def gather_join_ref(fk, skeys, spay):
+    """Dim-table equi-join gather oracle (unique, pre-sorted dim keys).
+
+    fk:(N,) int32 fact keys; skeys:(M,) int32 sorted unique dim keys;
+    spay:(M,P) f32 payload aligned to ``skeys``. Returns ``(out, hit)`` —
+    out:(N,P) f32 (zero on miss, so the oracle and the one-hot-matmul kernel
+    agree bitwise on *every* row, not just hits), hit:(N,) bool.
+    """
+    pos = jnp.clip(jnp.searchsorted(skeys, fk), 0, skeys.shape[0] - 1)
+    hit = skeys[pos] == fk
+    out = jnp.where(hit[:, None], spay[pos], jnp.float32(0.0))
+    return out, hit
+
+
+def segment_agg_ref(vals, w, sid, *, num_segments):
+    """Masked segmented aggregate oracle.
+
+    vals:(N,C) f32; w:(N,) f32 validity weights (the fused filter mask);
+    sid:(N,) int32 segment ids in ``[0, num_segments)``. Returns
+    ``(counts, sums, mins, maxs)`` with the same shapes/semantics as the
+    Pallas kernel: counts:(S,), sums:(S,C) weighted sums, mins/maxs:(S,C)
+    masked extrema (+inf/-inf for segments with no valid rows).
+    """
+    S = num_segments
+    wf = w.astype(jnp.float32)
+    vf = vals.astype(jnp.float32)
+    if S == 1:
+        # global fold: plain reductions, not a scatter of N rows into one
+        # slot (XLA lowers segment_* to scatter-adds, which on CPU are far
+        # slower than a tree reduce)
+        if vf.shape[0] == 0:
+            return (
+                jnp.zeros((1,), jnp.float32),
+                jnp.zeros((1, vf.shape[1]), jnp.float32),
+                jnp.full((1, vf.shape[1]), jnp.inf, jnp.float32),
+                jnp.full((1, vf.shape[1]), -jnp.inf, jnp.float32),
+            )
+        valid1 = (wf > 0)[:, None]
+        counts = jnp.sum(wf)[None]
+        sums = jnp.sum(vf * wf[:, None], axis=0)[None]
+        mins = jnp.min(jnp.where(valid1, vf, jnp.inf), axis=0)[None]
+        maxs = jnp.max(jnp.where(valid1, vf, -jnp.inf), axis=0)[None]
+        return counts, sums, mins, maxs
+    counts = jax.ops.segment_sum(wf, sid, num_segments=S)
+    sums = jax.ops.segment_sum(vf * wf[:, None], sid, num_segments=S)
+    valid = (wf > 0)[:, None]
+    mins = jax.ops.segment_min(
+        jnp.where(valid, vf, jnp.inf), sid, num_segments=S
+    )
+    maxs = jax.ops.segment_max(
+        jnp.where(valid, vf, -jnp.inf), sid, num_segments=S
+    )
+    return counts, sums, mins, maxs
+
+
 def flash_attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
     """Full-softmax attention oracle. q:(B,Sq,H,D) k,v:(B,Skv,KH,D) with GQA
     (H % KH == 0). Returns (B,Sq,H,D)."""

@@ -396,6 +396,30 @@ def split_pipeline(
     )
 
 
+def select_cut(
+    pipeline: TrainedPipeline,
+    supported,
+    rename: dict[str, str] | None = None,
+    cost_model=None,
+    rows: int | None = None,
+):
+    """Cost-based cut selection: ``split_pipeline`` generates the structural
+    (coverage-maximizing) cut, and a :class:`repro.core.cost.CostModel`
+    judges it against the monolithic host lowering — the only other shape
+    the verifier's ``residual-minimal`` rule admits. Returns
+    ``(PipelineSplit, CutDecision | None)``; the decision is ``None`` when
+    the pipeline is fully supported (nothing to trade off — there is no
+    host boundary to price)."""
+    split = split_pipeline(pipeline, supported, rename=rename)
+    if split.fully_supported:
+        return split, None
+    from repro.core.cost import CostModel
+
+    model = cost_model if cost_model is not None else CostModel.default()
+    decision = model.choose_cut(split, pipeline.nodes, rows=rows)
+    return split, decision
+
+
 # ---------------------------------------------------------------------------
 # Pipeline construction (the "training" front-end)
 # ---------------------------------------------------------------------------

@@ -86,7 +86,7 @@ class TensorOp:
 @dataclass
 class Aggregate:
     child: "PhysicalPlan"
-    aggs: list[tuple[str, str, str]]  # (out_name, op{sum,count,mean}, col)
+    aggs: list[tuple[str, str, str]]  # (out_name, op{sum,count,mean,min,max}, col)
 
 
 PhysicalPlan = Union[Scan, Join, Filter, Project, MLUdf, TensorOp, Aggregate]
@@ -107,6 +107,7 @@ def walk_plan(p: PhysicalPlan):
 # ---------------------------------------------------------------------------
 
 from repro.exec.stages import (  # noqa: E402  (plan nodes must exist first)
+    DIMSORT_KEY,
     PARAMS_KEY,
     ROW_SEG_KEY,
     ROW_VALID_KEY,
@@ -130,10 +131,21 @@ def plan_fingerprint(plan: PhysicalPlan, pins: Optional[list] = None) -> str:
     objects. Opaque callables (``TensorOp.fn``) hash by identity and are
     reported via ``pins``; the compiled-plan cache keeps those alive so a
     fingerprint can never alias a dead closure's recycled id.
+
+    Plans containing Join/Aggregate ops additionally fold in the
+    ``RAVEN_KERNELS`` mode token: the mode changes the stage programs those
+    plans lower to, so a CompiledPlan cached under one mode must never be
+    served under the other.
     """
     from repro.core.fingerprint import fingerprint
+    from repro.kernels.ops import kernel_mode_token
 
-    return fingerprint(plan, pins=pins)
+    extra = (
+        [kernel_mode_token()]
+        if any(isinstance(p, (Join, Aggregate)) for p in walk_plan(plan))
+        else []
+    )
+    return fingerprint(plan, *extra, pins=pins)
 
 
 @dataclass
@@ -171,10 +183,52 @@ PLAN_CACHE_CAPACITY = 64
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
+    _DIMSORT_CACHE.clear()
     PLAN_CACHE_STATS.hits = PLAN_CACHE_STATS.misses = 0
     PLAN_CACHE_STATS.evictions = PLAN_CACHE_STATS.traces = 0
     PLAN_CACHE_STATS.disk_hits = PLAN_CACHE_STATS.disk_misses = 0
     PLAN_CACHE_STATS.stage_traces.clear()
+
+
+# -- baked dim-table sort orders ---------------------------------------------
+# Dim tables are frozen at registration, so the Join stage's sorted key
+# order is a pure function of the key column's *content*. Baking it here (on
+# the host, once per distinct key column) removes the per-call argsort from
+# the traced stage; the cache is content-keyed — array identity is useless
+# because callers re-wrap numpy tables into fresh jnp arrays per call — and
+# bounded. Entries carry a zero-length "unique" marker array when the keys
+# are duplicate-free: its *presence in the pytree structure* is what lets
+# the traced Join step decide at trace time that the one-hot-matmul kernel
+# gather is exact (see tensor.compile.join_kernel_qualifies).
+
+_DIMSORT_CACHE: dict[tuple, dict[str, jnp.ndarray]] = {}
+_DIMSORT_CAPACITY = 128
+
+
+def dimsort_entry(keys) -> dict[str, jnp.ndarray]:
+    """Baked sort data for one dim-key column: ``keys`` sorted, the stable
+    argsort permutation (matching ``jnp.argsort``'s stable order, so the
+    baked and in-trace fallback paths gather identical rows even with
+    duplicate keys), and the uniqueness marker."""
+    import hashlib
+
+    nk = np.ascontiguousarray(np.asarray(keys))
+    key = (str(nk.dtype), nk.shape, hashlib.sha1(nk.tobytes()).hexdigest())
+    hit = _DIMSORT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    order = np.argsort(nk, kind="stable")
+    sk = nk[order]
+    entry = {
+        "keys": jnp.asarray(sk),
+        "order": jnp.asarray(order.astype(np.int32)),
+    }
+    if sk.size == 0 or not np.any(sk[1:] == sk[:-1]):
+        entry["unique"] = jnp.zeros((0,), jnp.int32)
+    if len(_DIMSORT_CACHE) >= _DIMSORT_CAPACITY:
+        _DIMSORT_CACHE.pop(next(iter(_DIMSORT_CACHE)))
+    _DIMSORT_CACHE[key] = entry
+    return entry
 
 
 # The process-wide artifact store (disk tier under the in-memory LRU above).
@@ -275,6 +329,14 @@ class CompiledPlan:
             env[ROW_SEG_KEY] = jnp.asarray(seg_ids, dtype=jnp.int32)
             env[SEG_SLOTS_KEY] = jnp.arange(ns, dtype=jnp.int32)
             env[SEG_COUNT_KEY] = jnp.asarray(count, dtype=jnp.int32)
+        ds: dict[str, dict[str, jnp.ndarray]] = {}
+        for p in walk_plan(self.graph.plan):
+            if isinstance(p, Join):
+                tab = database.get(p.dim_table)
+                if tab is not None and p.dim_key in tab:
+                    ds[p.dim_table] = dimsort_entry(tab[p.dim_key])
+        if ds:
+            env[DIMSORT_KEY] = ds
         return env
 
     def run(

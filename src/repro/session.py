@@ -664,6 +664,12 @@ class PreparedQuery:
                     else:
                         for label, r in nodes:
                             lines.append(f"  {r:<16} {label}")
+        relational = getattr(self.report, "relational", [])
+        if relational:
+            lines.append("-- runtime placement (relational ops) " + "-" * 18)
+            for label, r in relational:
+                lines.append(f"  {label}")
+                lines.append(f"    -> {r}")
         scans = [s for s in walk_plan(self.plan) if isinstance(s, Scan)]
         if scans:
             lines.append("-- pushed projections " + "-" * 33)

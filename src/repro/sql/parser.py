@@ -9,7 +9,8 @@ aggregates or column select):
                  data = <table> [JOIN <table> ON <col> = <col>]*) AS <alias>
     [WHERE <col|alias.col> <op> <literal|:param> [AND ...]]
 
-    item := COUNT(*) | SUM(col) | AVG(col) | col | alias.col | *
+    item := COUNT(*) | SUM(col) | AVG(col) | MIN(col) | MAX(col)
+          | col | alias.col | *
     op   := = | <> | != | < | <= | > | >=
 
 ``:name`` placeholders become :class:`~repro.relational.expr.Param` slots in
@@ -56,7 +57,10 @@ _OPMAP = {
     "<>": "ne", "!=": "ne",
 }
 
-_AGGMAP = {"COUNT": "count", "SUM": "sum", "AVG": "mean"}
+_AGGMAP = {
+    "COUNT": "count", "SUM": "sum", "AVG": "mean",
+    "MIN": "min", "MAX": "max",
+}
 
 
 def canonical_op(op: str) -> str:
@@ -316,7 +320,7 @@ def build_prediction_query(
     aggs = [
         (f"{kind}_{arg if arg != '*' else 'rows'}", kind, arg)
         for kind, arg in spec.items
-        if kind in ("count", "sum", "mean")
+        if kind in ("count", "sum", "mean", "min", "max")
     ]
     if aggs:
         # COUNT(*) needs a concrete column: use the first predict output

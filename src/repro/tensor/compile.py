@@ -367,3 +367,89 @@ def compile_pipeline_tensor(
         fn=fn, strategy=chosen, n_ops=len(steps),
         input_names=tuple(input_names), fused=tuple(fused_outs),
     )
+
+
+# ---------------------------------------------------------------------------
+# Relational kernel emission (targeted by the Join / Aggregate stage steps)
+# ---------------------------------------------------------------------------
+#
+# The relational side of the kernel runtime lives here with the rest of the
+# tensor-runtime codegen: the stage IR (exec/stages.py) decides *where* a
+# Join or Filter→Aggregate chain sits in a pure stage, these helpers decide
+# *how* it lowers — the Pallas gather-join / masked segmented-aggregate ops
+# when shapes qualify, the legacy jnp composition otherwise. The upstream
+# filter's validity mask is threaded in as the kernel mask, so Filter→Join
+# and Filter→Aggregate chains fuse without materializing filtered rows.
+
+
+def join_kernel_qualifies(plan, dim, fk, ds) -> bool:
+    """Can this Join lower to the gather-join kernel? Requires the engine's
+    baked dim-sort entry with its uniqueness marker (the one-hot matmul
+    gather needs unique dim keys), integer keys on both sides, f32 payload
+    columns, and at least one payload column to gather."""
+    if ds is None or "unique" not in ds:
+        return False
+    if not plan.dim_columns:
+        return False
+    keys = dim[plan.dim_key]
+    if not (
+        jnp.issubdtype(keys.dtype, jnp.integer)
+        and jnp.issubdtype(fk.dtype, jnp.integer)
+    ):
+        return False
+    return all(dim[c].dtype == jnp.float32 for c in plan.dim_columns)
+
+
+def emit_join_kernel(plan, dim, fk, ds):
+    """Emit the gather-join kernel call for a qualifying Join. Returns
+    ``(brought, hit)``: the gathered dim columns (zero where the key
+    missed) and the per-row hit mask to AND into row validity."""
+    from repro.kernels.ops import gather_join_op
+
+    order = ds["order"]
+    spay = jnp.stack(
+        [dim[c][order] for c in plan.dim_columns], axis=1
+    ).astype(jnp.float32)
+    gathered, hit = gather_join_op(
+        fk.astype(jnp.int32), ds["keys"].astype(jnp.int32), spay
+    )
+    brought = {
+        c: gathered[:, j] for j, c in enumerate(plan.dim_columns)
+    }
+    return brought, hit
+
+
+def emit_aggregate_kernel(aggs, cols, w, sid, num_segments):
+    """Emit one masked segmented-aggregate kernel call covering every agg of
+    an Aggregate op (sum/mean/count share a single one-hot matmul; min/max
+    ride the same pass). ``w`` is the fused filter/validity mask."""
+    from repro.kernels.ops import segment_agg_op
+
+    src: list[str] = []
+    for _, op, col in aggs:
+        if op != "count" and col not in src:
+            src.append(col)
+    n = w.shape[0]
+    if src:
+        vals = jnp.stack([cols[c].astype(jnp.float32) for c in src], axis=1)
+    else:
+        vals = jnp.zeros((n, 0), jnp.float32)
+    counts, sums, mins, maxs = segment_agg_op(
+        vals, w, sid, num_segments=num_segments
+    )
+    idx = {c: j for j, c in enumerate(src)}
+    out = {}
+    for name, op, col in aggs:
+        if op == "count":
+            out[name] = counts
+        elif op == "sum":
+            out[name] = sums[:, idx[col]]
+        elif op == "mean":
+            out[name] = sums[:, idx[col]] / jnp.maximum(counts, 1.0)
+        elif op == "min":
+            out[name] = jnp.where(counts > 0, mins[:, idx[col]], 0.0)
+        elif op == "max":
+            out[name] = jnp.where(counts > 0, maxs[:, idx[col]], 0.0)
+        else:
+            raise ValueError(op)
+    return out

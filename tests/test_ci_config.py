@@ -93,7 +93,21 @@ def test_nightly_uploads_benchmark_baseline(workflow):
         s for s in job["steps"] if "upload-artifact" in s.get("uses", "")
     ]
     assert uploads, "nightly must upload the benchmark JSON as an artifact"
-    assert uploads[0]["with"]["path"] == "BENCH_serving.json"
+    assert uploads[0]["with"]["path"] == "bench_current.json"
+
+
+def test_nightly_runs_bench_regression_guard(workflow):
+    """The fresh smoke numbers must be compared against the *committed*
+    baseline — never written over it, so a regressed nightly can't
+    self-bless."""
+    steps = _run_steps(workflow["jobs"]["nightly"])
+    guard = [s for s in steps if "benchmarks/check_regression.py" in s]
+    assert guard, "nightly must run the bench regression guard"
+    assert "bench_current.json" in guard[0]
+    assert "BENCH_serving.json" in guard[0]
+    # the smoke run writes to the scratch path, not the committed baseline
+    smoke = next(s for s in steps if "--smoke" in s)
+    assert "BENCH_serving.json" not in smoke
 
 
 def test_benchmark_baseline_is_committed():

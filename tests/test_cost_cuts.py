@@ -1,0 +1,252 @@
+"""Cost-based pipeline cuts: the cost model judges the structural split
+against the monolithic host lowering.
+
+Property: for any pipeline and any (positive-rate) cost model, the chosen
+cut never has more host boundaries than the structural cut — both admitted
+candidates carry exactly one, so cost-based selection can reshape the plan
+but never add a boundary. A seeded regression pins the flip: a model that
+prices boundary crossings sky-high collapses the split to one monolithic
+MLUdf whose results are bit-identical to host ``run_pipeline``. Calibration
+consumes the same per-stage dispatch timings ``explain()`` renders.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro as raven
+from repro.core.cost import CostModel
+from repro.core.optimizer import OptimizerOptions
+from repro.core.rules.ml_to_dnn import compile_pipeline_to_dnn_partial
+from repro.ml.pipeline import (
+    InputSpec,
+    PipelineNode,
+    TrainedPipeline,
+    run_pipeline,
+    select_cut,
+    split_pipeline,
+)
+from repro.relational.engine import MLUdf, TensorOp, clear_plan_cache, walk_plan
+from repro.tensor.compile import tensor_supported
+
+
+def _udf(X):
+    return (X.astype(np.float32) * np.float32(0.5)) + np.float32(0.25)
+
+
+_udf.__fingerprint_token__ = "test-cost-cuts-udf-v1"
+
+
+def _build(k: int, udf_pos: str) -> TrainedPipeline:
+    """k numeric inputs → concat → scaler → feature_extractor with a
+    python_udf at ``udf_pos`` (same shapes as the split-lowering suite)."""
+    xs = [f"x{i}" for i in range(k)]
+    nodes: list[PipelineNode] = []
+    off = np.zeros(k, np.float32)
+    sc = np.ones(k, np.float32)
+    if udf_pos == "start":
+        nodes.append(PipelineNode("python_udf", [xs[0]], ["h0"], {"fn": _udf}))
+        concat_in = ["h0", *xs[1:]]
+    else:
+        concat_in = list(xs)
+    nodes.append(PipelineNode("concat", concat_in, ["raw"]))
+    if udf_pos == "middle":
+        nodes.append(PipelineNode("python_udf", ["raw"], ["raw_h"], {"fn": _udf}))
+        scaler_in = "raw_h"
+    else:
+        scaler_in = "raw"
+    nodes.append(
+        PipelineNode("scaler", [scaler_in], ["scaled"],
+                     {"offset": off, "scale": sc})
+    )
+    nodes.append(
+        PipelineNode("feature_extractor", ["scaled"], ["feat"], {"indices": [0]})
+    )
+    final = "feat"
+    if udf_pos == "end":
+        nodes.append(PipelineNode("python_udf", ["feat"], ["feat_h"], {"fn": _udf}))
+        final = "feat_h"
+    return TrainedPipeline(
+        inputs=[InputSpec(x, "numeric") for x in xs],
+        outputs=[final],
+        nodes=nodes,
+    )
+
+
+def _n_host(plan) -> int:
+    return sum(1 for s in walk_plan(plan) if isinstance(s, MLUdf))
+
+
+def _random_model(rng) -> CostModel:
+    """A cost model with arbitrary (but positive) rates — including regimes
+    that flip the decision either way."""
+    m = CostModel()
+    for d in (m.host_ns, m.tensor_ns):
+        for kind in d:
+            d[kind] *= float(rng.uniform(0.01, 100.0))
+    m.crossing_ns_per_row = float(rng.uniform(1.0, 1e7))
+    m.segment_fixed_us = float(rng.uniform(1.0, 1e6))
+    m.rows_hint = int(rng.integers(1, 100_000))
+    return m
+
+
+@pytest.mark.parametrize("seed", range(20))
+@pytest.mark.parametrize("udf_pos", ["start", "middle", "end"])
+def test_chosen_cut_never_adds_host_boundaries(seed, udf_pos):
+    """Property: across random cost models, the cost-chosen plan has at most
+    as many host boundaries as the structural split's plan."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, 5))
+    pipe = _build(k, udf_pos)
+    data = {f"x{i}": (rng.integers(-40, 40, 64) * 0.25).astype(np.float32)
+            for i in range(k)}
+    model = _random_model(rng)
+
+    db = raven.connect({"t": data})
+    db.register_model("m", pipe)
+    # projection pushdown can't width-infer through a python_udf feeding a
+    # concat (the "start" shape) — not what this property is about
+    common = dict(transform="dnn", projection_pushdown=False)
+    clear_plan_cache()
+    structural = db.table("t").predict("m").prepare(
+        options=OptimizerOptions(
+            cost_model=CostModel(crossing_ns_per_row=0.0, segment_fixed_us=0.0),
+            **common,
+        )
+    )
+    clear_plan_cache()
+    chosen = db.table("t").predict("m").prepare(
+        options=OptimizerOptions(cost_model=model, **common)
+    )
+    assert _n_host(chosen.plan) <= _n_host(structural.plan) == 1
+    # and the chosen plan still computes the same thing, bit for bit
+    host = run_pipeline(pipe, data)
+    want = np.asarray(host[pipe.outputs[0]], np.float32).reshape(-1)
+    for prep in (structural, chosen):
+        got = np.asarray(prep(data)["score"], np.float32).reshape(-1)
+        assert np.array_equal(want.view(np.uint32), got.view(np.uint32))
+    db.close()
+    clear_plan_cache()
+
+
+def test_decision_candidates_respect_residual_minimal():
+    """select_cut only ever returns the structural split (whose residual is
+    the minimal unsupported set) or a monolithic decision — it never demotes
+    supported ops into a larger residual."""
+    pipe = _build(3, "middle")
+    structural = split_pipeline(pipe, tensor_supported)
+    for model in (CostModel.default(),
+                  CostModel(crossing_ns_per_row=1e8, segment_fixed_us=1e7)):
+        split, decision = select_cut(pipe, tensor_supported, cost_model=model)
+        assert split.placement == structural.placement
+        assert decision.choice in ("split", "monolithic")
+
+
+def test_fully_supported_pipeline_has_no_decision():
+    pipe = TrainedPipeline(
+        inputs=[InputSpec("a", "numeric")],
+        outputs=["s"],
+        nodes=[PipelineNode("scaler", ["a"], ["s"],
+                            {"offset": np.zeros(1, np.float32),
+                             "scale": np.ones(1, np.float32)})],
+    )
+    split, decision = select_cut(pipe, tensor_supported)
+    assert split.fully_supported and decision is None
+    part = compile_pipeline_to_dnn_partial(pipe)
+    assert part.full is not None and part.decision is None
+
+
+def test_seeded_cost_flip_monolithic_bitwise():
+    """Regression: a boundary-hostile cost model flips the cut from split to
+    monolithic; plan shape changes, results stay bit-identical to host
+    ``run_pipeline``, and ``explain()`` narrates the decision."""
+    rng = np.random.default_rng(42)
+    pipe = _build(2, "middle")
+    data = {f"x{i}": (rng.integers(-40, 40, 200) * 0.25).astype(np.float32)
+            for i in range(2)}
+    db = raven.connect({"t": data})
+    db.register_model("m", pipe)
+
+    clear_plan_cache()
+    split_prep = db.table("t").predict("m").prepare(transform="dnn")
+    kinds = [type(s).__name__ for s in walk_plan(split_prep.plan)
+             if isinstance(s, (MLUdf, TensorOp))]
+    assert kinds == ["TensorOp", "MLUdf", "TensorOp"]
+    assert "cost-based cut: kept the structural split" in split_prep.explain()
+
+    flip = CostModel(crossing_ns_per_row=1e7, segment_fixed_us=1e6)
+    clear_plan_cache()
+    mono_prep = db.table("t").predict("m").prepare(
+        options=OptimizerOptions(transform="dnn", cost_model=flip)
+    )
+    kinds = [type(s).__name__ for s in walk_plan(mono_prep.plan)
+             if isinstance(s, (MLUdf, TensorOp))]
+    assert kinds == ["MLUdf"]
+    udf = next(s for s in walk_plan(mono_prep.plan) if isinstance(s, MLUdf))
+    assert len(udf.pipeline.nodes) == len(pipe.nodes)  # whole pipeline, host
+    text = mono_prep.explain()
+    assert "collapsed the split to one monolithic host UDF" in text
+    assert "all 4 ops on host" in text
+
+    host = run_pipeline(pipe, data)
+    want = np.asarray(host[pipe.outputs[0]], np.float32).reshape(-1)
+    for prep in (split_prep, mono_prep):
+        got = np.asarray(prep(data)["score"], np.float32).reshape(-1)
+        assert np.array_equal(want.view(np.uint32), got.view(np.uint32))
+    db.close()
+    clear_plan_cache()
+
+
+def test_calibration_from_served_graph_timings():
+    """calibrate_from_graph consumes the Stage.calls/total_s accounting that
+    ``explain()`` renders, rescales the touched per-op host rates, and is
+    deterministic for a given set of timings."""
+    rng = np.random.default_rng(0)
+    pipe = _build(2, "middle")
+    data = {f"x{i}": (rng.integers(-40, 40, 500) * 0.25).astype(np.float32)
+            for i in range(2)}
+    db = raven.connect({"t": data})
+    db.register_model("m", pipe)
+    clear_plan_cache()
+    prep = db.table("t").predict("m").prepare(transform="dnn")
+    prep(data)  # populate stage timings
+    graph = prep.compiled.graph
+    assert any(s.calls for s in graph.stages)
+
+    model = CostModel.default()
+    before = dict(model.host_ns)
+    observed = model.calibrate_from_graph(graph, rows=500)
+    assert observed >= 1  # at least the host residual stage
+    assert model.host_ns["python_udf"] != before["python_udf"]
+    # deterministic: same graph timings → same calibrated rates
+    model2 = CostModel.default()
+    model2.calibrate_from_graph(graph, rows=500)
+    assert model2.host_ns == model.host_ns
+
+    # a calibrated model feeds straight back into prepare()
+    clear_plan_cache()
+    prep2 = db.table("t").predict("m").prepare(
+        options=OptimizerOptions(transform="dnn", cost_model=model)
+    )
+    assert "cost-based cut" in prep2.explain()
+    db.close()
+    clear_plan_cache()
+
+
+def test_default_model_keeps_plan_fingerprint_stable():
+    """options.cost_model=None lowers with a fresh default model — two
+    prepares of the same query produce identical plan fingerprints (the
+    disk plan cache must not fork on the default)."""
+    rng = np.random.default_rng(1)
+    pipe = _build(2, "middle")
+    data = {f"x{i}": (rng.integers(-40, 40, 64) * 0.25).astype(np.float32)
+            for i in range(2)}
+    db = raven.connect({"t": data})
+    db.register_model("m", pipe)
+    clear_plan_cache()
+    a = db.table("t").predict("m").prepare(transform="dnn").fingerprint
+    clear_plan_cache()
+    b = db.table("t").predict("m").prepare(transform="dnn").fingerprint
+    assert a == b
+    db.close()
+    clear_plan_cache()
