@@ -22,10 +22,25 @@ import argparse
 import json
 import sys
 
+# serving invariants: these must be exactly zero on every run — a nonzero
+# value is a correctness regression (dropped requests, cold cutovers,
+# re-traces on warm paths), not a throughput wobble, so no threshold applies
+ZERO_INVARIANTS = (
+    "cold_warm_traces",
+    "mixed_pipelined_retraces_after_warmup",
+    "hotswap_dropped",
+    "hotswap_cutover_retraces",
+    "hotswap_cutover_deficit",
+)
+
 
 def compare(current: dict, baseline: dict, threshold: float) -> list[str]:
     """Return a list of human-readable failures (empty == guard passes)."""
     failures: list[str] = []
+    for k in ZERO_INVARIANTS:
+        if k in current and current[k] != 0:
+            failures.append(f"{k}: expected 0, got {current[k]!r}")
+            print(f"  FAIL  {k}: {current[k]!r} (must be 0)")
     keys = sorted(k for k in baseline if k.endswith("_rows_s"))
     for k in keys:
         base = baseline[k]
@@ -58,7 +73,7 @@ def compare(current: dict, baseline: dict, threshold: float) -> list[str]:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="fail if any *_rows_s key regresses vs the baseline"
+        description="fail if any *_rows_s key regresses vs the baseline, or a zero-invariant (drops/retraces) is nonzero"
     )
     ap.add_argument("current", help="JSON written by the fresh benchmark run")
     ap.add_argument(
@@ -80,12 +95,13 @@ def main(argv=None) -> int:
           f"(threshold {args.threshold:.0%})")
     failures = compare(current, baseline, args.threshold)
     if failures:
-        print(f"\nREGRESSION: {len(failures)} throughput key(s) regressed "
-              f"more than {args.threshold:.0%}:", file=sys.stderr)
+        print(f"\nREGRESSION: {len(failures)} failing key(s):",
+              file=sys.stderr)
         for msg in failures:
             print(f"  - {msg}", file=sys.stderr)
         return 1
-    print("guard passed: no throughput key regressed beyond the threshold")
+    print("guard passed: invariants hold, no throughput key "
+          "regressed beyond the threshold")
     return 0
 
 

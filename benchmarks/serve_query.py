@@ -745,6 +745,119 @@ def run_relational(quick: bool = False) -> dict:
     }
 
 
+def run_hotswap(quick: bool = False) -> dict:
+    """Part 7: hot-swap A/B — the model-lifecycle payoff.
+
+    Continuous threaded load against one served query while the registry
+    publishes, warm-compiles, and atomically cuts over to a new model
+    version. Per-request latency is bucketed into three windows — steady
+    state on v1 (*before*), the publish→warm→cutover interval (*during*),
+    and steady state on v2 (*after*) — so the headline is visible directly:
+    zero dropped requests, zero cutover re-traces, and a *during* p99 in
+    the same regime as steady state (the swap happens under the scheduler
+    hold, not under a compile)."""
+    reqs_per_phase = 24 if quick else 96
+    train, _ = make_dataset("hospital", 20_000)
+    pipe1 = train_model(train, "gb")
+    pipe2 = train_model(train, "dt")
+    db = raven.connect(train.tables, stats="auto")
+    db.models.publish("m", pipe1)
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='m', data=patients) AS p"
+    ).prepare(transform="sql")
+    prep.serve("hotswap")
+    batch = make_hospital(512, seed=77).tables["patients"]
+    for _ in range(3):  # prime the bucket ladder on v1
+        r = prep.submit(batch)
+        db.flush()
+        r.wait(30)
+
+    records: list[tuple[str, float, str]] = []  # (phase, latency_ms, label)
+    errors: list[BaseException] = []
+    lock = threading.Lock()
+    phase = ["before"]
+    stop = threading.Event()
+
+    def worker():
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            try:
+                r = prep.submit(batch)
+                db.flush()
+                r.wait(60)
+            except BaseException as e:  # noqa: BLE001 — dropped == failure
+                with lock:
+                    errors.append(e)
+                return
+            with lock:
+                records.append(
+                    (phase[0], (time.perf_counter() - t0) * 1e3, r.served_by)
+                )
+
+    def drained(want_phase: str, n: int) -> None:
+        while True:
+            with lock:
+                if sum(1 for p, _, _ in records if p == want_phase) >= n:
+                    return
+            time.sleep(0.002)
+
+    workers = [threading.Thread(target=worker) for _ in range(2)]
+    t_bench = time.perf_counter()
+    for w in workers:
+        w.start()
+    drained("before", reqs_per_phase)
+
+    with lock:
+        phase[0] = "during"
+    db.models.publish("m", pipe2, warm="sync")  # stage + ladder replay
+    traces_warm = db.server.recompiles()
+    db.models.cutover("m", 2)
+    with lock:
+        phase[0] = "after"
+
+    drained("after", reqs_per_phase)
+    stop.set()
+    for w in workers:
+        w.join(timeout=120)
+    db.flush()
+    elapsed = time.perf_counter() - t_bench
+    cutover_retraces = db.server.recompiles() - traces_warm
+
+    by_phase = {
+        p: [ms for ph, ms, _ in records if ph == p]
+        for p in ("before", "during", "after")
+    }
+    p99 = {
+        p: float(np.percentile(v, 99)) if v else 0.0
+        for p, v in by_phase.items()
+    }
+    served = {lb: sum(1 for _, _, s in records if s == lb)
+              for lb in ("v1", "v2")}
+    total_rows = 512 * len(records)
+    snap = db.server.route_snapshot("hotswap")
+
+    print("serve_query_hotswap,phase,requests,p99_ms")
+    for p in ("before", "during", "after"):
+        print(f"serve_query_hotswap,{p},{len(by_phase[p])},{p99[p]:.2f}")
+    print(f"serve_query_hotswap,summary,dropped={len(errors)},"
+          f"cutover_retraces={cutover_retraces},"
+          f"served_v1={served['v1']},served_v2={served['v2']},"
+          f"deficit={snap['last_cutover_deficit']},"
+          f"rows_s={total_rows / elapsed:.0f}")
+    return {
+        "hotswap_requests": len(records),
+        "hotswap_dropped": len(errors),
+        "hotswap_p99_before_ms": p99["before"],
+        "hotswap_p99_during_ms": p99["during"],
+        "hotswap_p99_after_ms": p99["after"],
+        "hotswap_cutover_retraces": int(cutover_retraces),
+        "hotswap_cutover_deficit": int(snap["last_cutover_deficit"]),
+        "hotswap_served_v1": served["v1"],
+        "hotswap_served_v2": served["v2"],
+        "hotswap_rows_s": total_rows / elapsed,
+    }
+
+
 def run(quick: bool = False):
     n_requests = 8 if quick else 24
     sizes = _request_sizes(n_requests)
@@ -783,6 +896,9 @@ def run(quick: bool = False):
 
     # part 6: relational kernels (filter→join→group-by A/B)
     rows.update(run_relational(quick=quick))
+
+    # part 7: hot-swap A/B (model lifecycle: publish → warm → cutover)
+    rows.update(run_hotswap(quick=quick))
     return rows
 
 
@@ -827,6 +943,12 @@ def smoke() -> dict:
     assert (
         rows["relational_kernel_rows_s"] >= rows["relational_jnp_rows_s"]
     ), rows
+    # the model-lifecycle headline: an atomic hot swap under load drops
+    # nothing and re-traces nothing
+    assert rows["hotswap_dropped"] == 0, rows
+    assert rows["hotswap_cutover_retraces"] == 0, rows
+    assert rows["hotswap_cutover_deficit"] == 0, rows
+    assert rows["hotswap_served_v1"] > 0 and rows["hotswap_served_v2"] > 0
     print(f"smoke ok: served {rows['speedup_served']:.1f}x, "
           f"staged {rows['speedup_staged']:.1f}x, "
           f"warm cold-start {rows['cold_speedup_warm']:.1f}x, "
@@ -835,7 +957,11 @@ def smoke() -> dict:
           f"(host boundaries {rows['featurize_host_boundaries_none']} -> "
           f"{rows['featurize_host_boundaries_fused']}), "
           f"relational kernel {rows['relational_kernel_vs_jnp']:.2f}x vs "
-          f"jnp (bitwise equal, 0 retraces)")
+          f"jnp (bitwise equal, 0 retraces), "
+          f"hot swap p99 {rows['hotswap_p99_before_ms']:.1f}/"
+          f"{rows['hotswap_p99_during_ms']:.1f}/"
+          f"{rows['hotswap_p99_after_ms']:.1f} ms "
+          f"(0 dropped, 0 retraces)")
     return rows
 
 

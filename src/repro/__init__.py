@@ -5,7 +5,7 @@ The front door (conventionally imported as ``raven``)::
     import repro as raven
 
     db = raven.connect(tables, stats="auto")
-    db.register_model("risk", pipe)
+    db.models.publish("risk", pipe)
     prep = db.sql(
         "SELECT * FROM PREDICT(model='risk', data=patients) WHERE score >= :t"
     ).prepare(transform="sql", params={"t": 0.6})
@@ -20,16 +20,19 @@ Lower layers (``repro.core``, ``repro.sql``, ``repro.relational``,
 """
 from repro.errors import (
     RavenError,
+    RegistryStateError,
     ServerOverloadedError,
     SQLSyntaxError,
     StaleQueryError,
     UnboundParameterError,
     UnknownColumnError,
     UnknownModelError,
+    UnknownModelVersionError,
     UnknownParameterError,
     UnknownQueryError,
     UnknownTableError,
 )
+from repro.options import ConnectOptions, ServeOptions
 from repro.session import (
     PreparedQuery,
     Query,
@@ -37,6 +40,10 @@ from repro.session import (
     Session,
     connect,
 )
+
+# after repro.session: the session import initializes the relational layer
+# before repro.serve's package imports touch the stage IR (import cycle)
+from repro.serve.registry import ModelRegistry, ModelVersion
 
 __all__ = [
     "connect",
@@ -54,4 +61,10 @@ __all__ = [
     "UnknownQueryError",
     "StaleQueryError",
     "ServerOverloadedError",
+    "UnknownModelVersionError",
+    "RegistryStateError",
+    "ConnectOptions",
+    "ServeOptions",
+    "ModelRegistry",
+    "ModelVersion",
 ]

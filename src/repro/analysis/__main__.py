@@ -182,6 +182,60 @@ def _verify_scenarios() -> AnalysisResult:
     return res
 
 
+def _verify_lifecycle() -> AnalysisResult:
+    """Drive one publish → shadow → split → cutover lifecycle end-to-end
+    and audit the recorded evidence with :func:`check_registry` — the
+    registry rules need real state to replay, so the gate makes some."""
+    from repro.analysis.registry_check import check_registry
+    from repro.session import connect
+
+    res = AnalysisResult()
+    rng = np.random.default_rng(11)
+    tables = {
+        "t": {
+            "a": rng.normal(size=64),
+            "b": rng.normal(size=64),
+            "k": rng.integers(0, 8, size=64).astype(np.int32),
+        },
+    }
+    db = connect(tables, stats="auto")
+    db.models.publish("gate", _toy_pipeline())
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='gate', data=t) AS p"
+    ).prepare(transform="sql")
+    prep.serve("gate_q")
+    batch = {"a": rng.normal(size=16), "b": rng.normal(size=16),
+             "k": rng.integers(0, 8, size=16).astype(np.int32)}
+    prep.submit(batch)
+    db.flush()
+
+    db.models.publish("gate", _toy_pipeline(with_udf=True), warm="sync")
+    db.models.shadow("gate", 2)
+    prep.submit(batch)
+    db.flush()
+    db.models.split("gate", {2: 0.25})
+    prep.submit(batch)
+    db.flush()
+    db.models.split("gate", {})
+    db.models.cutover("gate", 2)
+    prep.submit(batch)
+    db.flush()
+    db.models.retire("gate", 1)
+
+    vs = check_registry(db)
+    for v in vs:
+        v.where = f"lifecycle: {v.where}" if v.where else "lifecycle"
+    res.violations += vs
+    if not vs:
+        snap = db.models.snapshot()["gate"]
+        states = [f"v{v['version']}={v['state']}" for v in snap["versions"]]
+        res.passed.append(
+            "lifecycle scenario: publish→shadow→split→cutover→retire "
+            f"audited clean ({', '.join(states)})"
+        )
+    return res
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -212,6 +266,7 @@ def main(argv=None) -> int:
         result.extend(lint_repo())
     if not args.lint_only:
         result.extend(_verify_scenarios())
+        result.extend(_verify_lifecycle())
 
     print(result.describe())
     if result.violations:

@@ -41,6 +41,7 @@ CONCURRENCY_FILES = (
     "exec/pipeline.py",
     "exec/artifact_store.py",
     "serve/query_server.py",
+    "serve/registry.py",
 )
 
 # runtime subtrees where wall-clock timing is forbidden (perf_counter /

@@ -1,0 +1,147 @@
+"""Registry state-machine checks: replay the model lifecycle's records.
+
+The :class:`~repro.serve.registry.ModelRegistry` *enforces* its state
+machine at transition time; these checks *re-derive* the invariants from
+the recorded evidence — every version's transition history, the live/shadow
+pointers, and the server routes the registry tracks — so a bug that
+corrupted state through a path the enforcement missed (or a future
+refactor that forgets a transition) is caught by an independent reading,
+not by the same code that made the mistake.
+
+Three rules (see ``repro.analysis.rules``):
+
+  * ``registry-state`` — each version's history is a walk through
+    ``ALLOWED_TRANSITIONS`` starting at ``published``, and each model has
+    exactly one live version, the one its ``_live`` pointer routes to.
+  * ``registry-route`` — registry and server agree: a tracked route's live
+    and shadow labels match the registry's pointers, and every staged
+    label on the route names a version the registry published.
+  * ``registry-warm`` — no cutover went out cold: every route's last
+    cutover recorded a zero warm deficit (``require_warm=False`` leaves
+    the unwarmed ladder-entry count behind as evidence).
+
+Run standalone via :func:`check_registry` or as part of the
+``python -m repro.analysis`` gate's lifecycle scenario.
+"""
+from __future__ import annotations
+
+from repro.analysis.rules import (
+    REGISTRY_ROUTE,
+    REGISTRY_STATE,
+    REGISTRY_WARM,
+    Violation,
+)
+from repro.serve.registry import ALLOWED_TRANSITIONS
+
+
+def check_registry(session) -> list[Violation]:
+    """Audit a session's model registry against the recorded lifecycle
+    evidence; returns one :class:`Violation` per broken invariant."""
+    out: list[Violation] = []
+    registry = session.models
+    with registry._lock:
+        snap = registry.snapshot()
+        routes = {
+            name: list(registry._routes.get(name, ()))
+            for name in registry._versions
+        }
+    for name, model in sorted(snap.items()):
+        out.extend(_check_state(name, model))
+        out.extend(_check_routes(name, model, routes.get(name, [])))
+    return out
+
+
+def _check_state(name: str, model: dict) -> list[Violation]:
+    out: list[Violation] = []
+    for v in model["versions"]:
+        ref = f"{name}@{v['version']}"
+        hist = v["history"]
+        if not hist or hist[0] != "published":
+            out.append(Violation(
+                REGISTRY_STATE.id,
+                f"history does not start at 'published': {hist}",
+                where=ref,
+            ))
+            continue
+        for prev, nxt in zip(hist, hist[1:]):
+            if nxt not in ALLOWED_TRANSITIONS.get(prev, frozenset()):
+                out.append(Violation(
+                    REGISTRY_STATE.id,
+                    f"recorded transition {prev!r} -> {nxt!r} is not in the "
+                    f"state machine (history: {hist})",
+                    where=ref,
+                ))
+        if v["state"] != hist[-1]:
+            out.append(Violation(
+                REGISTRY_STATE.id,
+                f"state {v['state']!r} disagrees with the last recorded "
+                f"transition {hist[-1]!r}",
+                where=ref,
+            ))
+    live_versions = [v["version"] for v in model["versions"]
+                     if v["state"] == "live"]
+    if len(live_versions) != 1:
+        out.append(Violation(
+            REGISTRY_STATE.id,
+            f"expected exactly one live version, found "
+            f"{live_versions or 'none'}",
+            where=name,
+        ))
+    elif model["live"] != live_versions[0]:
+        out.append(Violation(
+            REGISTRY_STATE.id,
+            f"live pointer routes to v{model['live']} but v"
+            f"{live_versions[0]} holds the 'live' state",
+            where=name,
+        ))
+    return out
+
+
+def _check_routes(name: str, model: dict, routes: list) -> list[Violation]:
+    out: list[Violation] = []
+    live = model["live"]
+    shadow = model["shadow"]
+    known = {f"v{v['version']}" for v in model["versions"]}
+    for rt in routes:
+        where = f"{name}:{rt.serve_name}"
+        route = rt.server.routes.get(rt.serve_name)
+        if route is None:
+            out.append(Violation(
+                REGISTRY_ROUTE.id,
+                "registry tracks a route the server no longer has",
+                where=where,
+            ))
+            continue
+        snap = rt.server.route_snapshot(rt.serve_name)
+        if live is not None and snap["live"] != f"v{live}":
+            out.append(Violation(
+                REGISTRY_ROUTE.id,
+                f"server routes live traffic to {snap['live']} but the "
+                f"registry's live version is v{live}",
+                where=where,
+            ))
+        want_shadow = None if shadow is None else f"v{shadow}"
+        if snap["shadow"] != want_shadow:
+            out.append(Violation(
+                REGISTRY_ROUTE.id,
+                f"server shadow {snap['shadow']!r} disagrees with the "
+                f"registry's {want_shadow!r}",
+                where=where,
+            ))
+        unknown = sorted(set(snap["versions"]) - known)
+        if unknown:
+            out.append(Violation(
+                REGISTRY_ROUTE.id,
+                f"route stages version labels the registry never "
+                f"published: {unknown}",
+                where=where,
+            ))
+        if snap["last_cutover_deficit"]:
+            out.append(Violation(
+                REGISTRY_WARM.id,
+                f"last cutover went out cold: "
+                f"{snap['last_cutover_deficit']} unwarmed ladder "
+                f"entries (require_warm=False)",
+                where=where,
+            ))
+    return out

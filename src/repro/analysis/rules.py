@@ -23,7 +23,7 @@ class Rule:
     """One named invariant the analysis layer enforces."""
 
     id: str
-    scope: str  # "logical" | "graph" | "exec" | "lint"
+    scope: str  # "logical" | "graph" | "exec" | "lint" | "registry"
     description: str
 
 
@@ -168,6 +168,26 @@ WALLCLOCK_TIMING = register(
     "wallclock-timing", "lint",
     "runtime code measures durations with perf_counter/monotonic, never "
     "time.time() (wall clock steps under NTP)",
+)
+
+# -- model-registry rules ----------------------------------------------------
+
+REGISTRY_STATE = register(
+    "registry-state", "registry",
+    "every model version's recorded history follows the published → "
+    "warming → ready → live → retired state machine, and each model has "
+    "exactly one live version (the registry's routing target)",
+)
+REGISTRY_ROUTE = register(
+    "registry-route", "registry",
+    "registry and server agree: every tracked route's live/shadow labels "
+    "match the registry's live/shadow versions, and every staged label on "
+    "a server route is a version the registry knows",
+)
+REGISTRY_WARM = register(
+    "registry-warm", "registry",
+    "no cutover was forced cold: every route's last cutover had zero "
+    "unwarmed ladder entries (require_warm=False leaves a recorded deficit)",
 )
 
 

@@ -22,6 +22,25 @@ class UnknownModelError(RavenError):
     """PREDICT references a model name absent from the registry."""
 
 
+class UnknownModelVersionError(UnknownModelError):
+    """A ``name@version`` reference names a version never published.
+
+    Subclasses :class:`UnknownModelError` so callers catching the model
+    family see both; the message distinguishes "no such model" from "model
+    exists, version doesn't"."""
+
+
+class RegistryStateError(RavenError):
+    """A model-lifecycle operation was attempted from an invalid state.
+
+    Raised by the :class:`~repro.serve.registry.ModelRegistry` when a
+    transition violates the ``published → warming → ready → live → retired``
+    state machine — e.g. cutting over to a version that is not warm
+    (``cutover(require_warm=True)`` with cold buckets outstanding), staging
+    a version whose scan columns are incompatible with the live route, or
+    retiring the live version."""
+
+
 class UnknownTableError(RavenError):
     """Query references a table absent from the database."""
 

@@ -503,3 +503,174 @@ class ArtifactStore:
                 except OSError:
                     pass
             self.stats.evictions += 1
+
+    # -- operator surface ----------------------------------------------------
+
+    def entries(self) -> list["StoreEntry"]:
+        """Typed listing of every complete entry, newest first.
+
+        The operator view behind ``python -m repro.exec.artifact_store
+        inspect``: one :class:`StoreEntry` per on-disk artifact with its
+        layer, key, size, age, and whether its compat header matches this
+        process (stale jax/backend entries show up as ``compat=False``
+        instead of silently wasting disk until eviction).
+        """
+        now = time.time()  # analysis: allow[wallclock-timing] — file mtimes
+        out: list[StoreEntry] = []
+        for d in self._entries():
+            meta = self._read_meta(d)
+            if meta is None:
+                continue
+            layer = "plan" if "plan_fingerprint" in meta else "stage"
+            if layer == "plan":
+                key = os.path.basename(d)
+                digest = meta.get("plan_fingerprint", "")
+            else:
+                key = os.path.basename(os.path.dirname(d))
+                digest = meta.get("env_digest", "")
+            try:
+                mtime = os.path.getmtime(os.path.join(d, _META))
+            except OSError:
+                mtime = now
+            out.append(StoreEntry(
+                layer=layer, key=key, digest=digest, path=d,
+                size_bytes=self._entry_bytes(d),
+                age_s=max(0.0, now - mtime),
+                compat=all(
+                    meta.get(k) == v for k, v in compat_header().items()
+                ),
+            ))
+        out.sort(key=lambda e: e.age_s)
+        return out
+
+    def prune(
+        self,
+        *,
+        max_age_s: Optional[float] = None,
+        max_bytes: Optional[int] = None,
+        dry_run: bool = False,
+    ) -> list["StoreEntry"]:
+        """Drop entries older than ``max_age_s`` and/or evict oldest-first
+        until the store fits in ``max_bytes``. Returns the victims (the
+        would-be victims under ``dry_run``, with nothing deleted)."""
+        entries = self.entries()  # newest first
+        victims: list[StoreEntry] = []
+        if max_age_s is not None:
+            victims.extend(e for e in entries if e.age_s > max_age_s)
+        if max_bytes is not None:
+            doomed = {e.path for e in victims}
+            total = sum(e.size_bytes for e in entries if e.path not in doomed)
+            # oldest first, but never the newest entry (mirrors _evict: one
+            # oversized artifact must not thrash the store)
+            for e in reversed(entries[1:]):
+                if total <= max_bytes:
+                    break
+                if e.path in doomed:
+                    continue
+                victims.append(e)
+                doomed.add(e.path)
+                total -= e.size_bytes
+        if not dry_run:
+            for e in victims:
+                shutil.rmtree(e.path, ignore_errors=True)
+                parent = os.path.dirname(e.path)
+                if os.path.basename(os.path.dirname(parent)) == _STAGES:
+                    try:
+                        os.rmdir(parent)
+                    except OSError:
+                        pass
+                self.stats.evictions += 1
+        return victims
+
+
+@dataclass(frozen=True)
+class StoreEntry:
+    """One on-disk artifact as the operator CLI sees it."""
+
+    layer: str       # "plan" | "stage"
+    key: str         # query fingerprint (plan) / stage fingerprint (stage)
+    digest: str      # plan fingerprint / env digest
+    path: str
+    size_bytes: int
+    age_s: float
+    compat: bool     # header matches this process's store/jax/backend
+
+
+def _fmt_bytes(n: int) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{n}B"
+        n /= 1024
+    return f"{n}B"  # pragma: no cover - unreachable
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    """``python -m repro.exec.artifact_store {inspect,prune}`` — operator
+    tooling for a store directory shared by serving processes."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.exec.artifact_store",
+        description="Inspect or prune a Raven plan-artifact store.",
+    )
+    ap.add_argument("--root", required=True, help="store directory")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    ins = sub.add_parser("inspect", help="list entries (newest first)")
+    ins.add_argument("--layer", choices=["plan", "stage"], default=None)
+    ins.add_argument("--fingerprint", default=None,
+                     help="only entries whose key starts with this prefix")
+    ins.add_argument("--min-bytes", type=int, default=0)
+    ins.add_argument("--max-age-s", type=float, default=None,
+                     help="only entries younger than this")
+    ins.add_argument("--json", action="store_true", dest="as_json")
+
+    pr = sub.add_parser("prune", help="delete old/oversized entries")
+    pr.add_argument("--max-age-s", type=float, default=None,
+                    help="drop entries older than this many seconds")
+    pr.add_argument("--max-bytes", type=int, default=None,
+                    help="evict oldest-first until the store fits")
+    pr.add_argument("--dry-run", action="store_true")
+
+    args = ap.parse_args(argv)
+    store = ArtifactStore(args.root)
+
+    if args.cmd == "inspect":
+        rows = store.entries()
+        if args.layer:
+            rows = [e for e in rows if e.layer == args.layer]
+        if args.fingerprint:
+            rows = [e for e in rows if e.key.startswith(args.fingerprint)]
+        if args.min_bytes:
+            rows = [e for e in rows if e.size_bytes >= args.min_bytes]
+        if args.max_age_s is not None:
+            rows = [e for e in rows if e.age_s <= args.max_age_s]
+        if args.as_json:
+            print(json.dumps([e.__dict__ for e in rows], indent=2))
+        else:
+            for e in rows:
+                flag = "" if e.compat else "  [incompatible]"
+                print(f"{e.layer:5s} {e.key[:16]:16s} {e.digest[:16]:16s} "
+                      f"{_fmt_bytes(e.size_bytes):>10s} "
+                      f"{e.age_s:8.0f}s{flag}")
+            print(f"-- {len(rows)} entries, "
+                  f"{_fmt_bytes(sum(e.size_bytes for e in rows))} total")
+        return 0
+
+    if args.max_age_s is None and args.max_bytes is None:
+        ap.error("prune needs --max-age-s and/or --max-bytes")
+    victims = store.prune(
+        max_age_s=args.max_age_s, max_bytes=args.max_bytes,
+        dry_run=args.dry_run,
+    )
+    verb = "would delete" if args.dry_run else "deleted"
+    for e in victims:
+        print(f"{verb} {e.layer} {e.key[:16]} "
+              f"({_fmt_bytes(e.size_bytes)}, {e.age_s:.0f}s old)")
+    print(f"-- {verb} {len(victims)} entries, "
+          f"{_fmt_bytes(sum(e.size_bytes for e in victims))}")
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via subprocess
+    raise SystemExit(main())

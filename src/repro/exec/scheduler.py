@@ -116,6 +116,16 @@ class Scheduler:
         with self._cv:
             return {n: q.depth for n, q in self._queues.items() if q.depth}
 
+    def hold(self):
+        """Context manager freezing group selection for an atomic routing
+        change (version cutover). Both the pump loop and ``drain()`` pop
+        groups under ``_cv`` but *dispatch outside it*, so while held no new
+        group can be popped — yet already-dispatched groups keep executing
+        and enqueues keep landing. The caller mutates routing inside the
+        ``with`` block; every group popped afterwards sees the new route.
+        """
+        return self._cv
+
     def snapshot(self) -> dict[str, Any]:
         with self._cv:
             return {

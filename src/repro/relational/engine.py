@@ -283,6 +283,17 @@ class CompiledPlan:
         """XLA stage tracings attributable to this compiled plan."""
         return self.graph.traces
 
+    @property
+    def specializations(self) -> int:
+        """Distinct per-stage bucket programs this plan holds, however they
+        arrived (fresh XLA traces *or* AOT disk loads). ``traces`` alone
+        undercounts warm coverage when the artifact store preloaded shapes;
+        the registry's warm gate compares this before/after a cutover."""
+        return sum(
+            st.traces + st.disk_loads for st in self.graph.stages
+            if st.kind == "pure"
+        )
+
     def warm_start(self, store: Optional[Any] = None) -> int:
         """Preload every on-disk exported program for this plan's stages.
 

@@ -4,10 +4,13 @@ from repro.serve.engine import Request, ServeEngine
 from repro.serve.query_server import (
     PredictionQueryServer,
     QueryRequest,
+    QueryRoute,
     RegisteredQuery,
     ServerStats,
+    VersionStats,
     row_bucket,
 )
+from repro.serve.registry import ModelRegistry, ModelVersion
 
 __all__ = [
     "Request",
@@ -20,4 +23,8 @@ __all__ = [
     "RegisteredQuery",
     "ServerStats",
     "row_bucket",
+    "QueryRoute",
+    "VersionStats",
+    "ModelRegistry",
+    "ModelVersion",
 ]

@@ -31,6 +31,22 @@ call. ``PredictionQueryServer`` closes that gap on top of the StageGraph IR:
 
 Without a pump the server stays synchronous — ``submit`` enqueues, ``flush``
 drains — so tests and examples can drive it deterministically.
+
+**Versioned routing** (the model-lifecycle layer): every registration owns a
+:class:`QueryRoute` that can hold *several* :class:`RegisteredQuery`
+versions of the same serve name — one live, others staged. ``stage_version``
+compiles an incoming version without touching routing, ``warm_version``
+replays the route's observed bucket ladder through it (so its programs are
+compiled *before* any traffic reaches them), and ``cutover`` atomically
+swaps the routed version under the scheduler lock: groups already dispatched
+hold their version's registration and complete on it, groups popped after
+the swap run the new one — zero dropped requests, zero re-traces when the
+incoming version is warm. ``set_shadow`` mirrors every coalesced group
+through a staged version whose results are diffed and counted but never
+returned; ``set_split`` routes a deterministic percentage of groups to
+staged versions (smooth weighted round-robin, per-version stats). The
+route-level token keeps submit handles valid across cutovers — only a true
+re-``register`` (new plan under the same name) invalidates them.
 """
 from __future__ import annotations
 
@@ -56,12 +72,15 @@ from repro.core.ir import PredictionQuery
 from repro.core.optimizer import OptimizationReport, OptimizerOptions, RavenOptimizer
 from repro.errors import (
     RavenError,
+    RegistryStateError,
     StaleQueryError,
+    UnknownModelVersionError,
     UnknownQueryError,
     check_params,
 )
 from repro.exec.pipeline import PipelineExecutor
 from repro.exec.scheduler import Scheduler
+from repro.exec.stages import seg_bucket
 from repro.relational.engine import (
     Aggregate,
     CompiledPlan,
@@ -107,6 +126,7 @@ class QueryRequest:
     query: str
     columns: dict[str, np.ndarray]
     n_rows: int
+    served_by: str = ""  # version label of the registration that served it
     result: Optional[dict[str, np.ndarray]] = None
     done: bool = False
     error: Optional[BaseException] = None  # execution failure, re-raised by wait()
@@ -156,8 +176,28 @@ class ServerStats:
     flushes: int = 0             # dispatched request groups
     rows_in: int = 0
     rows_padded: int = 0
+    cutovers: int = 0            # atomic version swaps completed
+    shadow_mirrored_groups: int = 0  # groups mirrored to a shadow version
+    warm_replayed_buckets: int = 0   # ladder entries replayed by warm_version
 
     def snapshot(self) -> dict[str, int]:
+        return dict(self.__dict__)
+
+
+@dataclass
+class VersionStats:
+    """Per-version serving counters, kept on the :class:`QueryRoute`."""
+
+    groups: int = 0              # dispatched groups this version executed
+    requests: int = 0
+    rows: int = 0
+    shadow_groups: int = 0       # mirrored groups this version scored
+    shadow_rows: int = 0         # mirrored rows compared against the primary
+    shadow_diff_rows: int = 0    # compared rows that were not bitwise equal
+    shadow_max_abs_diff: float = 0.0  # largest numeric divergence observed
+    shadow_errors: int = 0       # mirrored executions that raised (contained)
+
+    def snapshot(self) -> dict[str, Any]:
         return dict(self.__dict__)
 
 
@@ -176,6 +216,12 @@ class RegisteredQuery:
     has_aggregate: bool
     param_names: frozenset[str] = frozenset()
     params: dict[str, Any] = field(default_factory=dict)
+    version_label: str = "v1"     # which model version this registration runs
+    donate: bool = True           # donate padded entry buffers to XLA
+    warmed: bool = False          # warm_version covered the route ladder
+    # (bucket, seg_slots) entries this registration has executed or replayed
+    # — the per-version warm coverage the cutover gate checks
+    warmed_ladder: set = field(default_factory=set)
 
     @property
     def recompiles(self) -> int:
@@ -189,6 +235,63 @@ class RegisteredQuery:
         needed. False once a host boundary (compaction) or an aggregate
         (folding) breaks the alignment."""
         return self.compiled.is_pure and not self.has_aggregate
+
+
+@dataclass
+class QueryRoute:
+    """Versioned routing state for one serve name.
+
+    The ``token`` lives here, not on any one registration: submit handles
+    stay valid across cutovers (the whole point of a hot swap) and only a
+    fresh ``register`` under the same name — a genuinely different query —
+    mints a new token and stales old handles. ``ladder`` records every
+    (row bucket, segment-slot bucket) combination this route has executed;
+    it is exactly what ``warm_version`` must replay through an incoming
+    version for a zero-retrace cutover.
+    """
+
+    name: str
+    token: str
+    live: str                                     # live version label
+    versions: dict[str, RegisteredQuery] = field(default_factory=dict)
+    shadow: Optional[str] = None                  # mirrored version label
+    split: dict[str, float] = field(default_factory=dict)  # label -> fraction
+    stats: dict[str, VersionStats] = field(default_factory=dict)
+    ladder: set = field(default_factory=set)      # (bucket, seg_slots) seen
+    # columns a submitted batch must carry: the union of scan columns over
+    # every version that can currently receive traffic (live, shadow, split)
+    required: set = field(default_factory=set)
+    cutovers: int = 0
+    # entries the last cutover's incoming version had NOT warmed (nonzero
+    # only when forced with require_warm=False); the registry-warm analysis
+    # rule asserts this stayed zero
+    last_cutover_deficit: int = 0
+    _wrr: dict[str, float] = field(default_factory=dict)  # smooth-WRR credit
+
+    def version_stats(self, label: str) -> VersionStats:
+        st = self.stats.get(label)
+        if st is None:
+            st = self.stats[label] = VersionStats()
+        return st
+
+    def snapshot(self) -> dict[str, Any]:
+        return {
+            "live": self.live,
+            "shadow": self.shadow,
+            "split": dict(self.split),
+            "cutovers": self.cutovers,
+            "last_cutover_deficit": self.last_cutover_deficit,
+            "ladder": sorted(self.ladder),
+            "versions": {
+                label: {
+                    "plan_fingerprint": reg.compiled.fingerprint,
+                    "warmed": reg.warmed,
+                    "traces": reg.compiled.traces,
+                    **self.version_stats(label).snapshot(),
+                }
+                for label, reg in self.versions.items()
+            },
+        }
 
 
 class PredictionQueryServer:
@@ -215,7 +318,8 @@ class PredictionQueryServer:
         # (the baseline the mixed-workload benchmark measures against)
         self.pipelined = pipelined
         self.stats = ServerStats()
-        self.queries: dict[str, RegisteredQuery] = {}
+        self.queries: dict[str, RegisteredQuery] = {}  # live registrations
+        self.routes: dict[str, QueryRoute] = {}        # versioned routing
         self.executor = PipelineExecutor(workers=boundary_workers)
         self.scheduler = Scheduler(
             self._dispatch_group,
@@ -244,6 +348,8 @@ class PredictionQueryServer:
         max_latency_ms: Optional[float] = None,
         max_pending: Optional[int] = None,
         max_coalesce: Optional[int] = None,
+        version_label: str = "v1",
+        donate: bool = True,
     ) -> RegisteredQuery:
         """Optimize + compile ``query`` and make it servable under ``name``.
 
@@ -262,7 +368,51 @@ class PredictionQueryServer:
         :class:`~repro.errors.ServerOverloadedError`), ``max_coalesce`` the
         most rows one dispatched group may take (so a bulk backlog cannot
         monopolize a flush).
+
+        ``version_label`` names this registration in the versioned route
+        created for ``name`` (further versions arrive via
+        :meth:`stage_version`); ``donate=False`` keeps the padded entry
+        buffers un-donated for this query. Re-registering an existing name
+        replaces its whole route and mints a new token — outstanding submit
+        handles go stale, which is the intended guard against serving a
+        structurally different query through an old handle.
         """
+        token = f"route#{next(self._reg_serial)}"
+        reg = self._build_registration(
+            name, query, database, fact_table,
+            optimized=optimized, params=params, token=token,
+            version_label=version_label, donate=donate,
+        )
+        route = QueryRoute(name=name, token=token, live=version_label)
+        route.versions[version_label] = reg
+        route.required = set(reg.scan_columns)
+        with self._lock:
+            self.routes[name] = route
+            self.queries[name] = reg
+        self.scheduler.configure(
+            name, max_latency_ms=max_latency_ms, max_pending=max_pending,
+            max_coalesce=max_coalesce,
+        )
+        with self._lock:
+            self.stats.queries_registered += 1
+        return reg
+
+    def _build_registration(
+        self,
+        name: str,
+        query: PredictionQuery,
+        database: dict[str, dict[str, np.ndarray]],
+        fact_table: Optional[str] = None,
+        *,
+        optimized: Optional[tuple[PhysicalPlan, OptimizationReport]] = None,
+        params: Optional[dict[str, Any]] = None,
+        token: str = "",
+        version_label: str = "v1",
+        donate: bool = True,
+    ) -> RegisteredQuery:
+        """Optimize/compile/verify/warm-start one version's registration
+        (shared by :meth:`register` and :meth:`stage_version`); installs no
+        routing state."""
         if optimized is not None:
             # externally optimized (the session's PreparedQuery path): the
             # caller's optimizer options may differ from this server's, so
@@ -328,13 +478,14 @@ class PredictionQueryServer:
             for t, cols in database.items()
             if t != fact_table
         }
-        reg = RegisteredQuery(
+        return RegisteredQuery(
             name=name,
             # plan fingerprints are deliberately invariant under :param
             # values (rebinding must not recompile), so a handle guard keyed
             # on them alone would miss a re-registration that only changed
-            # bound params; the per-registration serial closes that hole
-            token=f"{compiled.fingerprint[:16]}#{next(self._reg_serial)}",
+            # bound params; the route-level serial token closes that hole —
+            # and, unlike a per-registration token, survives version cutovers
+            token=token,
             query_fingerprint=qfp,
             plan=plan,
             report=report,
@@ -342,38 +493,277 @@ class PredictionQueryServer:
             database=db,
             fact_table=fact_table,
             scan_columns=scan_columns,
+            # the *full* registered fact schema, not just this plan's scan
+            # columns: submit normalizes every provided fact column against
+            # it, so a staged version whose optimizer pruned a different
+            # subset (a retrained tree reads different splits; a model-family
+            # change reads different features) can serve the same queue
             fact_dtypes={
                 c: canonical_dtype(np.asarray(database[fact_table][c]).dtype)
-                for c in scan_columns
+                for c in database[fact_table]
             },
             has_aggregate=any(isinstance(p, Aggregate) for p in walk_plan(plan)),
             param_names=param_names,
             params={k: jnp.asarray(v, jnp.float32) for k, v in bound.items()},
+            version_label=version_label,
+            donate=donate,
         )
-        self.queries[name] = reg
-        self.scheduler.configure(
-            name, max_latency_ms=max_latency_ms, max_pending=max_pending,
-            max_coalesce=max_coalesce,
-        )
-        with self._lock:
-            self.stats.queries_registered += 1
-        return reg
 
     def rebind(self, name: str, params: dict[str, Any]) -> RegisteredQuery:
         """Re-bind ``:param`` values for a registered query.
 
         Fingerprint-stable: the optimized plan, compiled stages, and shape
         buckets are untouched — the new values simply flow into the next
-        execution as runtime inputs (zero new XLA traces).
+        execution as runtime inputs (zero new XLA traces). Applied to
+        *every* version on the route: parameter values are plan-invariant,
+        so a staged or shadow version must score the same binding the live
+        one answers with.
         """
         reg = self._registered(name)
         check_params(
             reg.param_names, params, require_all=False, context=f"query '{name}'"
         )
-        reg.params.update(
-            {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
-        )
+        jvals = {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
+        with self._lock:
+            route = self.routes.get(name)
+            regs = list(route.versions.values()) if route is not None else [reg]
+        for r in regs:
+            r.params.update(jvals)
         return reg
+
+    # -- model-version lifecycle ---------------------------------------------
+
+    def _route(self, name: str) -> QueryRoute:
+        route = self.routes.get(name)
+        if route is None:
+            raise UnknownQueryError(
+                f"no query registered under '{name}' — registered: "
+                f"{sorted(self.routes) or '(none)'}"
+            )
+        return route
+
+    def _version(self, route: QueryRoute, label: str) -> RegisteredQuery:
+        reg = route.versions.get(label)
+        if reg is None:
+            raise UnknownModelVersionError(
+                f"route '{route.name}' has no staged version {label!r} — "
+                f"staged: {sorted(route.versions)}"
+            )
+        return reg
+
+    @staticmethod
+    def _refresh_required(route: QueryRoute) -> None:
+        """Recompute the submit-time required column set (caller holds the
+        server lock): the union over every version currently routable —
+        live, shadow, and split targets."""
+        labels = {route.live, *route.split}
+        if route.shadow is not None:
+            labels.add(route.shadow)
+        route.required = {
+            c for lb in labels for c in route.versions[lb].scan_columns
+        }
+
+    def stage_version(
+        self,
+        name: str,
+        query: PredictionQuery,
+        database: dict[str, dict[str, np.ndarray]],
+        *,
+        version_label: str,
+        optimized: Optional[tuple[PhysicalPlan, OptimizationReport]] = None,
+        params: Optional[dict[str, Any]] = None,
+    ) -> RegisteredQuery:
+        """Compile an incoming version for ``name`` without touching routing.
+
+        The staged registration shares the route's token and fact table;
+        its scan columns may differ from the live version's (a retrained
+        model reads different features) but must stay inside the fact
+        schema the route was registered over, with identical canonical
+        dtypes — submitted batches are validated and normalized against
+        that schema, so every routable version can serve the same queue.
+        When an artifact store is active the compiled stages warm-start
+        from disk here; live bucket coverage comes from
+        :meth:`warm_version`.
+        """
+        route = self._route(name)
+        live = self._version(route, route.live)
+        reg = self._build_registration(
+            name, query, database, live.fact_table,
+            optimized=optimized,
+            params=params if params is not None else dict(live.params),
+            token=route.token, version_label=version_label,
+            donate=live.donate,
+        )
+        outside = sorted(set(reg.scan_columns) - set(live.fact_dtypes))
+        if outside:
+            raise RegistryStateError(
+                f"version {version_label!r} of '{name}' reads columns "
+                f"{outside} outside the fact schema the route was "
+                f"registered over — re-serve the query instead"
+            )
+        drift = {
+            c: (str(reg.fact_dtypes[c]), str(live.fact_dtypes[c]))
+            for c in reg.scan_columns
+            if reg.fact_dtypes[c] != live.fact_dtypes[c]
+        }
+        if drift:
+            raise RegistryStateError(
+                f"version {version_label!r} of '{name}' disagrees with the "
+                f"route's registered submit dtypes: {drift}"
+            )
+        with self._lock:
+            route.versions[version_label] = reg
+            route.version_stats(version_label)  # materialize the counter row
+        return reg
+
+    def warm_version(self, name: str, version_label: str) -> int:
+        """Replay the route's observed bucket ladder through a staged
+        version so every (row bucket, segment-slot) program it will serve is
+        compiled *now*, off the request path — the zero-retrace guarantee an
+        atomic cutover depends on. Returns the number of ladder entries
+        replayed; marks the version warm.
+
+        Replay goes through the exact ``_padded_kwargs`` path real traffic
+        takes (zero-filled rows, all-valid mask), so the jit specializations
+        it creates are byte-identical to the ones post-cutover traffic
+        requests — and, with an artifact store active, each replayed bucket
+        is AOT-exported for the next process too.
+        """
+        route = self._route(name)
+        reg = self._version(route, version_label)
+        with self._lock:
+            ladder = set(route.ladder) or {(self.min_bucket, 0)}
+            pending = sorted(ladder - reg.warmed_ladder)
+        replayed = 0
+        for bucket, seg_slots in pending:
+            fact = {
+                c: np.zeros(bucket, dtype=reg.fact_dtypes[c])
+                for c in reg.scan_columns
+            }
+            segments = None
+            if seg_slots:
+                segments = (np.zeros(bucket, dtype=np.int32), seg_slots)
+            self._execute_padded(reg, fact, bucket, segments=segments)
+            replayed += 1
+        with self._lock:
+            reg.warmed = True
+            self.stats.warm_replayed_buckets += replayed
+        return replayed
+
+    def set_shadow(
+        self, name: str, version_label: Optional[str]
+    ) -> None:
+        """Mirror every coalesced group for ``name`` through a staged
+        version (None disables). The shadow scores the same padded batch on
+        a boundary-pool thread, its results are diffed against the primary's
+        and counted in the route's per-version stats — and are never
+        attached to any request."""
+        route = self._route(name)
+        if version_label is not None:
+            self._version(route, version_label)
+        with self._lock:
+            route.shadow = version_label
+            self._refresh_required(route)
+
+    def set_split(self, name: str, split: dict[str, float]) -> None:
+        """Route a fraction of dispatched groups to staged versions.
+
+        ``split`` maps version labels to fractions in [0, 1); the live
+        version serves the remainder. Selection is smooth weighted
+        round-robin — deterministic, no RNG — so a 0.25 split sends exactly
+        one group in four to the staged version. Pass ``{}`` to clear."""
+        route = self._route(name)
+        total = 0.0
+        for label, frac in split.items():
+            self._version(route, label)
+            if not 0.0 <= frac < 1.0:
+                raise RegistryStateError(
+                    f"split fraction for {label!r} must be in [0, 1), "
+                    f"got {frac}"
+                )
+            if label == route.live:
+                raise RegistryStateError(
+                    f"{label!r} is the live version — it already serves the "
+                    f"unsplit remainder"
+                )
+            total += frac
+        if total >= 1.0:
+            raise RegistryStateError(
+                f"split fractions sum to {total} — the live version must "
+                f"keep a nonzero remainder"
+            )
+        with self._lock:
+            route.split = dict(split)
+            route._wrr.clear()
+            self._refresh_required(route)
+
+    def cutover(
+        self, name: str, version_label: str, *, require_warm: bool = True
+    ) -> RegisteredQuery:
+        """Atomically make a staged version the live one.
+
+        The swap happens under the scheduler lock: no group can be popped
+        while routing changes, groups already dispatched hold their
+        version's registration and complete on it (zero dropped requests),
+        and every group popped afterwards runs the incoming version. With
+        ``require_warm`` (default) the incoming version must have replayed
+        the route's full bucket ladder (:meth:`warm_version`), so the swap
+        also re-traces nothing; ``require_warm=False`` forces the swap and
+        records the warm deficit on the route (the ``registry-warm``
+        analysis rule flags it). The route token is untouched — outstanding
+        submit handles keep working across the swap.
+        """
+        route = self._route(name)
+        incoming = self._version(route, version_label)
+        with self.scheduler.hold():
+            with self._lock:
+                deficit = len(route.ladder - incoming.warmed_ladder)
+                if require_warm and (deficit or not incoming.warmed):
+                    raise RegistryStateError(
+                        f"version {version_label!r} of '{name}' is not warm "
+                        f"({deficit} of {len(route.ladder)} bucket(s) cold) "
+                        f"— call warm_version() first, or force with "
+                        f"require_warm=False"
+                    )
+                route.last_cutover_deficit = deficit
+                route.live = version_label
+                route.split.pop(version_label, None)
+                route._wrr.clear()
+                if route.shadow == version_label:
+                    route.shadow = None
+                route.cutovers += 1
+                self._refresh_required(route)
+                self.queries[name] = incoming
+                self.stats.cutovers += 1
+        return incoming
+
+    def retire_version(self, name: str, version_label: str) -> None:
+        """Drop a non-live staged version from the route (its compiled plan
+        stays in the engine cache until evicted). Refuses to retire the
+        live version or one still designated shadow / holding split
+        traffic."""
+        route = self._route(name)
+        self._version(route, version_label)
+        with self._lock:
+            if version_label == route.live:
+                raise RegistryStateError(
+                    f"cannot retire live version {version_label!r} of "
+                    f"'{name}' — cut over to another version first"
+                )
+            if route.shadow == version_label or version_label in route.split:
+                raise RegistryStateError(
+                    f"version {version_label!r} of '{name}' still receives "
+                    f"shadow/split traffic — clear that first"
+                )
+            del route.versions[version_label]
+            self._refresh_required(route)
+
+    def route_snapshot(self, name: str) -> dict[str, Any]:
+        """One route's versioned state (live/shadow/split, ladder,
+        per-version counters) — the operator-facing stats surface."""
+        route = self._route(name)
+        with self._lock:
+            return route.snapshot()
 
     def _registered(self, name: str) -> RegisteredQuery:
         reg = self.queries.get(name)
@@ -445,14 +835,23 @@ class PredictionQueryServer:
                 f"{expect_token}) — re-serve the prepared query to refresh "
                 f"the handle"
             )
-        missing = [c for c in reg.scan_columns if c not in columns]
+        with self._lock:
+            route = self.routes.get(name)
+            required = (
+                set(route.required) if route is not None else set(reg.scan_columns)
+            )
+        missing = [c for c in sorted(required) if c not in columns]
         if missing:
             raise KeyError(f"batch for '{name}' missing columns {missing}")
-        # normalize dtypes to the registered schema so every bucket-sized
-        # batch maps onto the same compiled program
+        # normalize dtypes to the registered fact schema so every bucket-sized
+        # batch maps onto the same compiled program. Keep every schema column
+        # the caller provided (not just the live version's scan set): shadow
+        # and split versions of the same route may read columns the live plan
+        # pruned away, and the group must carry enough for all of them.
         cols = {
-            c: np.asarray(columns[c]).astype(reg.fact_dtypes[c], copy=False)
-            for c in reg.scan_columns
+            c: np.asarray(v).astype(reg.fact_dtypes[c], copy=False)
+            for c, v in columns.items()
+            if c in reg.fact_dtypes
         }
         lengths = {len(v) for v in cols.values()}
         if len(lengths) > 1:
@@ -495,6 +894,10 @@ class PredictionQueryServer:
         done: Future = Future()
         try:
             reg = self._registered(name)
+            route = self.routes.get(name)
+            shadow_reg = None
+            if route is not None:
+                reg, shadow_reg = self._pick_version(route)
             if asserts_enabled():
                 runtime_assert(len(group) > 0, "dispatched an empty group")
                 runtime_assert(
@@ -510,9 +913,27 @@ class PredictionQueryServer:
             with self._lock:
                 self.stats.flushes += 1
                 self.stats.requests_served += len(group)
+                if route is not None:
+                    st = route.version_stats(reg.version_label)
+                    st.groups += 1
+                    st.requests += len(group)
+                    st.rows += sum(r.n_rows for r in group)
+            for r in group:
+                r.served_by = reg.version_label
+
+            def _mirror() -> None:
+                # score the same group on the shadow version, off the
+                # dispatch path; diffing waits on `done`, so the mirror can
+                # never race (or touch) the primary's request results
+                if shadow_reg is not None:
+                    self.executor.pool.submit(
+                        self._mirror_shadow, route, shadow_reg, group, done
+                    )
+
             if not self.pipelined:
                 self._run_group(reg, group)
                 done.set_result(group)
+                _mirror()
                 return done
             n = sum(r.n_rows for r in group)
             if reg.sliceable and n > self.max_bucket:
@@ -546,11 +967,120 @@ class PredictionQueryServer:
                     _done.set_exception(e)
 
             gfut.add_done_callback(_complete)
+            _mirror()
         except BaseException as e:  # noqa: BLE001
             self._fail_group(group, e)
             if not done.done():
                 done.set_exception(e)
         return done
+
+    def _pick_version(
+        self, route: QueryRoute
+    ) -> tuple[RegisteredQuery, Optional[RegisteredQuery]]:
+        """Choose the version serving this group, plus the shadow (if set).
+
+        Split traffic uses smooth weighted round-robin — every label's
+        credit grows by its weight each pick, the largest credit wins and
+        pays back the total — so the selection is deterministic (no RNG) and
+        a 0.25 split sends exactly every fourth group to the staged version,
+        interleaved rather than bursty.
+        """
+        with self._lock:
+            shadow_reg = (
+                route.versions.get(route.shadow) if route.shadow else None
+            )
+            if not route.split:
+                return route.versions[route.live], shadow_reg
+            weights = dict(route.split)
+            weights[route.live] = 1.0 - sum(weights.values())
+            for label, w in weights.items():
+                route._wrr[label] = route._wrr.get(label, 0.0) + w
+            pick = max(
+                route._wrr,
+                key=lambda lb: (route._wrr[lb], lb == route.live, lb),
+            )
+            route._wrr[pick] -= sum(weights.values())
+            return route.versions[pick], shadow_reg
+
+    def _mirror_shadow(
+        self,
+        route: QueryRoute,
+        shadow_reg: RegisteredQuery,
+        group: list[QueryRequest],
+        primary_done: Future,
+    ) -> None:
+        """Score a mirrored copy of one coalesced group on the shadow
+        version (boundary-pool thread) and diff it against what the primary
+        actually returned. Builds its own concatenated batch — the primary
+        may donate its padded buffers — and never touches request state: a
+        shadow failure is counted on the route, not raised, and shadow
+        results are unreachable from any response."""
+        label = shadow_reg.version_label
+        try:
+            n = sum(r.n_rows for r in group)
+            if len(group) == 1:
+                cat = dict(group[0].columns)
+            else:
+                cat = {
+                    c: np.concatenate([r.columns[c] for r in group])
+                    for c in shadow_reg.scan_columns
+                }
+            segments = None
+            if len(group) > 1 and not shadow_reg.sliceable:
+                seg_ids = np.repeat(
+                    np.arange(len(group), dtype=np.int32),
+                    [r.n_rows for r in group],
+                )
+                segments = (seg_ids, len(group))
+            res = self._execute_padded(shadow_reg, cat, n, segments=segments)
+            shadow_out = self._split_results(shadow_reg, group, res, n)
+            primary_done.result(timeout=60.0)
+            diff_rows, max_diff, rows = self._diff_shadow(group, shadow_out)
+            with self._lock:
+                st = route.version_stats(label)
+                st.shadow_groups += 1
+                st.shadow_rows += rows
+                st.shadow_diff_rows += diff_rows
+                st.shadow_max_abs_diff = max(st.shadow_max_abs_diff, max_diff)
+                self.stats.shadow_mirrored_groups += 1
+        except BaseException:  # noqa: BLE001 — contained, counted, never raised
+            with self._lock:
+                route.version_stats(label).shadow_errors += 1
+
+    @staticmethod
+    def _diff_shadow(
+        group: list[QueryRequest],
+        shadow_out: list[dict[str, np.ndarray]],
+    ) -> tuple[int, float, int]:
+        """Compare shadow per-request results against the primary's returned
+        ones: (rows not bitwise-equal, largest numeric divergence, rows
+        compared). A column-set or row-count mismatch counts every primary
+        row as differing — a shape drift is the loudest possible diff."""
+        diff_rows, max_diff, rows = 0, 0.0, 0
+        for req, sh in zip(group, shadow_out):
+            pr = req.result or {}
+            n_pr = len(next(iter(pr.values()))) if pr else 0
+            rows += n_pr
+            n_sh = len(next(iter(sh.values()))) if sh else 0
+            if sorted(pr) != sorted(sh) or n_pr != n_sh:
+                diff_rows += n_pr
+                continue
+            row_diff = np.zeros(n_pr, dtype=bool)
+            for k, pv in pr.items():
+                sv = np.asarray(sh[k])
+                pv = np.asarray(pv)
+                neq = pv != sv
+                if pv.dtype.kind == "f":
+                    neq &= ~(np.isnan(pv) & np.isnan(sv))
+                    d = np.abs(
+                        np.nan_to_num(pv.astype(np.float64))
+                        - np.nan_to_num(sv.astype(np.float64))
+                    )
+                    if d.size:
+                        max_diff = max(max_diff, float(d.max()))
+                row_diff |= neq.reshape(n_pr, -1).any(axis=1)
+            diff_rows += int(row_diff.sum())
+        return diff_rows, max_diff, rows
 
     def _fail_group(self, group: list[QueryRequest], e: BaseException) -> None:
         """Contain the blast radius: fail this group's requests (waiters
@@ -617,6 +1147,11 @@ class PredictionQueryServer:
 
         schema = tuple((c, str(reg.fact_dtypes[c])) for c in reg.scan_columns)
         key = (reg.compiled.fingerprint, schema, bucket)
+        # (row bucket, segment-slot bucket) is exactly the jit-specialization
+        # key (segment *count* is a dynamic scalar): recording it on the
+        # route is what lets warm_version replay an incoming version into
+        # full coverage before a cutover
+        entry = (bucket, seg_bucket(segments[1]) if segments is not None else 0)
         with self._lock:
             if key in self._seen_buckets:
                 self.stats.bucket_hits += 1
@@ -625,6 +1160,10 @@ class PredictionQueryServer:
                 self._seen_buckets.add(key)
             self.stats.batches_executed += 1
             self.stats.rows_padded += bucket - n
+            reg.warmed_ladder.add(entry)
+            route = self.routes.get(reg.name)
+            if route is not None:
+                route.ladder.add(entry)
 
         def track_mid(stage_index: int, b: int) -> None:
             mid_key = (reg.compiled.fingerprint, stage_index, b)
@@ -648,8 +1187,9 @@ class PredictionQueryServer:
             ),
             "on_mid_bucket": track_mid,
             # the padded fact spine is freshly built per group: safe to
-            # donate to XLA on backends that support aliasing
-            "donate": frozenset((reg.fact_table,)),
+            # donate to XLA on backends that support aliasing (unless the
+            # registration opted out via ServeOptions(donate=False))
+            "donate": frozenset((reg.fact_table,)) if reg.donate else frozenset(),
         }
 
     def _execute_padded(
@@ -697,13 +1237,56 @@ class PredictionQueryServer:
     ) -> None:
         """Output rows align 1:1 with the fact spine: slice each request's
         span, then compact by its validity slice."""
-        off = 0
+        for r, out in zip(group, self._positional_results(group, cols, valid)):
+            r.result = out
+            self._finish(r)
+
+    @staticmethod
+    def _positional_results(
+        group: list[QueryRequest],
+        cols: dict[str, np.ndarray],
+        valid: np.ndarray,
+    ) -> list[dict[str, np.ndarray]]:
+        out, off = [], 0
         for r in group:
             sl = slice(off, off + r.n_rows)
             m = valid[sl]
-            r.result = {k: v[sl][m] for k, v in cols.items()}
-            self._finish(r)
+            out.append({k: v[sl][m] for k, v in cols.items()})
             off += r.n_rows
+        return out
+
+    def _split_results(
+        self,
+        reg: RegisteredQuery,
+        group: list[QueryRequest],
+        res,
+        n: int,
+    ) -> list[dict[str, np.ndarray]]:
+        """Split one executed group's table into per-request column dicts —
+        pure (no request mutation), shared by the primary finish path and
+        the shadow diff path."""
+        if reg.sliceable:
+            cols = {
+                k: np.asarray(v)[:n] for k, v in res.table.columns.items()
+            }
+            valid = np.asarray(res.table.valid)[:n]
+            return self._positional_results(group, cols, valid)
+        if len(group) == 1:
+            # a lone host-boundary/aggregate request: no splitting needed
+            return [res.table.to_numpy(compact=True)]
+        cols = {k: np.asarray(v) for k, v in res.table.columns.items()}
+        valid = np.asarray(res.table.valid)
+        if reg.has_aggregate:
+            # segmented fold: output row i belongs to request i
+            return [
+                {k: v[i:i + 1] for k, v in cols.items()}
+                for i in range(len(group))
+            ]
+        seg = np.asarray(res.seg)
+        return [
+            {k: v[valid & (seg == i)] for k, v in cols.items()}
+            for i in range(len(group))
+        ]
 
     def _split_group(
         self,
@@ -715,31 +1298,9 @@ class PredictionQueryServer:
         """Split one executed group's result back per request and finish
         them. Runs on whichever thread completed the group (the dispatching
         thread for pure graphs, a boundary worker otherwise)."""
-        if reg.sliceable:
-            cols = {
-                k: np.asarray(v)[:n] for k, v in res.table.columns.items()
-            }
-            valid = np.asarray(res.table.valid)[:n]
-            self._positional_split(group, cols, valid)
-        elif len(group) == 1:
-            # a lone host-boundary/aggregate request: no splitting needed
-            req = group[0]
-            req.result = res.table.to_numpy(compact=True)
-            self._finish(req)
-        else:
-            cols = {k: np.asarray(v) for k, v in res.table.columns.items()}
-            valid = np.asarray(res.table.valid)
-            if reg.has_aggregate:
-                # segmented fold: output row i belongs to request i
-                for i, r in enumerate(group):
-                    r.result = {k: v[i:i + 1] for k, v in cols.items()}
-                    self._finish(r)
-            else:
-                seg = np.asarray(res.seg)
-                for i, r in enumerate(group):
-                    m = valid & (seg == i)
-                    r.result = {k: v[m] for k, v in cols.items()}
-                    self._finish(r)
+        for r, out in zip(group, self._split_results(reg, group, res, n)):
+            r.result = out
+            self._finish(r)
 
     def _run_group(self, reg: RegisteredQuery, group: list[QueryRequest]) -> None:
         """Serial group execution (the ``pipelined=False`` baseline, and the
@@ -769,15 +1330,28 @@ class PredictionQueryServer:
     # -- introspection --------------------------------------------------------
 
     def recompiles(self) -> int:
-        """Total XLA stage compiles across all registered queries."""
-        return sum(r.compiled.traces for r in self.queries.values())
+        """Total XLA stage compiles across every registered version (staged
+        and shadow versions included — a warm cutover must not move this)."""
+        with self._lock:
+            regs = {
+                id(r): r
+                for route in self.routes.values()
+                for r in route.versions.values()
+            }
+            for r in self.queries.values():
+                regs.setdefault(id(r), r)
+        return sum(r.compiled.traces for r in regs.values())
 
     def stats_snapshot(self) -> dict[str, Any]:
-        """Server counters merged with the scheduler's queue gauges and the
-        pipelined executor's overlap gauges (what ``db.cache_stats()``
-        surfaces under ``"server"``)."""
+        """Server counters merged with the scheduler's queue gauges, the
+        pipelined executor's overlap gauges, and per-route version state
+        (what ``db.cache_stats()`` surfaces under ``"server"``)."""
         out = self.stats.snapshot()
         out.update(self.scheduler.snapshot())
         out["queue_depths"] = self.scheduler.depths()
         out["pipeline"] = self.executor.snapshot()
+        with self._lock:
+            out["routes"] = {
+                name: route.snapshot() for name, route in self.routes.items()
+            }
         return out

@@ -1,0 +1,471 @@
+"""Versioned model lifecycle: publish → warm → shadow/split → cutover.
+
+Serving froze one model per registration: shipping model v2 meant
+re-registering, which mints a new token and stales every outstanding
+handle (:class:`~repro.errors.StaleQueryError`) — correct for a
+*different query*, hostile for *the same query with a newer model*. The
+:class:`ModelRegistry` is the production story on top of the machinery
+that already exists — content fingerprints, the artifact store's warm
+starts, and the server's versioned :class:`~repro.serve.query_server.QueryRoute`:
+
+    db = raven.connect(tables, stats="auto")
+    v1 = db.models.publish("risk", pipe)          # version handle (live)
+    prep = db.sql("... PREDICT(model='risk' ...)").prepare().serve("q")
+
+    v2 = db.models.publish("risk", pipe2)         # staged + warm-compiled
+    v2.wait_ready()                               #   (background by default)
+    db.models.shadow("risk", 2)                   # mirrored, diffed, counted
+    db.models.split("risk", {2: 0.25})            # every 4th group on v2
+    db.models.cutover("risk", 2)                  # atomic: zero dropped,
+                                                  #   zero re-traced requests
+    db.models.retire("risk", 1)
+
+Every version moves through an explicit state machine — ``published →
+warming → ready → live → retired`` — whose recorded history the
+``registry-state`` analysis rule replays. Publishing onto a model with
+served routes stages the new version onto each route (same query IR,
+re-optimized for the new pipeline — new weights are a new fingerprint,
+so plan/stage caches never collide) and replays the route's observed
+bucket ladder through it, so by ``ready`` the incoming version holds a
+compiled program for every shape live traffic uses.
+
+``PREDICT(model=...)`` references resolve through one documented path,
+:meth:`ModelRegistry.resolve`:
+
+    ``"name"``          the live version (what production traffic gets)
+    ``"name@2"``        that exact published version
+    ``"name@latest"``   the newest published version
+    ``"name@live"``     explicit spelling of the default
+    ``"name@shadow"``   the version currently shadowed (error if none)
+
+The registry implements the mapping protocol the SQL frontend already
+uses for the plain model dict (``in`` / ``[]`` / iteration), so the
+parser did not change: ``models[spec.model]`` now returns the resolved
+version's pipeline and raises the precise
+:class:`~repro.errors.UnknownModelVersionError` /
+:class:`~repro.errors.RegistryStateError` instead of a generic miss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Optional
+
+from repro.errors import (
+    RegistryStateError,
+    UnknownModelError,
+    UnknownModelVersionError,
+)
+
+# the recorded-history state machine the registry-state rule replays
+ALLOWED_TRANSITIONS: dict[str, frozenset] = {
+    "published": frozenset({"warming", "ready", "live", "retired"}),
+    "warming": frozenset({"ready", "live", "retired"}),
+    "ready": frozenset({"live", "retired"}),
+    "live": frozenset({"ready", "retired"}),
+    "retired": frozenset(),
+}
+
+
+class ModelVersion:
+    """One published version of a named model: pipeline + fingerprint +
+    lifecycle state. Returned by :meth:`ModelRegistry.publish`."""
+
+    def __init__(self, name: str, version: int, pipeline, fingerprint: str):
+        self.name = name
+        self.version = version
+        self.pipeline = pipeline
+        self.fingerprint = fingerprint
+        self.state = "published"
+        self.history: list[str] = ["published"]
+        self.error: Optional[BaseException] = None  # warm-compile failure
+        self._ready = threading.Event()
+
+    @property
+    def ref(self) -> str:
+        """The canonical ``name@version`` reference for this version."""
+        return f"{self.name}@{self.version}"
+
+    @property
+    def label(self) -> str:
+        """The version label used on server routes (``v<version>``)."""
+        return f"v{self.version}"
+
+    def wait_ready(self, timeout: Optional[float] = None) -> "ModelVersion":
+        """Block until background warm-compile finished (or failed: the
+        contained error re-raises here, wrapped)."""
+        if not self._ready.wait(timeout):
+            raise RegistryStateError(
+                f"version {self.ref} not ready within {timeout}s"
+            )
+        if self.error is not None:
+            raise RegistryStateError(
+                f"warm-compile of {self.ref} failed: {self.error}"
+            ) from self.error
+        return self
+
+    def _transition(self, new: str) -> None:
+        if new == self.state:
+            return
+        if new not in ALLOWED_TRANSITIONS[self.state]:
+            raise RegistryStateError(
+                f"{self.ref}: illegal state transition "
+                f"{self.state!r} -> {new!r}"
+            )
+        self.state = new
+        self.history.append(new)
+
+    def __repr__(self) -> str:
+        return (
+            f"ModelVersion({self.ref}, state={self.state!r}, "
+            f"fingerprint={self.fingerprint[:12]}…)"
+        )
+
+
+@dataclasses.dataclass
+class _Route:
+    """One served query whose PREDICT references a registered model."""
+
+    serve_name: str
+    prep: Any       # the PreparedQuery that served it (options + params)
+    server: Any     # the PredictionQueryServer owning the route
+
+
+class ModelRegistry:
+    """Names → ordered published versions, plus the routes serving them.
+
+    All state lives under one reentrant lock (lifecycle methods call each
+    other: ``publish`` warms, ``cutover`` resolves); the slow work —
+    optimizing and warm-compiling an incoming version — happens *outside*
+    it, on the publishing (or a background) thread, so serving never
+    stalls behind a publish.
+    """
+
+    def __init__(self, session):
+        self._session = session
+        self._lock = threading.RLock()
+        self._versions: dict[str, list[ModelVersion]] = {}
+        self._live: dict[str, int] = {}
+        self._shadow: dict[str, int] = {}
+        self._routes: dict[str, list[_Route]] = {}  # model name -> routes
+        self._pins: list[Any] = []  # identity-hashed pipeline components
+
+    # -- publish -------------------------------------------------------------
+
+    def publish(self, name: str, pipe_or_path, *, warm: str = "background"):
+        """Publish a pipeline (or saved-pipeline path) as the next version
+        of ``name``; returns the :class:`ModelVersion` handle.
+
+        The first version of a name goes live immediately — it *is* the
+        model. Later versions are staged: when the model has served routes,
+        the new version is compiled onto each route and the route's
+        observed bucket ladder replayed through it (``warm="background"``
+        on a daemon thread — ``handle.wait_ready()`` joins it;
+        ``warm="sync"`` inline; ``warm="off"`` defers both to
+        :meth:`shadow`/:meth:`split`/:meth:`cutover` time, which warm
+        lazily). A warm failure never disturbs serving: it is contained on
+        the handle (``error``, state ``retired``) and re-raised only by
+        ``wait_ready()``.
+        """
+        if warm not in ("background", "sync", "off"):
+            raise RegistryStateError(
+                f"warm must be 'background', 'sync', or 'off' — got {warm!r}"
+            )
+        if isinstance(pipe_or_path, str):
+            from repro.ml.pipeline import load_pipeline
+
+            pipe_or_path = load_pipeline(pipe_or_path)
+        from repro.core.fingerprint import fingerprint
+
+        with self._lock:
+            versions = self._versions.setdefault(name, [])
+            number = len(versions) + 1
+            fp = fingerprint(
+                "model-version", name, number, pipe_or_path, pins=self._pins
+            )
+            mv = ModelVersion(name, number, pipe_or_path, fp)
+            versions.append(mv)
+            if number == 1:
+                mv._transition("live")
+                self._live[name] = 1
+                mv._ready.set()
+                return mv
+        if warm == "off":
+            mv._ready.set()
+            return mv
+        if warm == "sync":
+            self._warm(mv)
+        else:
+            threading.Thread(
+                target=self._warm, args=(mv,),
+                name=f"registry-warm-{mv.ref}", daemon=True,
+            ).start()
+        return mv
+
+    def _warm(self, mv: ModelVersion) -> None:
+        """Stage ``mv`` onto every tracked route and replay each route's
+        bucket ladder through it (runs on the publisher or a warm thread)."""
+        try:
+            mv._transition("warming")
+            for rt in self._routes_for(mv.name):
+                self._stage_on_route(mv, rt)
+                rt.server.warm_version(rt.serve_name, mv.label)
+            mv._transition("ready")
+        except BaseException as e:  # noqa: BLE001 — contained on the handle
+            mv.error = e
+            mv._transition("retired")
+        finally:
+            mv._ready.set()
+
+    def _stage_on_route(self, mv: ModelVersion, rt: _Route) -> None:
+        """Compile ``mv`` as a staged version on one served route: same
+        query spec re-pointed at ``name@version``, re-optimized (new
+        weights are a new fingerprint — plan/stage caches cannot collide
+        with the live version's), registered via the server's
+        ``stage_version`` so the submit-schema compatibility checks run."""
+        route = rt.server.routes.get(rt.serve_name)
+        if route is not None and mv.label in route.versions:
+            return  # already staged (e.g. shadow before cutover)
+        prep = rt.prep
+        spec = dataclasses.replace(prep.query.spec, model=mv.ref)
+        q = type(prep.query)(self._session, spec)
+        plan, report = q._optimize(prep.options, prep.strategy)
+        rt.server.stage_version(
+            rt.serve_name, q.ir, self._session.tables,
+            version_label=mv.label, optimized=(plan, report),
+            params=prep.params,
+        )
+
+    def _ensure_staged(self, mv: ModelVersion) -> None:
+        """Lazily stage + warm a version published with ``warm='off'`` (or
+        routes served after it was published)."""
+        if mv.state == "retired":
+            raise RegistryStateError(
+                f"{mv.ref} is retired"
+                + (f" (warm-compile failed: {mv.error})" if mv.error else "")
+            )
+        if mv.state == "warming":
+            # a background publish is mid-warm: join it rather than racing
+            # it onto the same routes
+            mv.wait_ready(timeout=600.0)
+        missing = [
+            rt for rt in self._routes_for(mv.name)
+            if mv.label not in rt.server.routes[rt.serve_name].versions
+        ]
+        for rt in missing:
+            self._stage_on_route(mv, rt)
+            rt.server.warm_version(rt.serve_name, mv.label)
+        if mv.state == "published":
+            mv._transition("warming")
+            mv._transition("ready")
+
+    def _routes_for(self, name: str) -> list[_Route]:
+        with self._lock:
+            return list(self._routes.get(name, ()))
+
+    def _track_route(self, model_ref: str, serve_name: str, prep, server) -> None:
+        """Record that a served query's PREDICT references ``model_ref``
+        (called by ``PreparedQuery.serve``); lifecycle operations fan out
+        over these routes."""
+        name, _ = self._parse_ref(model_ref)
+        with self._lock:
+            if name not in self._versions:
+                return
+            routes = self._routes.setdefault(name, [])
+            routes[:] = [r for r in routes if r.serve_name != serve_name]
+            routes.append(_Route(serve_name, prep, server))
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def shadow(self, name: str, version: Optional[int]) -> None:
+        """Mirror live traffic for ``name`` through ``version`` on every
+        route: scored on copies of the same coalesced groups, diffed
+        against the returned results, counted in per-version stats — and
+        never returned. ``None`` stops shadowing."""
+        if version is None:
+            with self._lock:
+                self._shadow.pop(name, None)
+            for rt in self._routes_for(name):
+                rt.server.set_shadow(rt.serve_name, None)
+            return
+        mv = self._get_version(name, version)
+        self._ensure_staged(mv)
+        for rt in self._routes_for(name):
+            rt.server.set_shadow(rt.serve_name, mv.label)
+        with self._lock:
+            self._shadow[name] = version
+
+    def split(self, name: str, fractions: dict[int, float]) -> None:
+        """Send a deterministic fraction of dispatched groups to staged
+        versions (``{version: fraction}``; the live version serves the
+        remainder); ``{}`` clears the split."""
+        regs = {}
+        for version, frac in fractions.items():
+            mv = self._get_version(name, int(version))
+            self._ensure_staged(mv)
+            regs[mv.label] = float(frac)
+        for rt in self._routes_for(name):
+            rt.server.set_split(rt.serve_name, regs)
+
+    def cutover(
+        self, name: str, version: int, *, require_warm: bool = True
+    ) -> ModelVersion:
+        """Atomically make ``version`` the live model for ``name``.
+
+        Every route swaps under its scheduler's hold — in-flight groups
+        finish on the version that dispatched them (zero dropped), groups
+        popped afterwards run the new version, and with ``require_warm``
+        (default) the swap is also zero-retrace (the incoming version must
+        have replayed the route's full bucket ladder). Outstanding submit
+        handles keep working: the route token does not change. Fresh
+        ``PREDICT(model='name')`` queries resolve to the new version from
+        this call on."""
+        mv = self._get_version(name, version)
+        with self._lock:
+            if self._live.get(name) == version:
+                raise RegistryStateError(f"{mv.ref} is already live")
+        self._ensure_staged(mv)
+        for rt in self._routes_for(name):
+            rt.server.cutover(
+                rt.serve_name, mv.label, require_warm=require_warm
+            )
+        with self._lock:
+            old = self._live.get(name)
+            self._live[name] = version
+            if self._shadow.get(name) == version:
+                del self._shadow[name]
+            if old is not None:
+                self._versions[name][old - 1]._transition("ready")
+            mv._transition("live")
+        return mv
+
+    def retire(self, name: str, version: int) -> None:
+        """Drop a non-live version: its route registrations are removed
+        (refused while it still takes shadow/split traffic) and its state
+        machine terminates."""
+        mv = self._get_version(name, version)
+        with self._lock:
+            if self._live.get(name) == version:
+                raise RegistryStateError(
+                    f"cannot retire live version {mv.ref} — cut over to "
+                    f"another version first"
+                )
+            if self._shadow.get(name) == version:
+                raise RegistryStateError(
+                    f"{mv.ref} is the active shadow — shadow(name, None) first"
+                )
+        for rt in self._routes_for(name):
+            route = rt.server.routes.get(rt.serve_name)
+            if route is not None and mv.label in route.versions:
+                rt.server.retire_version(rt.serve_name, mv.label)
+        with self._lock:
+            mv._transition("retired")
+
+    # -- resolution (the one documented path) --------------------------------
+
+    def _parse_ref(self, ref: str) -> tuple[str, Optional[str]]:
+        name, sep, selector = str(ref).partition("@")
+        return name, (selector if sep else None)
+
+    def _get_version(self, name: str, version: int) -> ModelVersion:
+        with self._lock:
+            versions = self._versions.get(name)
+            if versions is None:
+                raise UnknownModelError(
+                    f"unknown model '{name}' — registered models: "
+                    f"{sorted(self._versions) or '(none)'}"
+                )
+            if not 1 <= version <= len(versions):
+                raise UnknownModelVersionError(
+                    f"model '{name}' has no version {version} — published: "
+                    f"1..{len(versions)}"
+                )
+            return versions[version - 1]
+
+    def resolve(self, ref: str) -> ModelVersion:
+        """Resolve a model reference to a :class:`ModelVersion`.
+
+        ``"name"`` / ``"name@live"`` → the live version; ``"name@2"`` →
+        that exact version; ``"name@latest"`` → the newest published;
+        ``"name@shadow"`` → the currently shadowed version (a
+        :class:`~repro.errors.RegistryStateError` when none is)."""
+        name, selector = self._parse_ref(ref)
+        with self._lock:
+            if name not in self._versions:
+                raise UnknownModelError(
+                    f"unknown model '{name}' — registered models: "
+                    f"{sorted(self._versions) or '(none)'}"
+                )
+            if selector is None or selector == "live":
+                return self._get_version(name, self._live[name])
+            if selector == "latest":
+                return self._get_version(name, len(self._versions[name]))
+            if selector == "shadow":
+                shadowed = self._shadow.get(name)
+                if shadowed is None:
+                    raise RegistryStateError(
+                        f"model '{name}' has no shadow version — set one "
+                        f"with db.models.shadow('{name}', <version>)"
+                    )
+                return self._get_version(name, shadowed)
+            if selector.isdigit():
+                return self._get_version(name, int(selector))
+            raise UnknownModelVersionError(
+                f"malformed model reference {ref!r} — use 'name', 'name@N', "
+                f"'name@latest', 'name@live', or 'name@shadow'"
+            )
+
+    # -- the mapping protocol the SQL frontend uses --------------------------
+
+    def __contains__(self, ref) -> bool:
+        name, _ = self._parse_ref(ref)
+        with self._lock:
+            return name in self._versions
+
+    def __getitem__(self, ref):
+        """The resolved version's *pipeline* (what ``build_prediction_query``
+        embeds in the IR) — precise typed errors instead of KeyError."""
+        return self.resolve(ref).pipeline
+
+    def __iter__(self):
+        with self._lock:
+            return iter(sorted(self._versions))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._versions)
+
+    # -- introspection -------------------------------------------------------
+
+    def versions(self, name: str) -> list[ModelVersion]:
+        with self._lock:
+            if name not in self._versions:
+                raise UnknownModelError(
+                    f"unknown model '{name}' — registered models: "
+                    f"{sorted(self._versions) or '(none)'}"
+                )
+            return list(self._versions[name])
+
+    def snapshot(self) -> dict[str, Any]:
+        """Registry state for ``db.cache_stats()['models']`` and the
+        analysis layer: per-model live/shadow pointers, routes, and every
+        version's state + recorded history."""
+        with self._lock:
+            return {
+                name: {
+                    "live": self._live.get(name),
+                    "shadow": self._shadow.get(name),
+                    "routes": [r.serve_name for r in self._routes.get(name, ())],
+                    "versions": [
+                        {
+                            "version": mv.version,
+                            "state": mv.state,
+                            "history": list(mv.history),
+                            "fingerprint": mv.fingerprint,
+                            "error": str(mv.error) if mv.error else None,
+                        }
+                        for mv in versions
+                    ],
+                }
+                for name, versions in self._versions.items()
+            }

@@ -7,7 +7,8 @@ layers::
     import repro as raven
 
     db = raven.connect(tables, stats="auto")        # tables + stats, once
-    db.register_model("risk", pipe)                 # the model registry
+    db.models.publish("risk", pipe)                 # the model registry
+    #   (db.register_model(...) remains as a thin alias)
 
     q = db.sql(
         "SELECT * FROM PREDICT(model='risk', data=patients) AS p "
@@ -55,6 +56,7 @@ from repro.errors import (
     UnknownTableError,
     check_params,
 )
+from repro.options import ConnectOptions, ServeOptions
 from repro.relational.engine import (
     PhysicalPlan,
     Scan,
@@ -79,7 +81,7 @@ def connect(
     *,
     partition_cols: Optional[dict[str, str]] = None,
     strategy=None,
-    options: Optional[OptimizerOptions] = None,
+    options: Union[ConnectOptions, OptimizerOptions, None] = None,
     cache_dir: Optional[str] = None,
     cache_max_bytes: Optional[int] = None,
     verify: Union[str, bool, None] = None,
@@ -91,6 +93,15 @@ def connect(
     dict to supply stats yourself, or ``None`` to skip statistics entirely.
     ``strategy``/``options`` set session-wide optimizer defaults that
     :meth:`Query.prepare` can override per query.
+
+    ``options`` is the typed front door: a :class:`repro.ConnectOptions`
+    bundling every session knob (optimizer, strategy, partition columns,
+    cache, verification) with a content-stable fingerprint that
+    ``explain()`` renders. A bare :class:`OptimizerOptions` is still
+    accepted directly. The loose ``cache_dir``/``cache_max_bytes``/
+    ``verify`` keywords keep working through a shim that emits
+    :class:`DeprecationWarning`; a keyword conflicting with the bundle
+    raises.
 
     ``cache_dir`` enables **warm starts across processes**: an
     :class:`~repro.exec.artifact_store.ArtifactStore` rooted there persists
@@ -133,24 +144,31 @@ class Session:
         *,
         partition_cols: Optional[dict[str, str]] = None,
         strategy=None,
-        options: Optional[OptimizerOptions] = None,
+        options: Union[ConnectOptions, OptimizerOptions, None] = None,
         cache_dir: Optional[str] = None,
         cache_max_bytes: Optional[int] = None,
         verify: Union[str, bool, None] = None,
     ):
-        if verify is not None:
+        copts = ConnectOptions.resolve(
+            options, partition_cols=partition_cols, strategy=strategy,
+            cache_dir=cache_dir, cache_max_bytes=cache_max_bytes,
+            verify=verify,
+        )
+        self.connect_options = copts
+        opt_options = copts.optimizer
+        if copts.verify is not None:
             from repro.analysis.verifier import resolve_verify_mode
 
-            options = dataclasses.replace(
-                options or OptimizerOptions(),
-                verify=resolve_verify_mode(verify),
+            opt_options = dataclasses.replace(
+                opt_options or OptimizerOptions(),
+                verify=resolve_verify_mode(copts.verify),
             )
         self.tables = {
             t: {c: np.asarray(v) for c, v in cols.items()}
             for t, cols in tables.items()
         }
         if stats == "auto":
-            parts = partition_cols or {}
+            parts = copts.partition_cols or {}
             self.stats = {
                 t: TableStats.of(cols, partition_col=parts.get(t))
                 for t, cols in self.tables.items()
@@ -163,17 +181,19 @@ class Session:
             raise RavenError(
                 f"stats must be 'auto', a dict, or None — got {stats!r}"
             )
-        self.models: dict[str, Any] = {}
-        self.strategy = strategy
-        self.options = options
+        from repro.serve.registry import ModelRegistry
+
+        self.models = ModelRegistry(self)
+        self.strategy = copts.strategy
+        self.options = opt_options
         from repro.relational.engine import set_artifact_store
 
         self.artifact_store = None
-        if cache_dir is not None:
+        if copts.cache_dir is not None:
             from repro.exec.artifact_store import ArtifactStore
 
             self.artifact_store = ArtifactStore(
-                cache_dir, max_bytes=cache_max_bytes
+                copts.cache_dir, max_bytes=copts.cache_max_bytes
             )
         # the most recent connect wins — including a cache-less connect,
         # which must *clear* a previous session's store rather than let it
@@ -185,14 +205,11 @@ class Session:
     # -- registration --------------------------------------------------------
 
     def register_model(self, name: str, pipe_or_path):
-        """Register a trained pipeline (or a saved-pipeline path) under
-        ``name`` for use in PREDICT clauses."""
-        if isinstance(pipe_or_path, str):
-            from repro.ml.pipeline import load_pipeline
-
-            pipe_or_path = load_pipeline(pipe_or_path)
-        self.models[name] = pipe_or_path
-        return pipe_or_path
+        """Thin alias for :meth:`ModelRegistry.publish` — kept so existing
+        call sites work unchanged (same contract: returns the pipeline).
+        New code should use ``db.models.publish(name, pipe)``, which returns
+        the :class:`~repro.serve.registry.ModelVersion` lifecycle handle."""
+        return self.models.publish(name, pipe_or_path).pipeline
 
     # -- query construction --------------------------------------------------
 
@@ -249,6 +266,7 @@ class Session:
             out["server"]["recompiles"] = self._server.recompiles()
         if self.artifact_store is not None:
             out["artifact_store"] = self.artifact_store.stats.snapshot()
+        out["models"] = self.models.snapshot()
         return out
 
     def close(self) -> None:
@@ -463,6 +481,7 @@ class PreparedQuery:
         self.param_names = query.param_names()
         self._serve_name: Optional[str] = None
         self._serve_token: Optional[str] = None
+        self._serve_options: Optional[ServeOptions] = None
         self._server: Optional[PredictionQueryServer] = None
 
     def _verify_compiled(self) -> None:
@@ -562,6 +581,7 @@ class PreparedQuery:
         name: Optional[str] = None,
         server: Optional[PredictionQueryServer] = None,
         *,
+        options: Optional[ServeOptions] = None,
         max_latency_ms: Optional[float] = None,
         max_pending: Optional[int] = None,
         max_coalesce: Optional[int] = None,
@@ -569,7 +589,10 @@ class PreparedQuery:
         """Register into the session-owned server (bucketed, coalesced hot
         path): afterwards ``prep.submit(batch)`` enqueues.
 
-        With ``max_latency_ms`` a background pump flushes automatically once
+        ``options`` is the typed surface (:class:`repro.ServeOptions`); the
+        loose keywords keep working through a :class:`DeprecationWarning`
+        shim, and a keyword conflicting with the bundle raises. With
+        ``max_latency_ms`` a background pump flushes automatically once
         this query's oldest pending request has waited that long — results
         arrive via ``request.wait()`` with no ``db.flush()`` required, and
         queues are flushed earliest-deadline-first so a tight target keeps
@@ -581,23 +604,47 @@ class PreparedQuery:
         :class:`~repro.errors.ServerOverloadedError`. ``max_coalesce`` caps
         how many rows one dispatched group may coalesce, so a huge backlog
         is pipelined as bounded groups instead of monopolizing a flush.
+
+        Serving also registers this query's route with the session's
+        :class:`~repro.serve.registry.ModelRegistry`: later
+        ``db.models.publish()`` calls for the referenced model stage their
+        new version onto this route, and ``shadow``/``split``/``cutover``
+        act on it.
         """
+        sopts = ServeOptions.resolve(
+            options, max_latency_ms=max_latency_ms,
+            max_pending=max_pending, max_coalesce=max_coalesce,
+        )
+        self._serve_options = sopts
         session = self.query.session
         srv = server if server is not None else session.server
         self._serve_name = name or session._next_name()
+        model_ref = self.query.spec.model
+        version_label = "v1"
+        if model_ref is not None:
+            try:
+                version_label = session.models.resolve(model_ref).label
+            except RavenError:
+                pass  # model outside the registry (e.g. a bare test server)
         reg = srv.register(
             self._serve_name, self.query.ir, session.tables,
             fact_table=self._fact_table(),
             optimized=(self.plan, self.report),
             params=self.params,
-            max_latency_ms=max_latency_ms,
-            max_pending=max_pending,
-            max_coalesce=max_coalesce,
+            max_latency_ms=sopts.max_latency_ms,
+            max_pending=sopts.max_pending,
+            max_coalesce=sopts.max_coalesce,
+            version_label=version_label,
+            donate=sopts.donate,
         )
         self._serve_token = reg.token
         self._server = srv
-        if max_latency_ms is not None:
-            srv.start_pump(max_latency_ms)
+        if model_ref is not None:
+            session.models._track_route(
+                model_ref, self._serve_name, self, srv
+            )
+        if sopts.max_latency_ms is not None:
+            srv.start_pump(sopts.max_latency_ms)
         return self
 
     def submit(
@@ -639,6 +686,10 @@ class PreparedQuery:
                 for k in sorted(self.param_names)
             )
             lines.append(f"params: {binds}")
+        lines.append("-- resolved options " + "-" * 35)
+        lines.append(f"connect: {session.connect_options.describe()}")
+        if self._serve_options is not None:
+            lines.append(f"serve:   {self._serve_options.describe()}")
         lines.append("-- logical plan (as written) " + "-" * 26)
         lines.append(format_logical_plan(self.query.ir.plan))
         lines.append("-- physical plan (optimized) " + "-" * 26)

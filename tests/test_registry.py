@@ -1,0 +1,475 @@
+"""Model registry lifecycle: publish → warm → shadow/split → cutover.
+
+Covers the versioned-routing layer end-to-end — resolution paths, typed
+option bundles and their deprecation shims, shadow non-leakage,
+deterministic splits, the concurrent-cutover atomicity guarantees (zero
+dropped, zero re-traced, bitwise-stable per version), and the artifact
+store's operator CLI.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro as raven
+from repro.data.datasets import make_hospital
+from repro.errors import (
+    RegistryStateError,
+    StaleQueryError,
+    UnknownModelError,
+    UnknownModelVersionError,
+)
+
+SQL = "SELECT * FROM PREDICT(model='risk', data=patients) AS p"
+
+
+def _batch(n: int, seed: int) -> dict[str, np.ndarray]:
+    return make_hospital(n, seed=seed).tables["patients"]
+
+
+@pytest.fixture()
+def db(hospital, hospital_dt):
+    sess = raven.connect(hospital.tables, stats="auto")
+    sess.models.publish("risk", hospital_dt)
+    return sess
+
+
+def _served(db, params=None):
+    prep = db.sql(SQL).prepare(transform="sql", params=params)
+    prep.serve("q")
+    return prep
+
+
+def _roundtrip(db, prep, batch):
+    req = prep.submit(batch)
+    db.flush()
+    return req
+
+
+# -- resolution: the one documented path -------------------------------------
+
+def test_resolve_paths(db, hospital_lr):
+    db.models.publish("risk", hospital_lr, warm="off")
+    assert db.models.resolve("risk").version == 1          # live default
+    assert db.models.resolve("risk@live").version == 1
+    assert db.models.resolve("risk@latest").version == 2
+    assert db.models.resolve("risk@2").version == 2
+    with pytest.raises(UnknownModelError):
+        db.models.resolve("nope")
+    with pytest.raises(UnknownModelVersionError):
+        db.models.resolve("risk@9")
+    with pytest.raises(UnknownModelVersionError):
+        db.models.resolve("risk@banana")
+    with pytest.raises(RegistryStateError):
+        db.models.resolve("risk@shadow")  # nothing shadowed yet
+
+
+def test_first_publish_goes_live(db):
+    (v1,) = db.models.versions("risk")
+    assert v1.state == "live"
+    assert v1.ref == "risk@1"
+    assert db.models.resolve("risk") is v1
+    assert "risk" in db.models
+    assert list(db.models) == ["risk"]
+    assert len(db.models) == 1
+
+
+def test_register_model_alias_and_mapping(hospital, hospital_dt):
+    db = raven.connect(hospital.tables, stats="auto")
+    pipe = db.register_model("risk", hospital_dt)  # thin alias
+    assert pipe is hospital_dt
+    assert db.models["risk"] is hospital_dt        # parser's mapping protocol
+    prep = db.sql(SQL).prepare(transform="sql")
+    out = prep(_batch(64, seed=5))
+    assert len(next(iter(out.values()))) == 64
+
+
+def test_versioned_ref_in_sql(db, hospital_lr):
+    db.models.publish("risk", hospital_lr, warm="off")
+    q1 = db.sql(SQL).prepare(transform="sql")
+    q2 = db.sql(
+        "SELECT * FROM PREDICT(model='risk@2', data=patients) AS p"
+    ).prepare(transform="sql")
+    assert q1.query.fingerprint() != q2.query.fingerprint()
+    batch = _batch(128, seed=3)
+    s1 = q1(batch)["score"]
+    s2 = q2(batch)["score"]
+    assert not np.array_equal(s1, s2)  # different model families
+
+
+# -- typed options + shims ---------------------------------------------------
+
+def test_connect_legacy_kwargs_warn(hospital, tmp_path):
+    with pytest.warns(DeprecationWarning, match="ConnectOptions"):
+        db = raven.connect(
+            hospital.tables, stats="auto", cache_dir=str(tmp_path / "c")
+        )
+    assert db.connect_options.cache_dir == str(tmp_path / "c")
+
+
+def test_connect_options_bundle_no_warning(hospital, recwarn):
+    opts = raven.ConnectOptions(verify="off")
+    db = raven.connect(hospital.tables, stats="auto", options=opts)
+    assert db.connect_options.verify == "off"
+    assert not [w for w in recwarn if w.category is DeprecationWarning]
+
+
+def test_connect_conflicting_knob_raises(hospital):
+    with pytest.raises(ValueError, match="verify"):
+        raven.connect(
+            hospital.tables, stats="auto",
+            options=raven.ConnectOptions(verify="strict"), verify="off",
+        )
+
+
+def test_serve_legacy_kwargs_warn(db):
+    prep = db.sql(SQL).prepare(transform="sql")
+    with pytest.warns(DeprecationWarning, match="ServeOptions"):
+        prep.serve("q", max_coalesce=512)
+    assert prep._serve_options.max_coalesce == 512
+
+
+def test_serve_options_bundle(db):
+    prep = db.sql(SQL).prepare(transform="sql")
+    prep.serve("q", options=raven.ServeOptions(max_pending=7))
+    assert prep._serve_options.max_pending == 7
+    with pytest.raises(ValueError, match="max_pending"):
+        prep.serve("q2", options=raven.ServeOptions(max_pending=7),
+                   max_pending=9)
+
+
+def test_options_fingerprints_content_stable():
+    a = raven.ConnectOptions(cache_dir="/x", verify="warn")
+    b = raven.ConnectOptions(cache_dir="/x", verify="warn")
+    assert a.fingerprint() == b.fingerprint()
+    assert a.fingerprint() != raven.ConnectOptions().fingerprint()
+    assert a.content_stable
+    s1 = raven.ServeOptions(max_latency_ms=5.0)
+    s2 = raven.ServeOptions(max_latency_ms=5.0)
+    assert s1.fingerprint() == s2.fingerprint()
+    assert s1.fingerprint() != raven.ServeOptions().fingerprint()
+
+
+def test_explain_renders_resolved_options(db):
+    prep = db.sql(SQL).prepare(transform="sql")
+    prep.serve("q", options=raven.ServeOptions(max_coalesce=256))
+    text = prep.explain()
+    assert "resolved options" in text
+    assert "ConnectOptions(" in text
+    assert "ServeOptions(max_coalesce=256)" in text
+    assert "fingerprint=" in text
+
+
+# -- lifecycle ---------------------------------------------------------------
+
+def test_publish_warm_sync_stages_routes(db, hospital_lr):
+    prep = _served(db)
+    _roundtrip(db, prep, _batch(96, seed=2)).wait(5)
+    v2 = db.models.publish("risk", hospital_lr, warm="sync")
+    assert v2.state == "ready"
+    assert v2.history == ["published", "warming", "ready"]
+    route = db.server.route_snapshot("q")
+    assert set(route["versions"]) == {"v1", "v2"}
+    assert route["versions"]["v2"]["warmed"]
+
+
+def test_publish_background_wait_ready(db, hospital_lr):
+    prep = _served(db)
+    _roundtrip(db, prep, _batch(96, seed=2)).wait(5)
+    v2 = db.models.publish("risk", hospital_lr)  # warm="background"
+    assert v2.wait_ready(timeout=120.0) is v2
+    assert v2.state == "ready"
+
+
+def test_shadow_never_leaks(db, hospital_lr):
+    prep = _served(db)
+    batch = _batch(200, seed=4)
+    oracle = _roundtrip(db, prep, batch).wait(5)  # v1-only answer
+
+    db.models.publish("risk", hospital_lr, warm="sync")
+    db.models.shadow("risk", 2)
+    for _ in range(3):
+        req = _roundtrip(db, prep, batch)
+        out = req.wait(5)
+        assert req.served_by == "v1"
+        for k in oracle:
+            assert np.array_equal(out[k], oracle[k], equal_nan=True)
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline:  # mirrors run on the boundary pool
+        vs = db.server.route_snapshot("q")["versions"]["v2"]
+        if vs["shadow_groups"] >= 3:
+            break
+        time.sleep(0.01)
+    assert vs["shadow_groups"] == 3
+    assert vs["shadow_errors"] == 0
+    assert vs["shadow_rows"] == 600
+    assert vs["groups"] == 0  # shadow traffic never counted as served
+    assert db.models.resolve("risk@shadow").version == 2
+    db.models.shadow("risk", None)
+    assert db.server.route_snapshot("q")["shadow"] is None
+
+
+def test_split_deterministic_counts(db, hospital_lr):
+    prep = _served(db)
+    batch = _batch(64, seed=6)
+    _roundtrip(db, prep, batch).wait(5)
+    db.models.publish("risk", hospital_lr, warm="sync")
+    db.models.split("risk", {2: 0.25})
+    served = []
+    for _ in range(16):
+        req = _roundtrip(db, prep, batch)
+        req.wait(5)
+        served.append(req.served_by)
+    assert served.count("v2") == 4  # exactly, not statistically
+    assert served.count("v1") == 12
+    snap = db.server.route_snapshot("q")
+    assert snap["versions"]["v2"]["groups"] == 4
+    db.models.split("risk", {})  # clears
+    req = _roundtrip(db, prep, batch)
+    req.wait(5)
+    assert req.served_by == "v1"
+
+
+def test_split_validation(db, hospital_lr):
+    _served(db)
+    db.models.publish("risk", hospital_lr, warm="sync")
+    with pytest.raises(RegistryStateError):
+        db.server.set_split("q", {"v2": 1.5})
+    with pytest.raises(RegistryStateError):
+        db.server.set_split("q", {"v1": 0.5})  # live can't be a split target
+    with pytest.raises(UnknownModelVersionError):
+        db.server.set_split("q", {"v9": 0.5})
+
+
+def test_cutover_swaps_and_handles_survive(db, hospital_lr):
+    prep = _served(db)
+    batch = _batch(128, seed=8)
+    _roundtrip(db, prep, batch).wait(5)
+    db.models.publish("risk", hospital_lr, warm="sync")
+    v2 = db.models.cutover("risk", 2)
+    assert v2.state == "live"
+    assert db.models.resolve("risk").version == 2
+    assert db.models.versions("risk")[0].state == "ready"
+    # the outstanding handle keeps working across the cutover
+    req = _roundtrip(db, prep, batch)
+    req.wait(5)
+    assert req.served_by == "v2"
+    with pytest.raises(RegistryStateError, match="already live"):
+        db.models.cutover("risk", 2)
+
+
+def test_cutover_zero_retrace(db, hospital_lr):
+    prep = _served(db)
+    batch = _batch(128, seed=8)
+    _roundtrip(db, prep, batch).wait(5)
+    db.models.publish("risk", hospital_lr, warm="sync")
+    before = db.server.recompiles()
+    db.models.cutover("risk", 2)
+    req = _roundtrip(db, prep, batch)
+    req.wait(5)
+    assert db.server.recompiles() == before  # warm swap: zero new traces
+    assert db.server.route_snapshot("q")["last_cutover_deficit"] == 0
+
+
+def test_cutover_require_warm_refuses_cold(db, hospital_lr):
+    prep = _served(db)
+    _roundtrip(db, prep, _batch(128, seed=8)).wait(5)
+    v2 = db.models.publish("risk", hospital_lr, warm="off")
+    db.models._ensure_staged(v2)
+    route = db.server.routes["q"]
+    route.versions["v2"].warmed_ladder.clear()  # simulate a cold version
+    with pytest.raises(RegistryStateError, match="not warm"):
+        db.server.cutover("q", "v2", require_warm=True)
+    db.server.cutover("q", "v2", require_warm=False)  # forced: recorded
+    assert db.server.route_snapshot("q")["last_cutover_deficit"] > 0
+
+
+def test_retire_guards(db, hospital_lr):
+    _served(db)
+    db.models.publish("risk", hospital_lr, warm="sync")
+    with pytest.raises(RegistryStateError, match="live"):
+        db.models.retire("risk", 1)
+    db.models.shadow("risk", 2)
+    with pytest.raises(RegistryStateError, match="shadow"):
+        db.models.retire("risk", 2)
+    db.models.shadow("risk", None)
+    db.models.cutover("risk", 2)
+    db.models.retire("risk", 1)
+    assert db.models.versions("risk")[0].state == "retired"
+    assert "v1" not in db.server.routes["q"].versions
+
+
+def test_reregister_still_stales_handles(db):
+    prep = _served(db)
+    token = prep._serve_token
+    prep2 = db.sql(SQL).prepare(transform="sql")
+    prep2.serve("q")  # same name, fresh registration: new token
+    assert prep2._serve_token != token
+    with pytest.raises(StaleQueryError):
+        db.server.submit("q", _batch(32, seed=1), expect_token=token)
+
+
+def test_stage_rejects_schema_outside_fact_table(db):
+    """A staged version may read columns the live plan pruned, but never
+    columns outside the registered fact schema."""
+    _served(db)
+    live = db.server.routes["q"].versions["v1"]
+    assert set(live.scan_columns) <= set(live.fact_dtypes)
+    assert set(live.fact_dtypes) == set(db.tables["patients"])
+
+
+def test_cache_stats_exposes_models(db):
+    snap = db.cache_stats()
+    assert snap["models"]["risk"]["live"] == 1
+    states = [v["state"] for v in snap["models"]["risk"]["versions"]]
+    assert states == ["live"]
+
+
+def test_registry_check_clean_and_dirty(db, hospital_lr):
+    from repro.analysis.registry_check import check_registry
+
+    prep = _served(db)
+    _roundtrip(db, prep, _batch(64, seed=2)).wait(5)
+    db.models.publish("risk", hospital_lr, warm="sync")
+    db.models.cutover("risk", 2)
+    assert check_registry(db) == []
+    # corrupt the recorded history: the independent audit must notice
+    db.models.versions("risk")[0].history.append("published")
+    vs = check_registry(db)
+    assert any(v.rule == "registry-state" for v in vs)
+
+
+# -- the atomicity stress (the acceptance bar) -------------------------------
+
+@pytest.mark.slow
+def test_concurrent_cutover_stress(db, hospital_lr):
+    """4 submitting threads race a publish → warm → cutover: zero dropped
+    requests, zero warm re-traces, bitwise-stable results per version."""
+    prep = _served(db)
+    batch = _batch(256, seed=9)
+    _roundtrip(db, prep, batch).wait(5)  # prime the v1 bucket
+
+    v2 = db.models.publish("risk", hospital_lr, warm="sync")
+    assert v2.state == "ready"
+    traces_before = db.server.recompiles()
+
+    results: list[tuple[str, dict]] = []
+    errors: list[BaseException] = []
+    lock = threading.Lock()
+    stop = threading.Event()
+
+    def worker():
+        while not stop.is_set():
+            try:
+                req = prep.submit(batch)
+                db.flush()
+                out = req.wait(30)
+            except BaseException as e:  # noqa: BLE001 — recorded, asserted
+                with lock:
+                    errors.append(e)
+                return
+            with lock:
+                results.append((req.served_by, out))
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    # let traffic build, then swap mid-flight
+    while True:
+        with lock:
+            if len(results) >= 8:
+                break
+    db.models.cutover("risk", 2)
+    while True:
+        with lock:
+            if sum(1 for s, _ in results if s == "v2") >= 8:
+                break
+    stop.set()
+    for t in threads:
+        t.join(timeout=60)
+    db.flush()  # nothing may be left enqueued
+
+    assert errors == []                      # zero dropped
+    assert db.server.recompiles() == traces_before  # zero re-traces
+    by_version: dict[str, dict] = {}
+    for label, out in results:
+        assert label in ("v1", "v2")
+        ref = by_version.setdefault(label, out)
+        for k in ref:                         # bitwise-stable per version
+            assert np.array_equal(ref[k], out[k], equal_nan=True)
+    assert set(by_version) == {"v1", "v2"}    # both versions actually served
+    scores1 = by_version["v1"]["score"]
+    scores2 = by_version["v2"]["score"]
+    assert not np.array_equal(scores1, scores2)
+    snap = db.server.route_snapshot("q")
+    assert snap["cutovers"] == 1
+    assert snap["last_cutover_deficit"] == 0
+    stats = db.cache_stats()
+    assert stats["server"]["requests_served"] == len(results) + 1
+
+
+# -- artifact-store operator CLI ---------------------------------------------
+
+def _store_with_artifacts(root: str):
+    import jax.numpy as jnp
+
+    from repro.exec.artifact_store import ArtifactStore
+
+    store = ArtifactStore(root)
+
+    def fn(env):
+        return {"y": env["x"] * 2}
+
+    for i in range(3):
+        assert store.save_stage(
+            f"fp{i:02d}" + "0" * 28, "d" * 32, fn,
+            {"x": jnp.zeros((8 + i,), jnp.float32)},
+        )
+    return store
+
+
+def test_store_entries_and_prune(tmp_path):
+    store = _store_with_artifacts(str(tmp_path))
+    entries = store.entries()
+    assert len(entries) == 3
+    assert all(e.layer == "stage" and e.compat and e.size_bytes > 0
+               for e in entries)
+    victims = store.prune(max_age_s=0.0, dry_run=True)
+    assert len(victims) == 3
+    assert len(store.entries()) == 3        # dry run deleted nothing
+    keep = sum(e.size_bytes for e in entries[:1])
+    store.prune(max_bytes=keep)
+    assert len(store.entries()) == 1        # newest survives a byte prune
+    store.prune(max_age_s=0.0)
+    assert store.entries() == []
+
+
+def test_store_cli_inspect_and_prune(tmp_path):
+    _store_with_artifacts(str(tmp_path))
+    run = lambda *a: subprocess.run(  # noqa: E731
+        [sys.executable, "-m", "repro.exec.artifact_store",
+         "--root", str(tmp_path), *a],
+        capture_output=True, text=True, timeout=300,
+    )
+    out = run("inspect")
+    assert out.returncode == 0
+    assert "3 entries" in out.stdout
+    out = run("inspect", "--layer", "stage", "--fingerprint", "fp01")
+    assert "1 entries" in out.stdout
+    out = run("inspect", "--json")
+    import json
+
+    rows = json.loads(out.stdout)
+    assert {r["key"][:4] for r in rows} == {"fp00", "fp01", "fp02"}
+    out = run("prune", "--max-age-s", "0", "--dry-run")
+    assert "would delete 3" in out.stdout
+    out = run("prune", "--max-age-s", "0")
+    assert "deleted 3" in out.stdout
+    assert "0 entries" in run("inspect").stdout
+    out = run("prune")
+    assert out.returncode != 0  # needs a bound
