@@ -31,6 +31,11 @@ ZERO_INVARIANTS = (
     "hotswap_dropped",
     "hotswap_cutover_retraces",
     "hotswap_cutover_deficit",
+    "faultdrill_dropped",
+    "faultdrill_wrong_results",
+    "faultdrill_rollback_dropped",
+    "faultdrill_rollback_retraces",
+    "faultdrill_recovery_traces",
 )
 
 

@@ -858,6 +858,138 @@ def run_hotswap(quick: bool = False) -> dict:
     }
 
 
+def run_faultdrill(quick: bool = False) -> dict:
+    """Part 8: fault drill — the fault-tolerance payoff.
+
+    Three legs against the same served query. *Transient*: a seeded
+    FaultPlan injects dispatch + stage failures mid-traffic; the scheduler
+    requeues the failed groups whole and every request completes with
+    results bitwise-equal to the clean baseline (0 dropped, 0 wrong).
+    *Rollback*: publish v2, cut over, roll back under the same cutover
+    machinery — 0 dropped requests, 0 re-traces. *Recovery*: kill the
+    session after journaled traffic; a fresh session over the same cache
+    dir restores the route and answers the same shapes with 0 new traces.
+    """
+    from repro.exec.faults import FaultPlan
+
+    n_requests = 6 if quick else 16
+    train, _ = make_dataset("hospital", 20_000)
+    pipe1 = train_model(train, "gb")
+    pipe2 = train_model(train, "dt")
+    sizes = _request_sizes(n_requests, seed=9)
+    batches = [make_hospital(n, seed=900 + i).tables["patients"]
+               for i, n in enumerate(sizes)]
+    total_rows = sum(sizes)
+    sql = "SELECT * FROM PREDICT(model='m', data=patients) AS p"
+    retry = raven.RetryPolicy(max_attempts=4, backoff_ms=0.5)
+
+    def connect_serving(faults=None, cache_dir=None):
+        db = raven.connect(
+            train.tables, stats="auto",
+            options=raven.ConnectOptions(faults=faults, cache_dir=cache_dir),
+        )
+        db.models.publish("m", pipe1)
+        prep = db.sql(sql).prepare(transform="sql")
+        prep.serve("drill", options=raven.ServeOptions(retry=retry))
+        return db, prep
+
+    def traffic(db, prep):
+        """Submit the whole ladder; returns (scores-or-None, dropped)."""
+        outs, dropped = [], 0
+        reqs = [prep.submit(b) for b in batches]
+        db.flush()
+        for r in reqs:
+            try:
+                outs.append(np.asarray(r.wait(timeout=120)["score"]))
+            except Exception:  # noqa: BLE001 — a drop is the failure mode
+                outs.append(None)
+                dropped += 1
+        return outs, dropped
+
+    # -- clean baseline: the ground truth every leg must reproduce -----------
+    db, prep = connect_serving()
+    base, base_dropped = traffic(db, prep)
+    db.close()
+
+    # -- transient-fault leg -------------------------------------------------
+    plan = FaultPlan(
+        {"stage": {"times": 2}, "dispatch": {"times": 1}}, seed=13,
+    )
+    db, prep = connect_serving(faults=plan)
+    t0 = time.perf_counter()
+    outs, dropped = traffic(db, prep)
+    t_fault = time.perf_counter() - t0
+    dropped += base_dropped
+    wrong = sum(
+        1 for a, b in zip(base, outs)
+        if a is None or b is None or not np.array_equal(a, b)
+    )
+    injected = sum(plan.injected().values())
+    retries = db.cache_stats()["server"]["retries"]
+    db.close()
+
+    # -- rollback drill ------------------------------------------------------
+    db, prep = connect_serving()
+    traffic(db, prep)
+    db.models.publish("m", pipe2, warm="sync")
+    db.models.cutover("m", 2)
+    traffic(db, prep)
+    recompiles = db.cache_stats()["server"]["recompiles"]
+    db.models.rollback("m", reason="drill")
+    rb_outs, rb_dropped = traffic(db, prep)
+    rb_retraces = db.cache_stats()["server"]["recompiles"] - recompiles
+    rb_wrong = sum(
+        1 for a, b in zip(base, rb_outs)
+        if a is None or b is None or not np.array_equal(a, b)
+    )
+    db.close()
+
+    # -- crash-recovery drill ------------------------------------------------
+    with tempfile.TemporaryDirectory() as cache:
+        db, prep = connect_serving(cache_dir=cache)
+        traffic(db, prep)
+        db.artifact_store.drain()
+        db.close()  # the journal survives; pretend this was a crash
+        db2 = raven.connect(
+            train.tables, stats="auto",
+            options=raven.ConnectOptions(cache_dir=cache),
+        )
+        counts = db2.recover()
+        traces0 = db2.cache_stats()["traces"]
+        prep2 = db2.sql(sql).prepare(transform="sql")
+        prep2.serve("drill")
+        rec_outs, rec_dropped = traffic(db2, prep2)
+        rec_traces = db2.cache_stats()["traces"] - traces0
+        db2.close()
+    rec_wrong = sum(
+        1 for a, b in zip(base, rec_outs)
+        if a is None or b is None or not np.array_equal(a, b)
+    )
+
+    print("serve_query_faultdrill,leg,rows_per_s,injected,dropped,"
+          "wrong_results")
+    print(f"serve_query_faultdrill,transient,{total_rows / t_fault:.0f},"
+          f"{injected},{dropped},{wrong} (retries={retries})")
+    print(f"serve_query_faultdrill,rollback,-,-,{rb_dropped},{rb_wrong} "
+          f"(retraces={rb_retraces})")
+    print(f"serve_query_faultdrill,recovery,-,-,{rec_dropped},{rec_wrong} "
+          f"(new_traces={rec_traces},routes={counts.get('routes', 0)})")
+    return {
+        "faultdrill_rows_s": total_rows / t_fault,
+        "faultdrill_injected": injected,
+        "faultdrill_retries": retries,
+        "faultdrill_dropped": dropped,
+        "faultdrill_wrong_results": wrong,
+        "faultdrill_rollback_dropped": rb_dropped,
+        "faultdrill_rollback_wrong_results": rb_wrong,
+        "faultdrill_rollback_retraces": int(rb_retraces),
+        "faultdrill_recovery_dropped": rec_dropped,
+        "faultdrill_recovery_wrong_results": rec_wrong,
+        "faultdrill_recovery_traces": int(rec_traces),
+        "faultdrill_recovered_routes": int(counts.get("routes", 0)),
+    }
+
+
 def run(quick: bool = False):
     n_requests = 8 if quick else 24
     sizes = _request_sizes(n_requests)
@@ -899,6 +1031,9 @@ def run(quick: bool = False):
 
     # part 7: hot-swap A/B (model lifecycle: publish → warm → cutover)
     rows.update(run_hotswap(quick=quick))
+
+    # part 8: fault drill (injection + retry, rollback, crash recovery)
+    rows.update(run_faultdrill(quick=quick))
     return rows
 
 
@@ -949,6 +1084,15 @@ def smoke() -> dict:
     assert rows["hotswap_cutover_retraces"] == 0, rows
     assert rows["hotswap_cutover_deficit"] == 0, rows
     assert rows["hotswap_served_v1"] > 0 and rows["hotswap_served_v2"] > 0
+    # the fault-tolerance headline: injected faults recover bitwise-equal
+    # with nothing dropped; rollback and crash recovery change nothing
+    assert rows["faultdrill_injected"] >= 1, rows
+    assert rows["faultdrill_dropped"] == 0, rows
+    assert rows["faultdrill_wrong_results"] == 0, rows
+    assert rows["faultdrill_rollback_dropped"] == 0, rows
+    assert rows["faultdrill_rollback_retraces"] == 0, rows
+    assert rows["faultdrill_recovery_traces"] == 0, rows
+    assert rows["faultdrill_recovered_routes"] >= 1, rows
     print(f"smoke ok: served {rows['speedup_served']:.1f}x, "
           f"staged {rows['speedup_staged']:.1f}x, "
           f"warm cold-start {rows['cold_speedup_warm']:.1f}x, "
@@ -961,7 +1105,10 @@ def smoke() -> dict:
           f"hot swap p99 {rows['hotswap_p99_before_ms']:.1f}/"
           f"{rows['hotswap_p99_during_ms']:.1f}/"
           f"{rows['hotswap_p99_after_ms']:.1f} ms "
-          f"(0 dropped, 0 retraces)")
+          f"(0 dropped, 0 retraces), "
+          f"fault drill {rows['faultdrill_injected']} injected / "
+          f"{rows['faultdrill_retries']} retried "
+          f"(0 dropped, 0 wrong, rollback+recovery clean)")
     return rows
 
 

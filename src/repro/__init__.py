@@ -19,11 +19,17 @@ Lower layers (``repro.core``, ``repro.sql``, ``repro.relational``,
 ``repro.serve``) remain importable directly for rule-level work.
 """
 from repro.errors import (
+    FaultInjectedError,
     RavenError,
+    RecoveryError,
     RegistryStateError,
+    RequestFailedError,
+    RequestTimeoutError,
     ServerOverloadedError,
     SQLSyntaxError,
     StaleQueryError,
+    TransientError,
+    TransientFaultError,
     UnboundParameterError,
     UnknownColumnError,
     UnknownModelError,
@@ -42,7 +48,9 @@ from repro.session import (
 )
 
 # after repro.session: the session import initializes the relational layer
-# before repro.serve's package imports touch the stage IR (import cycle)
+# before repro.serve's / repro.exec's package imports touch the stage IR
+# (import cycle)
+from repro.exec.faults import FaultPlan, RetryPolicy, RollbackPolicy
 from repro.serve.registry import ModelRegistry, ModelVersion
 
 __all__ = [
@@ -67,4 +75,13 @@ __all__ = [
     "ServeOptions",
     "ModelRegistry",
     "ModelVersion",
+    "FaultPlan",
+    "RetryPolicy",
+    "RollbackPolicy",
+    "FaultInjectedError",
+    "TransientError",
+    "TransientFaultError",
+    "RequestTimeoutError",
+    "RequestFailedError",
+    "RecoveryError",
 ]

@@ -17,7 +17,7 @@ import sys
 
 import numpy as np
 
-from repro.analysis.rules import AnalysisResult, rule_catalog
+from repro.analysis.rules import AnalysisResult, Violation, rule_catalog
 
 
 def _toy_pipeline(with_udf: bool = False):
@@ -236,6 +236,98 @@ def _verify_lifecycle() -> AnalysisResult:
     return res
 
 
+def _verify_faultdrill() -> AnalysisResult:
+    """Drive the fault-tolerance machinery end-to-end — transient faults
+    retried through the scheduler, a policy-triggered rollback, and a
+    journal round-trip recovered into a fresh session — and audit both
+    sessions with :func:`check_registry` (which includes the retry-state /
+    breaker-state / recovery-journal rules)."""
+    import tempfile
+
+    from repro.analysis.registry_check import check_registry
+    from repro.exec.faults import FaultPlan, RetryPolicy, RollbackPolicy
+    from repro.options import ConnectOptions, ServeOptions
+    from repro.session import connect
+
+    res = AnalysisResult()
+    rng = np.random.default_rng(13)
+    tables = {
+        "t": {
+            "a": rng.normal(size=64),
+            "b": rng.normal(size=64),
+            "k": rng.integers(0, 8, size=64).astype(np.int32),
+        },
+    }
+    batch = {"a": rng.normal(size=16), "b": rng.normal(size=16),
+             "k": rng.integers(0, 8, size=16).astype(np.int32)}
+    plan = FaultPlan({"stage": {"times": 2}}, seed=3)
+    with tempfile.TemporaryDirectory() as cache:
+        db = connect(tables, stats="auto", options=ConnectOptions(
+            cache_dir=cache, faults=plan,
+        ))
+        db.models.publish("gate", _toy_pipeline())
+        prep = db.sql(
+            "SELECT * FROM PREDICT(model='gate', data=t) AS p"
+        ).prepare(transform="sql")
+        prep.serve("gate_q", options=ServeOptions(
+            retry=RetryPolicy(max_attempts=4, backoff_ms=0.25),
+        ))
+        for _ in range(3):
+            req = prep.submit(batch)
+            db.flush()
+            req.wait(timeout=60.0)
+        # v2 must pickle (the journal persists pipelines); the with_udf
+        # variant closes over a local function, which pickle rejects —
+        # exactly the fail-soft skip path, but not what this drill tests
+        db.models.publish("gate", _toy_pipeline(), warm="sync")
+        db.models.cutover("gate", 2)
+        for _ in range(3):
+            req = prep.submit(batch)
+            db.flush()
+            req.wait(timeout=60.0)
+        restored = db.models.check_rollback("gate", RollbackPolicy(
+            max_p99_ratio=1e-9, min_requests=1,
+        ))
+        vs = check_registry(db)
+        retries = db.server.scheduler.retries
+        if restored is None or restored.version != 1:
+            vs.append(Violation(
+                "recovery-journal",
+                f"forced rollback policy did not restore v1 (got "
+                f"{restored})", where="faultdrill",
+            ))
+        if not retries:
+            vs.append(Violation(
+                "retry-state",
+                "injected transient stage faults produced no scheduler "
+                "retries", where="faultdrill",
+            ))
+        db.close()
+
+        db2 = connect(tables, stats="auto", options=ConnectOptions(
+            cache_dir=cache,
+        ))
+        counts = db2.recover()
+        if not counts.get("recovered") or counts.get("skipped"):
+            vs.append(Violation(
+                "recovery-journal",
+                f"recover() did not restore the journaled topology: "
+                f"{counts}", where="faultdrill",
+            ))
+        vs += check_registry(db2)
+        db2.close()
+    for v in vs:
+        v.where = f"faultdrill: {v.where}" if v.where else "faultdrill"
+    res.violations += vs
+    if not vs:
+        res.passed.append(
+            f"faultdrill scenario: {retries} transient retries recovered, "
+            f"rollback restored v1, journal recovered clean "
+            f"({counts['routes']} route(s))"
+        )
+    return res
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -267,6 +359,7 @@ def main(argv=None) -> int:
     if not args.lint_only:
         result.extend(_verify_scenarios())
         result.extend(_verify_lifecycle())
+        result.extend(_verify_faultdrill())
 
     print(result.describe())
     if result.violations:

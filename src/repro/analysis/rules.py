@@ -190,6 +190,28 @@ REGISTRY_WARM = register(
     "unwarmed ladder entries (require_warm=False leaves a recorded deficit)",
 )
 
+# -- fault-tolerance rules ---------------------------------------------------
+
+RETRY_STATE = register(
+    "retry-state", "serving",
+    "scheduler retry accounting is sane: cumulative retries bound the "
+    "pending redo depth, and every queued redo entry's attempt count is "
+    "positive and below its queue's RetryPolicy max_attempts",
+)
+BREAKER_STATE = register(
+    "breaker-state", "serving",
+    "circuit-breaker state is consistent on every route version: a "
+    "degraded version has a compiled fallback plan (fingerprint-forked "
+    "from the primary), failure counts stay below the trip threshold "
+    "unless degraded, and trip counts never exceed recorded failures",
+)
+RECOVERY_JOURNAL = register(
+    "recovery-journal", "registry",
+    "the crash-recovery journal agrees with the in-memory registry: "
+    "live/shadow/split pointers, version counts and states, and tracked "
+    "route names in the journal match the registry that wrote it",
+)
+
 
 @dataclass
 class AnalysisResult:

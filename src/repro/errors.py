@@ -71,6 +71,53 @@ class ServerOverloadedError(RavenError):
     an ever-deeper backlog it can never serve within its latency targets."""
 
 
+class TransientError(RavenError):
+    """A failure that is safe to retry: the request group is still intact
+    and a re-dispatch of the same group may succeed (injected fault, dead
+    scheduler worker, torn artifact read). The scheduler's
+    :class:`~repro.exec.faults.RetryPolicy` only ever retries errors in
+    this family — anything else is treated as deterministic and fails the
+    group immediately."""
+
+
+class FaultInjectedError(RavenError):
+    """An error raised by the deterministic fault-injection harness
+    (:mod:`repro.exec.faults`). ``site`` names the injection point."""
+
+    def __init__(self, site: str, token: str = ""):
+        at = f" at {token}" if token else ""
+        super().__init__(f"injected fault at site '{site}'{at}")
+        self.site = site
+        self.token = token
+
+
+class TransientFaultError(FaultInjectedError, TransientError):
+    """An injected fault marked retryable (``FaultSpec(transient=True)``)."""
+
+
+class RequestTimeoutError(RavenError):
+    """``QueryRequest.wait(timeout=...)`` expired before the request
+    settled. The request itself is *not* cancelled — it may still complete
+    (or fail) later; the caller can wait again."""
+
+
+class RequestFailedError(RavenError):
+    """Terminal serving failure delivered to every waiter in a dispatch
+    group: the group's retries are exhausted (or the error was never
+    retryable) and the request will not produce a result. ``attempts``
+    counts dispatch attempts; the underlying error is ``__cause__``."""
+
+    def __init__(self, message: str, attempts: int = 1):
+        super().__init__(message)
+        self.attempts = attempts
+
+
+class RecoveryError(RavenError):
+    """``Session.recover()`` could not restore the registry from disk —
+    no journal exists under this registry fingerprint, the journal was
+    quarantined as corrupt, or it was written by an incompatible store."""
+
+
 class PlanVerificationError(RavenError):
     """The static plan verifier rejected a plan (``verify='strict'``).
 

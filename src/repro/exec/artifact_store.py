@@ -50,6 +50,7 @@ STORE_VERSION = 1
 
 _PLANS = "plans"
 _STAGES = "stages"
+_REGISTRY = "registry"
 _META = "meta.json"
 _PLAN_BLOB = "plan.pkl"
 _STAGE_BLOB = "exported.bin"
@@ -113,6 +114,13 @@ class StoreStats:
     save_errors: int = 0
     evictions: int = 0
     background_writes: int = 0  # stage exports handed to the writer thread
+    fallbacks: int = 0     # loads that fell back to live compilation because
+                           # the entry was corrupt/incompatible (not plain
+                           # misses) — the serving-visible degradation count
+    registry_saves: int = 0  # registry-journal writes (crash-safe recovery)
+    registry_loads: int = 0
+    registry_skipped: int = 0  # journal writes dropped (unpicklable state) —
+                               # the on-disk journal is stale from here on
 
     def snapshot(self) -> dict[str, int]:
         return dict(self.__dict__)
@@ -185,6 +193,9 @@ class ArtifactStore:
         from repro.relational.engine import plan_fingerprint
 
         d = os.path.join(self.root, _PLANS, query_fp)
+        if self._injected_read_fault(d, token=query_fp):
+            self.stats.plan_misses += 1
+            return None
         meta = self._read_meta(d)
         if meta is None:
             self.stats.plan_misses += 1
@@ -333,6 +344,9 @@ class ArtifactStore:
         from jax import export
 
         d = os.path.join(self.root, _STAGES, stage_fp, digest)
+        if self._injected_read_fault(d, token=stage_fp):
+            self.stats.stage_misses += 1
+            return None
         meta = self._read_meta(d)
         if meta is None:
             self.stats.stage_misses += 1
@@ -357,6 +371,75 @@ class ArtifactStore:
             return None
         self.stats.stage_hits += 1
         return call
+
+    # -- registry-journal layer ----------------------------------------------
+    # Unlike plans/stages, the journal is *mutable* state: one file per
+    # registry fingerprint, rewritten whole on every lifecycle mutation.
+    # ``tmp + os.replace`` keeps each rewrite atomic (a kill -9 mid-write
+    # leaves the previous complete journal in place), which is what makes
+    # ``Session.recover()`` crash-safe.
+
+    def _registry_path(self, key: str) -> str:
+        return os.path.join(self.root, _REGISTRY, f"{key}.pkl")
+
+    def save_registry(self, key: str, state: Any) -> bool:
+        """Atomically persist one registry journal under its fingerprint.
+
+        Returns False without writing when the state does not pickle
+        (e.g. a published pipeline closes over an unpicklable python UDF) —
+        the in-process registry still works; only crash recovery is
+        unavailable, and ``stats.skipped`` records it.
+        """
+        try:
+            blob = pickle.dumps({"header": compat_header(), "state": state})
+        except Exception:
+            self.stats.skipped += 1
+            self.stats.registry_skipped += 1
+            return False
+        d = os.path.join(self.root, _REGISTRY)
+        try:
+            os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(prefix=".journal_tmp_", dir=d)
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, self._registry_path(key))
+        except OSError:
+            self.stats.save_errors += 1
+            return False
+        self.stats.registry_saves += 1
+        return True
+
+    def load_registry(self, key: str) -> Optional[Any]:
+        """Load the journal for one registry fingerprint, or None.
+
+        Only the store version gates compatibility — the journal describes
+        route/version *topology*, which is backend-independent; the plan
+        and stage artifacts it points at check their own full headers."""
+        path = self._registry_path(key)
+        if self._injected_read_fault(path, token=key):
+            return None
+        try:
+            with open(path, "rb") as f:
+                payload = pickle.loads(f.read())
+            header, state = payload["header"], payload["state"]
+        except FileNotFoundError:
+            return None
+        except OSError:
+            return None
+        except Exception:
+            self.stats.corrupt += 1
+            self.stats.fallbacks += 1
+            try:
+                os.replace(path, path + ".quarantined")
+            except OSError:
+                pass
+            return None
+        if header.get("store_version") != STORE_VERSION:
+            self.stats.incompatible += 1
+            self.stats.fallbacks += 1
+            return None
+        self.stats.registry_loads += 1
+        return state
 
     def stage_digests(self, stage_fp: str) -> list[str]:
         """Every complete on-disk env digest for one stage fingerprint
@@ -423,16 +506,39 @@ class ArtifactStore:
             # possibly-healthy entry — just report a miss and move on
             return None
 
+    def _injected_read_fault(self, d: str, token: str = "") -> bool:
+        """The ``store-read`` fault site: when the installed
+        :class:`~repro.exec.faults.FaultPlan` fires here, the entry is
+        treated as torn on disk — quarantined through the real corruption
+        path (so the counters the serving layer surfaces are the real
+        ones) — and the load reports a miss. Store reads are fail-soft by
+        contract, so an injected read fault degrades to live compilation
+        and can never surface as a caller-visible error."""
+        from repro.errors import FaultInjectedError
+        from repro.exec.faults import maybe_inject
+
+        try:
+            maybe_inject("store-read", token=token)
+        except FaultInjectedError:
+            if os.path.exists(os.path.join(d, _META)):
+                self._quarantine(d)
+            else:
+                self.stats.fallbacks += 1
+            return True
+        return False
+
     def _compatible(self, meta: dict[str, Any]) -> bool:
         header = compat_header()
         if all(meta.get(k) == v for k, v in header.items()):
             return True
         self.stats.incompatible += 1
+        self.stats.fallbacks += 1
         return False
 
     def _quarantine(self, d: str) -> None:
         """Drop a corrupted/truncated entry so it is rebuilt, not retried."""
         self.stats.corrupt += 1
+        self.stats.fallbacks += 1
         shutil.rmtree(d, ignore_errors=True)
 
     def _entries(self) -> list[str]:
@@ -548,15 +654,24 @@ class ArtifactStore:
         *,
         max_age_s: Optional[float] = None,
         max_bytes: Optional[int] = None,
+        keys: Optional[set] = None,
         dry_run: bool = False,
     ) -> list["StoreEntry"]:
-        """Drop entries older than ``max_age_s`` and/or evict oldest-first
-        until the store fits in ``max_bytes``. Returns the victims (the
-        would-be victims under ``dry_run``, with nothing deleted)."""
+        """Drop entries older than ``max_age_s``, whose fingerprint key is
+        in ``keys`` (retired-version garbage collection), and/or evict
+        oldest-first until the store fits in ``max_bytes``. Returns the
+        victims (the would-be victims under ``dry_run``, with nothing
+        deleted)."""
         entries = self.entries()  # newest first
         victims: list[StoreEntry] = []
         if max_age_s is not None:
             victims.extend(e for e in entries if e.age_s > max_age_s)
+        if keys:
+            doomed = {e.path for e in victims}
+            victims.extend(
+                e for e in entries
+                if e.key in keys and e.path not in doomed
+            )
         if max_bytes is not None:
             doomed = {e.path for e in victims}
             total = sum(e.size_bytes for e in entries if e.path not in doomed)
@@ -630,6 +745,9 @@ def main(argv: Optional[list[str]] = None) -> int:
                     help="drop entries older than this many seconds")
     pr.add_argument("--max-bytes", type=int, default=None,
                     help="evict oldest-first until the store fits")
+    pr.add_argument("--key", action="append", default=None,
+                    help="drop entries with this exact fingerprint key "
+                         "(repeatable; retired-version GC)")
     pr.add_argument("--dry-run", action="store_true")
 
     args = ap.parse_args(argv)
@@ -657,10 +775,11 @@ def main(argv: Optional[list[str]] = None) -> int:
                   f"{_fmt_bytes(sum(e.size_bytes for e in rows))} total")
         return 0
 
-    if args.max_age_s is None and args.max_bytes is None:
-        ap.error("prune needs --max-age-s and/or --max-bytes")
+    if args.max_age_s is None and args.max_bytes is None and not args.key:
+        ap.error("prune needs --max-age-s, --max-bytes, and/or --key")
     victims = store.prune(
         max_age_s=args.max_age_s, max_bytes=args.max_bytes,
+        keys=set(args.key) if args.key else None,
         dry_run=args.dry_run,
     )
     verb = "would delete" if args.dry_run else "deleted"

@@ -23,11 +23,20 @@ target and bounds, and one pump thread schedules *groups* across them:
 
 The scheduler owns no execution logic: ``dispatch(name, group)`` — supplied
 by the server — must return a future resolving when the group's requests
-are finished (it is expected to contain its own failures by marking the
-affected requests; the scheduler just records ``last_error`` and moves on).
+are finished. Failure routing is split by retryability: a group future that
+fails with a :class:`~repro.errors.TransientError` is *requeued whole* (the
+coalesced group stays one unit) under the queue's
+:class:`~repro.exec.faults.RetryPolicy` — exponential backoff rides the
+queue's deadline machinery, no thread ever sleeps — until attempts or the
+per-query deadline run out, at which point the ``fail`` callback delivers a
+typed :class:`~repro.errors.RequestFailedError` to every waiter in the
+group (no orphaned waiters, ever). Non-transient failures are expected to
+be marked on the affected requests by the dispatch callback itself; the
+scheduler still runs ``fail`` defensively and records ``last_error``.
 ``drain()`` is the synchronous path: it pops and dispatches *everything*
-immediately, which is exactly the old ``server.flush()`` contract, so the
-scheduler works with no pump thread at all.
+immediately — including requeued groups, whose backoff it ignores (a flush
+means "serve now") — which is exactly the old ``server.flush()`` contract,
+so the scheduler works with no pump thread at all.
 """
 from __future__ import annotations
 
@@ -39,7 +48,12 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from repro.analysis.runtime import asserts_enabled, runtime_assert
-from repro.errors import ServerOverloadedError
+from repro.errors import (
+    RequestFailedError,
+    ServerOverloadedError,
+    TransientError,
+)
+from repro.exec.faults import RetryPolicy, maybe_inject
 
 
 @dataclass
@@ -52,10 +66,27 @@ class QueryQueue:
     max_pending: Optional[int] = None       # None -> unbounded
     max_coalesce: Optional[int] = None      # rows/group; None -> sched default
     last_pop: float = 0.0  # when this queue last got service (fairness key)
+    retry: Optional[RetryPolicy] = None     # None -> scheduler default
+    # transiently-failed groups awaiting re-dispatch: (group, attempt,
+    # not_before) — kept whole so retry never re-splits a coalesced group
+    redo: deque = field(default_factory=deque)
 
     @property
     def depth(self) -> int:
         return len(self.reqs)
+
+
+def _default_fail(group: list, e: BaseException) -> None:
+    """Terminal-failure delivery for bare schedulers (no server): attach
+    the error to every not-yet-settled request and wake its waiters. The
+    serving layer passes its own ``_fail_group`` instead."""
+    for r in group:
+        if getattr(r, "done", False):
+            continue
+        r.error = e
+        ev = getattr(r, "_event", None)
+        if ev is not None:
+            ev.set()
 
 
 class Scheduler:
@@ -68,11 +99,19 @@ class Scheduler:
         default_latency_ms: float = 5.0,
         default_coalesce: Optional[int] = None,
         max_inflight: int = 4,
+        default_retry: Optional[RetryPolicy] = None,
+        fail: Optional[Callable[[list, BaseException], None]] = None,
     ):
         self._dispatch = dispatch
+        self._fail = fail if fail is not None else _default_fail
         self.default_latency_ms = float(default_latency_ms)
         self.default_coalesce = default_coalesce
         self.max_inflight = max(1, int(max_inflight))
+        # retry applies only to TransientError failures, so it is on by
+        # default: deterministic failures never enter the retry path
+        self.default_retry = (
+            default_retry if default_retry is not None else RetryPolicy()
+        )
         self._cv = threading.Condition()
         self._queues: dict[str, QueryQueue] = {}
         self._thread: Optional[threading.Thread] = None
@@ -87,6 +126,8 @@ class Scheduler:
         self.backpressure_waits = 0
         self.overloads = 0
         self.max_queue_depth = 0
+        self.retries = 0            # groups requeued after a transient failure
+        self.retries_exhausted = 0  # groups failed terminally after retries
         self.last_error: Optional[BaseException] = None
 
     # -- queue management -----------------------------------------------------
@@ -98,6 +139,7 @@ class Scheduler:
         max_latency_ms: Optional[float] = None,
         max_pending: Optional[int] = None,
         max_coalesce: Optional[int] = None,
+        retry: Optional[RetryPolicy] = None,
     ) -> QueryQueue:
         """Create (or retune) the queue for ``name``; None leaves a knob."""
         with self._cv:
@@ -110,6 +152,8 @@ class Scheduler:
                 q.max_pending = int(max_pending)
             if max_coalesce is not None:
                 q.max_coalesce = int(max_coalesce)
+            if retry is not None:
+                q.retry = retry
             return q
 
     def depths(self) -> dict[str, int]:
@@ -134,6 +178,11 @@ class Scheduler:
                 "backpressure_waits": self.backpressure_waits,
                 "overloads": self.overloads,
                 "max_queue_depth": self.max_queue_depth,
+                "retries": self.retries,
+                "retries_exhausted": self.retries_exhausted,
+                "redo_depth": sum(
+                    len(q.redo) for q in self._queues.values()
+                ),
             }
 
     # -- producer side --------------------------------------------------------
@@ -219,11 +268,20 @@ class Scheduler:
     # -- scheduling -----------------------------------------------------------
 
     def _deadline(self, q: QueryQueue) -> float:
-        target = (
-            q.max_latency_ms if q.max_latency_ms is not None
-            else self.default_latency_ms
-        )
-        return q.reqs[0][0].t_submit + target / 1e3
+        """When ``q`` next wants service: its oldest fresh request's latency
+        deadline, or a requeued group's backoff expiry — whichever is
+        sooner. Backoff is therefore just a deadline in the future: the
+        pump's existing timed wait implements it with no sleeping thread."""
+        ds = []
+        if q.reqs:
+            target = (
+                q.max_latency_ms if q.max_latency_ms is not None
+                else self.default_latency_ms
+            )
+            ds.append(q.reqs[0][0].t_submit + target / 1e3)
+        if q.redo:
+            ds.append(min(nb for _g, _a, nb in q.redo))
+        return min(ds)
 
     def _earliest(self, now: Optional[float] = None) -> Optional[QueryQueue]:
         """The nonempty queue to serve next: earliest deadline first, with a
@@ -238,7 +296,7 @@ class Scheduler:
         best: Optional[QueryQueue] = None
         best_key: tuple = ()
         for q in self._queues.values():
-            if not q.reqs:
+            if not q.reqs and not q.redo:
                 continue
             d = self._deadline(q)
             # not yet due: sort by deadline after every overdue queue;
@@ -250,8 +308,23 @@ class Scheduler:
                 best, best_key = q, key
         return best
 
-    def _pop_group(self, q: QueryQueue) -> list:
-        """Take the head of ``q`` up to its coalesce-width cap (>= 1 req)."""
+    def _pop_group(
+        self, q: QueryQueue, due_only: bool = True
+    ) -> tuple[list, int]:
+        """Take the next unit of work off ``q``: a requeued group whose
+        backoff has expired (served whole — retry never re-splits a
+        coalesced group) ahead of fresh requests, else the head of the
+        fresh queue up to its coalesce-width cap. Returns
+        ``(group, attempt)``; fresh groups are attempt 0. ``due_only=False``
+        (drain) ignores backoff expiry — a flush means "serve now"."""
+        now = time.perf_counter()
+        for i, (group, attempt, nb) in enumerate(q.redo):
+            if due_only and nb > now:
+                continue
+            del q.redo[i]
+            q.last_pop = now
+            self._cv.notify_all()
+            return group, attempt
         cap = (
             q.max_coalesce if q.max_coalesce is not None
             else self.default_coalesce
@@ -265,7 +338,7 @@ class Scheduler:
             q.reqs.popleft()
             group.append(req)
             rows += n
-        q.last_pop = time.perf_counter()
+        q.last_pop = now
         self._cv.notify_all()  # wake backpressured submitters
         if asserts_enabled():
             runtime_assert(len(group) >= 1, "popped an empty group")
@@ -274,7 +347,7 @@ class Scheduler:
                 len(rids) == len(set(rids)),
                 f"popped group for '{q.name}' contains duplicate requests",
             )
-        return group
+        return group, 0
 
     def _loop(self) -> None:
         while True:
@@ -297,16 +370,24 @@ class Scheduler:
                     break
                 if self._stopped:
                     return
-                group = self._pop_group(q)
+                group, attempt = self._pop_group(q)
                 self._inflight += 1
                 self._pump_started += 1
                 self.flushes += 1
                 name = q.name
             fut = self._dispatch_safe(name, group)
-            fut.add_done_callback(self._group_done)
+            fut.add_done_callback(
+                lambda f, n=name, g=group, a=attempt: self._group_done(
+                    f, n, g, a
+                )
+            )
 
-    def _group_done(self, fut: "Future") -> None:
+    def _group_done(
+        self, fut: "Future", name: str, group: list, attempt: int
+    ) -> None:
         e = fut.exception()
+        if e is not None:
+            self._settle_failure(name, group, attempt, e)
         with self._cv:
             self._inflight -= 1
             self._pump_settled += 1
@@ -314,8 +395,63 @@ class Scheduler:
                 self.last_error = e
             self._cv.notify_all()
 
+    def _settle_failure(
+        self, name: str, group: list, attempt: int, e: BaseException
+    ) -> Optional[BaseException]:
+        """Route one dispatched group's failure.
+
+        Transient failures with retry budget left are requeued whole
+        (returns None); everything else is terminal — the ``fail`` callback
+        marks every request in the group so no waiter is ever orphaned, and
+        the terminal error is returned for the synchronous path to raise.
+        """
+        attempts = attempt + 1
+        if isinstance(e, TransientError):
+            with self._cv:
+                q = self._queues.get(name)
+                policy = (
+                    q.retry if q is not None and q.retry is not None
+                    else self.default_retry
+                )
+                within_deadline = True
+                if policy is not None and policy.deadline_ms is not None:
+                    oldest = min(
+                        (getattr(r, "t_submit", None) for r in group),
+                        default=None,
+                        key=lambda t: float("inf") if t is None else t,
+                    )
+                    if oldest is not None:
+                        elapsed_ms = (time.perf_counter() - oldest) * 1e3
+                        within_deadline = elapsed_ms < policy.deadline_ms
+                if (
+                    policy is not None
+                    and q is not None
+                    and attempts < policy.max_attempts
+                    and within_deadline
+                ):
+                    nb = time.perf_counter() + policy.delay_s(attempts, name)
+                    q.redo.append((group, attempts, nb))
+                    self.retries += 1
+                    self._cv.notify_all()
+                    return None
+                self.retries_exhausted += 1
+            terminal: BaseException = RequestFailedError(
+                f"group for '{name}' failed after {attempts} attempt(s): {e}",
+                attempts=attempts,
+            )
+            terminal.__cause__ = e
+        else:
+            # deterministic failure: the dispatch callback already marked
+            # the requests; fail() below is an idempotent safety net
+            terminal = e
+        self._fail(group, terminal)
+        return terminal
+
     def _dispatch_safe(self, name: str, group: list) -> "Future":
         try:
+            # "worker" fault site: the scheduler worker dies mid-dispatch —
+            # the popped group must flow into the retry path, never be lost
+            maybe_inject("worker", token=name)
             return self._dispatch(name, group)
         except BaseException as e:  # noqa: BLE001 — contain; requests carry it
             f: Future = Future()
@@ -327,42 +463,64 @@ class Scheduler:
     def drain(self) -> list:
         """Snapshot and dispatch every *currently pending* request (EDF
         order), wait for completion, and return the drained requests.
-        Re-raises the first group failure after every group has settled —
-        the old synchronous ``flush()`` contract.
+        Re-raises the first *terminal* group failure after every group has
+        settled — the old synchronous ``flush()`` contract. Transient
+        failures are retried inline (backoff ignored — the caller is
+        already blocked waiting) until they succeed or exhaust their
+        policy, so a flush never returns with a request still pending.
 
         Bounded under sustained load: requests submitted after the snapshot
         ride the next flush, and the final wait covers only pump groups
         popped before this call — so "submit, flush, read the result" stays
         correct even when the pump raced this call to the queue, without
-        flush() chasing global quiescence forever."""
-        todo: list[tuple[str, list]] = []
+        flush() chasing global quiescence forever. Retry rounds are bounded
+        by ``RetryPolicy.max_attempts``."""
+        drained: list = []
+        first: Optional[BaseException] = None
         with self._cv:
             pump_target = self._pump_started
-            while True:
-                q = self._earliest()
-                if q is None:
-                    break
-                todo.append((q.name, self._pop_group(q)))
-        if asserts_enabled():
-            ids = [id(r) for _name, g in todo for r in g]
-            runtime_assert(
-                len(ids) == len(set(ids)),
-                "drain snapshot contains duplicated requests",
+        while True:
+            todo: list[tuple[str, list, int]] = []
+            with self._cv:
+                while True:
+                    q = self._earliest()
+                    if q is None:
+                        break
+                    group, attempt = self._pop_group(q, due_only=False)
+                    todo.append((q.name, group, attempt))
+            if not todo:
+                with self._cv:
+                    if self._pump_settled < pump_target:
+                        # pump groups popped before this call may still
+                        # settle into a retry requeue we must then serve
+                        self._cv.wait(1.0)
+                        continue
+                    if any(q.redo for q in self._queues.values()):
+                        continue
+                    if first is not None:
+                        self.last_error = first
+                break
+            if asserts_enabled():
+                ids = [id(r) for _name, g, _a in todo for r in g]
+                runtime_assert(
+                    len(ids) == len(set(ids)),
+                    "drain snapshot contains duplicated requests",
+                )
+            dispatched = [
+                (name, group, attempt, self._dispatch_safe(name, group))
+                for name, group, attempt in todo
+            ]
+            drained.extend(
+                r for _n, group, attempt, _f in dispatched
+                if attempt == 0 for r in group
             )
-        dispatched = [
-            (group, self._dispatch_safe(name, group)) for name, group in todo
-        ]
-        drained = [r for _name, group in todo for r in group]
-        first: Optional[BaseException] = None
-        for _group, fut in dispatched:
-            e = fut.exception()  # blocks until the group settles
-            if e is not None and first is None:
-                first = e
-        with self._cv:
-            while self._pump_settled < pump_target:
-                self._cv.wait(1.0)
-            if first is not None:
-                self.last_error = first
+            for name, group, attempt, fut in dispatched:
+                e = fut.exception()  # blocks until the group settles
+                if e is None:
+                    continue
+                terminal = self._settle_failure(name, group, attempt, e)
+                if terminal is not None and first is None:
+                    first = terminal
         if first is not None:
             raise first
         return drained

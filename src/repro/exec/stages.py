@@ -689,6 +689,11 @@ def host_step(
     the dispatch thread keeps feeding the device. Returns the new state and
     the env (with ``__mid__`` installed) for the downstream stages.
     """
+    from repro.exec.faults import maybe_inject
+
+    # "udf" fault site: the interpreted ML runtime raises at the host
+    # boundary (the Spark→Python-UDF failure mode), before any device sync
+    maybe_inject("udf", token=stage.fingerprint)
     cols, valid, seg = state
     np_cols = {k: np.asarray(v) for k, v in cols.items()}
     mask = np.asarray(valid)

@@ -56,6 +56,12 @@ class ConnectOptions:
     cache_dir: Optional[str] = None
     cache_max_bytes: Optional[int] = None
     verify: Union[str, bool, None] = None
+    # fault-tolerance knobs: a seeded FaultPlan installed process-wide for
+    # the session's lifetime (deterministic chaos drills; RAVEN_FAULTS is
+    # the env equivalent), and the RollbackPolicy the model registry's
+    # rollback guard enforces on live versions after a cutover
+    faults: Optional[Any] = None             # repro.exec.faults.FaultPlan
+    rollback: Optional[Any] = None           # repro.exec.faults.RollbackPolicy
 
     @classmethod
     def resolve(
@@ -139,6 +145,7 @@ class ConnectOptions:
         return (
             self.optimizer, self.strategy, self.partition_cols,
             self.cache_dir, self.cache_max_bytes, self.verify,
+            self.faults, self.rollback,
         )
 
     def describe(self) -> str:
@@ -162,6 +169,11 @@ class ServeOptions:
     max_pending: Optional[int] = None
     max_coalesce: Optional[int] = None
     donate: bool = True
+    # fault tolerance: the queue's transient-failure RetryPolicy (None uses
+    # the scheduler default) and the consecutive-failure count that trips
+    # this query's circuit breaker onto the kernel-free fallback plan
+    retry: Optional[Any] = None              # repro.exec.faults.RetryPolicy
+    breaker_threshold: Optional[int] = None
 
     @classmethod
     def resolve(
@@ -207,7 +219,8 @@ class ServeOptions:
 
         return fingerprint(
             "serve-options", self.max_latency_ms, self.max_pending,
-            self.max_coalesce, self.donate,
+            self.max_coalesce, self.donate, self.retry,
+            self.breaker_threshold,
         )
 
     def describe(self) -> str:

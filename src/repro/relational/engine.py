@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.exec.faults import maybe_inject
 from repro.relational.expr import Expr
 from repro.relational.table import Table
 
@@ -438,7 +439,10 @@ class _StageRunner:
         def traced(env, _fn=stage.fn, _stage=stage):
             # python side effects run at trace time only: this counts
             # actual XLA compiles (one per new env shape/dtype structure),
-            # attributed both globally and to this specific stage
+            # attributed both globally and to this specific stage — and is
+            # exactly where a "compile" fault fires (a failure that only
+            # occurs when specializing, never on a warm call)
+            maybe_inject("compile", token=_stage.fingerprint)
             _stage.traces += 1
             PLAN_CACHE_STATS.traces += 1
             PLAN_CACHE_STATS.stage_traces[_stage.fingerprint] = (
@@ -457,6 +461,7 @@ class _StageRunner:
         if self._jitted_donating is None:
             def traced2(volatile, resident, _fn=self.stage.fn,
                         _stage=self.stage):
+                maybe_inject("compile", token=_stage.fingerprint)
                 _stage.traces += 1
                 PLAN_CACHE_STATS.traces += 1
                 PLAN_CACHE_STATS.stage_traces[_stage.fingerprint] = (
@@ -474,6 +479,11 @@ class _StageRunner:
         return self._jitted_donating(volatile, resident)
 
     def __call__(self, env, donate: frozenset = frozenset()):
+        # fault sites: "latency" stalls the stage (slow-stage spike),
+        # "stage" raises at call time; tokens carry the stage fingerprint
+        # so a plan can target one stage (e.g. only the kernel-mode fork)
+        maybe_inject("latency", token=self.stage.fingerprint)
+        maybe_inject("stage", token=self.stage.fingerprint)
         store = get_artifact_store()
         if store is None or not self.stage.content_stable:
             # identity-hashed fingerprint components are meaningless in any

@@ -51,8 +51,10 @@ re-``register`` (new plan under the same name) invalidates them.
 from __future__ import annotations
 
 import itertools
+import os
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any, Optional
@@ -73,11 +75,14 @@ from repro.core.optimizer import OptimizationReport, OptimizerOptions, RavenOpti
 from repro.errors import (
     RavenError,
     RegistryStateError,
+    RequestTimeoutError,
     StaleQueryError,
+    TransientError,
     UnknownModelVersionError,
     UnknownQueryError,
     check_params,
 )
+from repro.exec.faults import RetryPolicy, get_fault_plan, maybe_inject
 from repro.exec.pipeline import PipelineExecutor
 from repro.exec.scheduler import Scheduler
 from repro.exec.stages import seg_bucket
@@ -138,13 +143,22 @@ class QueryRequest:
 
     def wait(self, timeout: Optional[float] = None) -> dict[str, np.ndarray]:
         """Block until this request's result is ready (pump-driven serving)
-        and return it; re-raises the execution error if its batch failed."""
+        and return it; re-raises the execution error if its batch failed.
+
+        An expired ``timeout`` raises the typed
+        :class:`~repro.errors.RequestTimeoutError` — the caller can tell "the
+        server never answered" apart from "the server answered with a
+        failure" (typed Raven errors re-raise as themselves; foreign
+        exceptions are wrapped so the waiter always sees a
+        :class:`~repro.errors.RavenError`)."""
         if not self._event.wait(timeout):
-            raise RavenError(
+            raise RequestTimeoutError(
                 f"request {self.rid} for query '{self.query}' not served "
                 f"within {timeout}s — is a pump running / was flush() called?"
             )
         if self.error is not None:
+            if isinstance(self.error, RavenError):
+                raise self.error
             raise RavenError(
                 f"request {self.rid} for query '{self.query}' failed during "
                 f"execution: {self.error}"
@@ -179,6 +193,7 @@ class ServerStats:
     cutovers: int = 0            # atomic version swaps completed
     shadow_mirrored_groups: int = 0  # groups mirrored to a shadow version
     warm_replayed_buckets: int = 0   # ladder entries replayed by warm_version
+    breaker_trips: int = 0       # registrations degraded to the fallback plan
 
     def snapshot(self) -> dict[str, int]:
         return dict(self.__dict__)
@@ -191,6 +206,10 @@ class VersionStats:
     groups: int = 0              # dispatched groups this version executed
     requests: int = 0
     rows: int = 0
+    errors: int = 0              # dispatched groups that failed on this
+    #                              version — counted even when the scheduler
+    #                              retried the group to success, so a rollback
+    #                              guard sees trouble before users do
     shadow_groups: int = 0       # mirrored groups this version scored
     shadow_rows: int = 0         # mirrored rows compared against the primary
     shadow_diff_rows: int = 0    # compared rows that were not bitwise equal
@@ -222,11 +241,31 @@ class RegisteredQuery:
     # (bucket, seg_slots) entries this registration has executed or replayed
     # — the per-version warm coverage the cutover gate checks
     warmed_ladder: set = field(default_factory=set)
+    # circuit breaker: `breaker_threshold` consecutive dispatch failures trip
+    # this registration onto a fallback plan compiled with the relational
+    # kernels disabled (fingerprint-forked; bitwise-identical results per the
+    # kernel parity contract) — a persistent kernel/compile fault degrades
+    # the query instead of failing every request forever
+    breaker_threshold: int = 3
+    breaker_failures: int = 0     # consecutive failures; reset on success
+    breaker_trips: int = 0
+    degraded: bool = False
+    fallback: Optional[CompiledPlan] = None
+
+    @property
+    def active(self) -> CompiledPlan:
+        """The plan serving this registration's traffic right now: the
+        kernel-free fallback once the breaker tripped (and its compile
+        landed), the primary compiled plan otherwise."""
+        fb = self.fallback
+        return fb if (self.degraded and fb is not None) else self.compiled
 
     @property
     def recompiles(self) -> int:
-        """XLA stage tracings attributable to this query's compiled plan."""
-        return self.compiled.traces
+        """XLA stage tracings attributable to this query's compiled plan
+        (fallback included once the breaker tripped)."""
+        fb = self.fallback
+        return self.compiled.traces + (fb.traces if fb is not None else 0)
 
     @property
     def sliceable(self) -> bool:
@@ -267,12 +306,28 @@ class QueryRoute:
     # rule asserts this stayed zero
     last_cutover_deficit: int = 0
     _wrr: dict[str, float] = field(default_factory=dict)  # smooth-WRR credit
+    # per-version rolling request latencies (ms, bounded window) — the p99
+    # signal the registry's rollback guard compares against its baseline
+    latencies: dict[str, deque] = field(default_factory=dict, repr=False)
 
     def version_stats(self, label: str) -> VersionStats:
         st = self.stats.get(label)
         if st is None:
             st = self.stats[label] = VersionStats()
         return st
+
+    def record_latency(self, label: str, ms: float) -> None:
+        dq = self.latencies.get(label)
+        if dq is None:
+            dq = self.latencies[label] = deque(maxlen=256)
+        dq.append(float(ms))
+
+    def p99_ms(self, label: str) -> float:
+        """p99 over the version's rolling latency window (0.0 when empty)."""
+        xs = sorted(self.latencies.get(label) or ())
+        if not xs:
+            return 0.0
+        return xs[min(len(xs) - 1, int(len(xs) * 0.99))]
 
     def snapshot(self) -> dict[str, Any]:
         return {
@@ -287,6 +342,13 @@ class QueryRoute:
                     "plan_fingerprint": reg.compiled.fingerprint,
                     "warmed": reg.warmed,
                     "traces": reg.compiled.traces,
+                    "degraded": reg.degraded,
+                    "breaker_failures": reg.breaker_failures,
+                    "breaker_trips": reg.breaker_trips,
+                    "fallback_traces": (
+                        reg.fallback.traces if reg.fallback is not None else 0
+                    ),
+                    "p99_ms": self.p99_ms(label),
                     **self.version_stats(label).snapshot(),
                 }
                 for label, reg in self.versions.items()
@@ -325,6 +387,9 @@ class PredictionQueryServer:
             self._dispatch_group,
             default_coalesce=max_bucket,
             max_inflight=max_inflight,
+            # terminal-failure delivery: when a group exhausts its retries
+            # (or fails deterministically) every waiter gets the typed error
+            fail=self._fail_group,
         )
         self._optimized: dict[str, tuple[PhysicalPlan, OptimizationReport]] = {}
         self._pins: list[Any] = []  # keeps identity-hashed objects alive
@@ -350,6 +415,8 @@ class PredictionQueryServer:
         max_coalesce: Optional[int] = None,
         version_label: str = "v1",
         donate: bool = True,
+        retry: Optional[RetryPolicy] = None,
+        breaker_threshold: Optional[int] = None,
     ) -> RegisteredQuery:
         """Optimize + compile ``query`` and make it servable under ``name``.
 
@@ -376,6 +443,11 @@ class PredictionQueryServer:
         replaces its whole route and mints a new token — outstanding submit
         handles go stale, which is the intended guard against serving a
         structurally different query through an old handle.
+
+        ``retry`` overrides the scheduler's default
+        :class:`~repro.exec.faults.RetryPolicy` for this queue;
+        ``breaker_threshold`` the consecutive-failure count that trips this
+        query's circuit breaker onto the kernel-free fallback plan.
         """
         token = f"route#{next(self._reg_serial)}"
         reg = self._build_registration(
@@ -383,6 +455,8 @@ class PredictionQueryServer:
             optimized=optimized, params=params, token=token,
             version_label=version_label, donate=donate,
         )
+        if breaker_threshold is not None:
+            reg.breaker_threshold = max(1, int(breaker_threshold))
         route = QueryRoute(name=name, token=token, live=version_label)
         route.versions[version_label] = reg
         route.required = set(reg.scan_columns)
@@ -391,7 +465,7 @@ class PredictionQueryServer:
             self.queries[name] = reg
         self.scheduler.configure(
             name, max_latency_ms=max_latency_ms, max_pending=max_pending,
-            max_coalesce=max_coalesce,
+            max_coalesce=max_coalesce, retry=retry,
         )
         with self._lock:
             self.stats.queries_registered += 1
@@ -612,6 +686,7 @@ class PredictionQueryServer:
                 f"route's registered submit dtypes: {drift}"
             )
         with self._lock:
+            reg.breaker_threshold = live.breaker_threshold
             route.versions[version_label] = reg
             route.version_stats(version_label)  # materialize the counter row
         return reg
@@ -890,9 +965,18 @@ class PredictionQueryServer:
     def _dispatch_group(self, name: str, group: list[QueryRequest]) -> Future:
         """Execute one scheduler group; returns a future resolving when every
         request in the group is finished (or failed). Never raises — a
-        failure is attached to the group's requests and the future."""
+        failure lands on the future, and *deterministic* failures are also
+        attached to the group's requests here. Transient failures leave the
+        requests unsettled on purpose: the scheduler owns them — it requeues
+        the group whole (retry/backoff) or, once the policy is exhausted,
+        delivers a typed :class:`~repro.errors.RequestFailedError` to every
+        waiter via the ``fail`` callback."""
         done: Future = Future()
+        reg: Optional[RegisteredQuery] = None
         try:
+            # "dispatch" fault site: the whole group dispatch raises before
+            # any stage runs — the canonical transient-retry drill
+            maybe_inject("dispatch", token=name)
             reg = self._registered(name)
             route = self.routes.get(name)
             shadow_reg = None
@@ -932,6 +1016,7 @@ class PredictionQueryServer:
 
             if not self.pipelined:
                 self._run_group(reg, group)
+                self._record_success(reg)
                 done.set_result(group)
                 _mirror()
                 return done
@@ -942,12 +1027,13 @@ class PredictionQueryServer:
                 # pump stays responsive
                 f = self.executor.pool.submit(self._run_group, reg, group)
 
-                def _chunked_done(f2, _group=group, _done=done):
+                def _chunked_done(f2, _reg=reg, _group=group, _done=done):
                     e = f2.exception()
                     if e is not None:
-                        self._fail_group(_group, e)
+                        self._settle_dispatch_failure(_reg, _group, e)
                         _done.set_exception(e)
                     else:
+                        self._record_success(_reg)
                         _done.set_result(_group)
 
                 f.add_done_callback(_chunked_done)
@@ -961,18 +1047,91 @@ class PredictionQueryServer:
                 try:
                     res = f2.result()
                     self._split_group(_reg, _group, res, _n)
+                    self._record_success(_reg)
                     _done.set_result(_group)
                 except BaseException as e:  # noqa: BLE001
-                    self._fail_group(_group, e)
+                    self._settle_dispatch_failure(_reg, _group, e)
                     _done.set_exception(e)
 
             gfut.add_done_callback(_complete)
             _mirror()
         except BaseException as e:  # noqa: BLE001
-            self._fail_group(group, e)
+            self._settle_dispatch_failure(reg, group, e)
             if not done.done():
                 done.set_exception(e)
         return done
+
+    def _settle_dispatch_failure(
+        self,
+        reg: Optional[RegisteredQuery],
+        group: list[QueryRequest],
+        e: BaseException,
+    ) -> None:
+        """Route one group-execution failure: deterministic errors are
+        attached to the requests immediately; transient ones are left for
+        the scheduler (which requeues the group or fails it terminally
+        through the ``fail`` callback). Either way the failure counts toward
+        the serving version's error rate and its circuit breaker."""
+        if not isinstance(e, TransientError):
+            self._fail_group(group, e)
+        if reg is not None:
+            self._record_failure(reg)
+
+    def _record_failure(self, reg: RegisteredQuery) -> None:
+        trip = False
+        with self._lock:
+            route = self.routes.get(reg.name)
+            if route is not None:
+                route.version_stats(reg.version_label).errors += 1
+            reg.breaker_failures += 1
+            if (
+                not reg.degraded
+                and reg.fallback is None
+                and reg.breaker_failures >= reg.breaker_threshold
+            ):
+                # claim the trip under the lock; compile outside it
+                reg.degraded = True
+                trip = True
+        if trip:
+            self._degrade(reg)
+
+    def _record_success(self, reg: RegisteredQuery) -> None:
+        with self._lock:
+            reg.breaker_failures = 0
+
+    def _degrade(self, reg: RegisteredQuery) -> None:
+        """Trip the circuit breaker: compile this registration's plan with
+        the relational kernels disabled and route its traffic through the
+        result. The fallback is fingerprint-forked from the primary (the
+        kernel-mode token folds into plan/stage fingerprints) and
+        bitwise-identical by the kernel parity contract, so degradation
+        trades throughput for availability — never correctness. Plans with
+        no Join/Aggregate stage fork to the same fingerprint and the
+        "fallback" is simply the primary again."""
+        try:
+            prev = os.environ.get("RAVEN_KERNELS")
+            os.environ["RAVEN_KERNELS"] = "off"
+            try:
+                fb = compile_plan(reg.plan)
+            finally:
+                if prev is None:
+                    os.environ.pop("RAVEN_KERNELS", None)
+                else:
+                    os.environ["RAVEN_KERNELS"] = prev
+            from repro.relational.engine import get_artifact_store
+
+            if get_artifact_store() is not None:
+                fb.warm_start()
+        except BaseException:  # noqa: BLE001
+            # fallback compile failed too: release the claim so the next
+            # failure can re-trip; traffic keeps flowing on the primary
+            with self._lock:
+                reg.degraded = False
+            return
+        with self._lock:
+            reg.fallback = fb
+            reg.breaker_trips += 1
+            self.stats.breaker_trips += 1
 
     def _pick_version(
         self, route: QueryRoute
@@ -1145,8 +1304,11 @@ class PredictionQueryServer:
                 )
             segments = (ids, k)
 
+        # key on the *active* plan: a breaker-degraded registration serves
+        # (and warms buckets for) its fallback's fingerprint
+        active_fp = reg.active.fingerprint
         schema = tuple((c, str(reg.fact_dtypes[c])) for c in reg.scan_columns)
-        key = (reg.compiled.fingerprint, schema, bucket)
+        key = (active_fp, schema, bucket)
         # (row bucket, segment-slot bucket) is exactly the jit-specialization
         # key (segment *count* is a dynamic scalar): recording it on the
         # route is what lets warm_version replay an incoming version into
@@ -1166,7 +1328,7 @@ class PredictionQueryServer:
                 route.ladder.add(entry)
 
         def track_mid(stage_index: int, b: int) -> None:
-            mid_key = (reg.compiled.fingerprint, stage_index, b)
+            mid_key = (active_fp, stage_index, b)
             with self._lock:
                 if mid_key in self._seen_mid_buckets:
                     self.stats.mid_bucket_hits += 1
@@ -1200,7 +1362,7 @@ class PredictionQueryServer:
         segments: Optional[tuple[np.ndarray, int]] = None,
     ):
         """Serial padded execution (blocks at every stage)."""
-        return reg.compiled.run(**self._padded_kwargs(reg, fact_np, n, segments))
+        return reg.active.run(**self._padded_kwargs(reg, fact_np, n, segments))
 
     def _execute_padded_async(
         self,
@@ -1210,7 +1372,7 @@ class PredictionQueryServer:
         segments: Optional[tuple[np.ndarray, int]] = None,
     ) -> Future:
         """Pipelined padded execution; returns ``Future[RunResult]``."""
-        return reg.compiled.run_async(
+        return reg.active.run_async(
             executor=self.executor,
             **self._padded_kwargs(reg, fact_np, n, segments),
         )
@@ -1227,6 +1389,13 @@ class PredictionQueryServer:
             )
         req.done = True
         req.t_done = time.perf_counter()
+        if req.served_by:
+            with self._lock:
+                route = self.routes.get(req.query)
+                if route is not None:
+                    route.record_latency(
+                        req.served_by, (req.t_done - req.t_submit) * 1e3
+                    )
         req._event.set()
 
     def _positional_split(
@@ -1340,7 +1509,7 @@ class PredictionQueryServer:
             }
             for r in self.queries.values():
                 regs.setdefault(id(r), r)
-        return sum(r.compiled.traces for r in regs.values())
+        return sum(r.recompiles for r in regs.values())
 
     def stats_snapshot(self) -> dict[str, Any]:
         """Server counters merged with the scheduler's queue gauges, the
@@ -1350,6 +1519,8 @@ class PredictionQueryServer:
         out.update(self.scheduler.snapshot())
         out["queue_depths"] = self.scheduler.depths()
         out["pipeline"] = self.executor.snapshot()
+        plan = get_fault_plan()
+        out["faults_injected"] = plan.injected() if plan is not None else {}
         with self._lock:
             out["routes"] = {
                 name: route.snapshot() for name, route in self.routes.items()

@@ -53,9 +53,11 @@ from repro.core.optimizer import (
 )
 from repro.errors import (
     RavenError,
+    RecoveryError,
     UnknownTableError,
     check_params,
 )
+from repro.exec.faults import get_fault_plan, set_fault_plan
 from repro.options import ConnectOptions, ServeOptions
 from repro.relational.engine import (
     PhysicalPlan,
@@ -199,6 +201,12 @@ class Session:
         # which must *clear* a previous session's store rather than let it
         # keep intercepting (and writing to) every later compilation
         set_artifact_store(self.artifact_store)
+        # a session-supplied FaultPlan is installed process-wide for its
+        # lifetime (same most-recent-wins contract as the artifact store);
+        # without one, the RAVEN_FAULTS env plan (if any) stays in effect
+        self._fault_plan = copts.faults
+        if copts.faults is not None:
+            set_fault_plan(copts.faults)
         self._server: Optional[PredictionQueryServer] = None
         self._names = itertools.count()
 
@@ -257,6 +265,14 @@ class Session:
         artifact store's :class:`~repro.exec.artifact_store.StoreStats`
         under ``"artifact_store"``, so benchmarks and tests can assert
         zero-retrace warm paths without reaching into module globals.
+
+        Fault tolerance is accounted here too: the server snapshot carries
+        scheduler retry gauges (``retries``/``retries_exhausted``/
+        ``redo_depth``), ``breaker_trips``, per-version breaker/fallback
+        state in ``route_snapshot``, and ``faults_injected`` per injection
+        site when a :class:`~repro.exec.faults.FaultPlan` is installed; the
+        artifact-store snapshot carries corruption/quarantine and
+        ``fallbacks`` counts plus registry-journal save/load counters.
         """
         from repro.relational.engine import PLAN_CACHE_STATS
 
@@ -270,10 +286,11 @@ class Session:
         return out
 
     def close(self) -> None:
-        """Stop the background request pump (drains pending requests),
-        release the boundary pool, flush the artifact store's background
-        writer, and uninstall this session's artifact store (if still the
-        active one)."""
+        """Stop the background request pump (drains pending requests) and
+        any running rollback guards, release the boundary pool, flush the
+        artifact store's background writer, uninstall this session's
+        artifact store and fault plan (if still the active ones)."""
+        self.models.close()  # stop rollback guards before the pump drains
         if self._server is not None:
             self._server.shutdown()
         if self.artifact_store is not None:
@@ -282,6 +299,50 @@ class Session:
             self.artifact_store.close()  # flush writes + stop the writer
             if get_artifact_store() is self.artifact_store:
                 set_artifact_store(None)
+        if self._fault_plan is not None and get_fault_plan() is self._fault_plan:
+            set_fault_plan(None)
+
+    def recover(self) -> dict:
+        """Rebuild the model registry + serving topology from the journal.
+
+        A session opened with ``cache_dir`` journals every registry
+        lifecycle mutation (publish/shadow/split/cutover/retire/rollback and
+        route registrations) through the artifact store, keyed on the
+        session's table-schema fingerprint. After a crash, a fresh session
+        over the same tables and cache dir calls ``recover()`` to restore
+        published versions (with their recorded histories), live/shadow/
+        split pointers, the rollback log, and every served route — re-served
+        under its original name and options, its observed bucket ladder
+        restored and warm-replayed from on-disk stage executables, so the
+        recovered server answers previously-seen shapes with zero new XLA
+        traces. Returns ``{"recovered": False}`` when no journal exists,
+        else counts (models/versions/routes restored, routes skipped)."""
+        if self.artifact_store is None:
+            raise RecoveryError(
+                "recover() needs an artifact store — connect with "
+                "ConnectOptions(cache_dir=...)"
+            )
+        state = self.artifact_store.load_registry(self._journal_key())
+        if state is None:
+            return {"recovered": False}
+        counts = self.models._restore(state)
+        counts["recovered"] = True
+        return counts
+
+    def _journal_key(self) -> str:
+        """The registry journal's store key: a fingerprint of the session's
+        table schemas (names, columns, dtypes — not row contents), so a
+        restarted server over the same database finds its journal while a
+        schema change quietly orphans the stale one."""
+        from repro.core.fingerprint import fingerprint
+
+        return fingerprint(
+            "registry-journal",
+            tuple(
+                (t, tuple((c, str(v.dtype)) for c, v in sorted(cols.items())))
+                for t, cols in sorted(self.tables.items())
+            ),
+        )
 
     def __enter__(self) -> "Session":
         return self
@@ -636,6 +697,8 @@ class PreparedQuery:
             max_coalesce=sopts.max_coalesce,
             version_label=version_label,
             donate=sopts.donate,
+            retry=sopts.retry,
+            breaker_threshold=sopts.breaker_threshold,
         )
         self._serve_token = reg.token
         self._server = srv
@@ -690,6 +753,23 @@ class PreparedQuery:
         lines.append(f"connect: {session.connect_options.describe()}")
         if self._serve_options is not None:
             lines.append(f"serve:   {self._serve_options.describe()}")
+        model_ref = self.query.spec.model
+        if model_ref is not None:
+            name = str(model_ref).partition("@")[0]
+            rec = session.models.snapshot().get(name)
+            if rec is not None:
+                lines.append("-- model lifecycle " + "-" * 36)
+                extra = ""
+                if rec["shadow"] is not None:
+                    extra += f", shadow=v{rec['shadow']}"
+                if rec["split"]:
+                    extra += f", split={rec['split']}"
+                lines.append(f"{name}: live=v{rec['live']}{extra}")
+                for r in rec["rollbacks"]:
+                    lines.append(
+                        f"* rolled back v{r['from']} -> v{r['to']}: "
+                        f"{r['reason']}"
+                    )
         lines.append("-- logical plan (as written) " + "-" * 26)
         lines.append(format_logical_plan(self.query.ir.plan))
         lines.append("-- physical plan (optimized) " + "-" * 26)

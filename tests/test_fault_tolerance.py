@@ -1,0 +1,313 @@
+"""Fault tolerance: seeded injection, retry/backoff, breaker degradation.
+
+The acceptance contract under test: with deterministic faults injected at
+every instrumented site, the serving layer never hangs, never returns a
+wrong result (transient faults recover to bitwise-identical outputs), and
+every terminal failure surfaces as a *typed* error on exactly the affected
+waiters.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import repro as raven
+from repro.data.datasets import make_hospital
+from repro.exec.faults import FaultPlan, FaultSpec, get_fault_plan, set_fault_plan
+
+SQL = "SELECT * FROM PREDICT(model='risk', data=patients) AS p"
+
+
+def _batch(n: int, seed: int) -> dict[str, np.ndarray]:
+    return make_hospital(n, seed=seed).tables["patients"]
+
+
+def _serve(hospital, pipe, *, faults=None, retry=None, breaker_threshold=None,
+           cache_dir=None, transform="none"):
+    db = raven.connect(
+        hospital.tables, stats="auto",
+        options=raven.ConnectOptions(faults=faults, cache_dir=cache_dir),
+    )
+    db.models.publish("risk", pipe)
+    prep = db.sql(SQL).prepare(transform=transform)
+    prep.serve("q", options=raven.ServeOptions(
+        retry=retry, breaker_threshold=breaker_threshold,
+    ))
+    return db, prep
+
+
+@pytest.fixture(scope="module")
+def baseline(hospital, hospital_dt):
+    """No-fault ground truth for the host-boundary plan the matrix runs."""
+    db, prep = _serve(hospital, hospital_dt)
+    try:
+        req = prep.submit(_batch(128, seed=21))
+        db.flush()
+        return np.asarray(req.wait(timeout=60.0)["score"])
+    finally:
+        db.close()
+
+
+# -- the plan itself ---------------------------------------------------------
+
+def test_fault_plan_is_deterministic():
+    a = FaultPlan({"stage": {"rate": 0.5, "times": None}}, seed=9)
+    b = FaultPlan({"stage": {"rate": 0.5, "times": None}}, seed=9)
+    fired_a = [a.check("stage") is not None for _ in range(64)]
+    fired_b = [b.check("stage") is not None for _ in range(64)]
+    assert fired_a == fired_b          # pure function of (seed, site, index)
+    assert any(fired_a) and not all(fired_a)
+    c = FaultPlan({"stage": {"rate": 0.5}}, seed=10)
+    assert [c.check("stage") is not None for _ in range(64)] != fired_a
+
+
+def test_fault_plan_parse_env_format():
+    plan = FaultPlan.parse("seed=7; stage:times=2; latency:delay_ms=50,rate=0.5")
+    assert plan.seed == 7
+    assert plan.specs == (
+        FaultSpec(site="stage", times=2),
+        FaultSpec(site="latency", delay_ms=50.0, rate=0.5),
+    )
+    with pytest.raises(ValueError, match="unknown site"):
+        FaultPlan.parse("bogus:times=1")
+    with pytest.raises(ValueError, match="unknown site"):
+        FaultPlan({"bogus": {}})
+
+
+def test_session_installs_and_clears_plan(hospital):
+    plan = FaultPlan({"stage": {"times": 1}}, seed=1)
+    db = raven.connect(
+        hospital.tables, stats=None,
+        options=raven.ConnectOptions(faults=plan),
+    )
+    assert get_fault_plan() is plan
+    db.close()
+    assert get_fault_plan() is None
+
+
+# -- the matrix: every site, no hang, no wrong result ------------------------
+
+@pytest.mark.parametrize("site", ["dispatch", "stage", "udf", "worker"])
+def test_transient_fault_recovers_bitwise(site, hospital, hospital_dt, baseline):
+    plan = FaultPlan({site: {"times": 2}}, seed=11)
+    db, prep = _serve(
+        hospital, hospital_dt, faults=plan,
+        retry=raven.RetryPolicy(max_attempts=4, backoff_ms=0.25),
+    )
+    try:
+        req = prep.submit(_batch(128, seed=21))
+        db.flush()
+        out = np.asarray(req.wait(timeout=60.0)["score"])
+        assert plan.injected().get(site, 0) >= 1, "matrix leg was vacuous"
+        assert np.array_equal(out, baseline)
+        assert db.cache_stats()["server"]["faults_injected"] == plan.injected()
+    finally:
+        db.close()
+
+
+def test_transient_compile_fault_recovers_bitwise(hospital, hospital_dt):
+    # "compile" fires only when a stage actually traces a new XLA
+    # specialization; compiled plans are cached process-wide by
+    # fingerprint, so this leg needs a query no other test has compiled —
+    # and the faulted session must run FIRST, while the trace is fresh
+    sql = (
+        "SELECT * FROM PREDICT(model='risk', data=patients) AS p "
+        "WHERE p.age > 17.5"
+    )
+    plan = FaultPlan({"compile": {"times": 2}}, seed=11)
+    batch = _batch(128, seed=21)
+
+    db = raven.connect(
+        hospital.tables, stats="auto",
+        options=raven.ConnectOptions(faults=plan),
+    )
+    try:
+        db.models.publish("risk", hospital_dt)
+        prep = db.sql(sql).prepare(transform="none")
+        prep.serve("q", options=raven.ServeOptions(
+            retry=raven.RetryPolicy(max_attempts=4, backoff_ms=0.25),
+        ))
+        req = prep.submit(batch)
+        db.flush()
+        out = np.asarray(req.wait(timeout=60.0)["score"])
+        assert plan.injected().get("compile", 0) >= 1, "leg was vacuous"
+    finally:
+        db.close()
+
+    clean = raven.connect(hospital.tables, stats="auto")
+    try:
+        clean.models.publish("risk", hospital_dt)
+        prep = clean.sql(sql).prepare(transform="none")
+        prep.serve("q")
+        req = prep.submit(batch)
+        clean.flush()
+        assert np.array_equal(out, np.asarray(req.wait(timeout=60.0)["score"]))
+    finally:
+        clean.close()
+
+
+def test_latency_fault_stalls_but_answers(hospital, hospital_dt, baseline):
+    plan = FaultPlan({"latency": {"delay_ms": 30.0, "times": 2}}, seed=5)
+    db, prep = _serve(hospital, hospital_dt, faults=plan)
+    try:
+        req = prep.submit(_batch(128, seed=21))
+        db.flush()
+        out = np.asarray(req.wait(timeout=60.0)["score"])
+        assert plan.injected().get("latency", 0) >= 1
+        assert np.array_equal(out, baseline)
+    finally:
+        db.close()
+
+
+def test_store_read_fault_falls_back_to_live_compile(
+    tmp_path, hospital, hospital_dt, baseline
+):
+    # populate the store, then reconnect with every store read poisoned:
+    # loads degrade to live compilation — counted, never caller-visible
+    db, prep = _serve(hospital, hospital_dt, cache_dir=str(tmp_path / "c"))
+    req = prep.submit(_batch(128, seed=21))
+    db.flush()
+    req.wait(timeout=60.0)
+    db.close()
+
+    plan = FaultPlan({"store-read": {}}, seed=2)
+    db, prep = _serve(
+        hospital, hospital_dt, faults=plan, cache_dir=str(tmp_path / "c"),
+    )
+    try:
+        req = prep.submit(_batch(128, seed=21))
+        db.flush()
+        out = np.asarray(req.wait(timeout=60.0)["score"])
+        assert np.array_equal(out, baseline)
+        assert plan.injected().get("store-read", 0) >= 1
+        store = db.cache_stats()["artifact_store"]
+        assert store["corrupt"] >= 1 and store["fallbacks"] >= 1
+    finally:
+        db.close()
+
+
+# -- terminal failures: typed, delivered, contained --------------------------
+
+def test_terminal_fault_delivers_typed_error_to_every_waiter(
+    hospital, hospital_dt, baseline
+):
+    plan = FaultPlan({"dispatch": {"times": 1, "transient": False}}, seed=3)
+    db, prep = _serve(hospital, hospital_dt, faults=plan)
+    try:
+        # two requests on one bucket coalesce into the doomed group
+        r1 = prep.submit(_batch(128, seed=21))
+        r2 = prep.submit(_batch(128, seed=22))
+        with pytest.raises(raven.FaultInjectedError):
+            db.flush()
+        for r in (r1, r2):
+            with pytest.raises(raven.FaultInjectedError):
+                r.wait(timeout=5.0)
+        # the fault is spent: the route keeps serving, results exact
+        r3 = prep.submit(_batch(128, seed=21))
+        db.flush()
+        assert np.array_equal(
+            np.asarray(r3.wait(timeout=60.0)["score"]), baseline
+        )
+    finally:
+        db.close()
+
+
+def test_retries_exhausted_raises_request_failed(hospital, hospital_dt):
+    plan = FaultPlan({"stage": {"times": 10}}, seed=4)
+    db, prep = _serve(
+        hospital, hospital_dt, faults=plan,
+        retry=raven.RetryPolicy(max_attempts=2, backoff_ms=0.25),
+    )
+    try:
+        req = prep.submit(_batch(64, seed=1))
+        with pytest.raises(raven.RequestFailedError):
+            db.flush()
+        with pytest.raises(raven.RequestFailedError) as ei:
+            req.wait(timeout=5.0)
+        assert ei.value.attempts == 2
+        assert db.cache_stats()["server"]["retries_exhausted"] >= 1
+    finally:
+        db.close()
+
+
+def test_wait_timeout_is_typed(hospital, hospital_dt):
+    db, prep = _serve(hospital, hospital_dt)
+    try:
+        req = prep.submit(_batch(64, seed=1))  # nobody flushes
+        with pytest.raises(raven.RequestTimeoutError):
+            req.wait(timeout=0.05)
+        db.flush()  # leave the queue clean for close()
+        req.wait(timeout=30.0)
+    finally:
+        db.close()
+
+
+# -- circuit breaker: degrade to the kernel-free fallback --------------------
+
+def test_breaker_trips_and_degrades_bitwise(hospital, hospital_dt, baseline):
+    plan = FaultPlan({"stage": {"times": 3, "transient": False}}, seed=6)
+    db, prep = _serve(
+        hospital, hospital_dt, faults=plan, breaker_threshold=3,
+    )
+    try:
+        for i in range(3):
+            r = prep.submit(_batch(128, seed=21))
+            with pytest.raises(raven.FaultInjectedError):
+                db.flush()
+            with pytest.raises(raven.FaultInjectedError):
+                r.wait(timeout=5.0)
+        snap = db.server.route_snapshot("q")["versions"]["v1"]
+        assert snap["degraded"] and snap["breaker_trips"] == 1
+        # degraded traffic serves the kernel-free fallback, bitwise equal
+        # (kernel parity contract)
+        r = prep.submit(_batch(128, seed=21))
+        db.flush()
+        assert np.array_equal(
+            np.asarray(r.wait(timeout=60.0)["score"]), baseline
+        )
+        stats = db.cache_stats()["server"]
+        assert stats["breaker_trips"] == 1
+        from repro.analysis.registry_check import check_fault_tolerance
+
+        assert check_fault_tolerance(db) == []
+    finally:
+        db.close()
+
+
+def test_breaker_success_resets_failure_count(hospital, hospital_dt):
+    plan = FaultPlan({"stage": {"times": 1, "transient": False}}, seed=8)
+    db, prep = _serve(
+        hospital, hospital_dt, faults=plan, breaker_threshold=2,
+    )
+    try:
+        r = prep.submit(_batch(64, seed=1))
+        with pytest.raises(raven.FaultInjectedError):
+            db.flush()
+        r2 = prep.submit(_batch(64, seed=1))
+        db.flush()
+        r2.wait(timeout=60.0)
+        snap = db.server.route_snapshot("q")["versions"]["v1"]
+        assert snap["breaker_failures"] == 0 and not snap["degraded"]
+    finally:
+        db.close()
+
+
+# -- env-var plan ------------------------------------------------------------
+
+def test_env_fault_plan(hospital, hospital_dt, monkeypatch, baseline):
+    monkeypatch.setenv("RAVEN_FAULTS", "seed=12;stage:times=1")
+    assert get_fault_plan() is not None
+    db, prep = _serve(
+        hospital, hospital_dt,
+        retry=raven.RetryPolicy(max_attempts=3, backoff_ms=0.25),
+    )
+    try:
+        req = prep.submit(_batch(128, seed=21))
+        db.flush()
+        out = np.asarray(req.wait(timeout=60.0)["score"])
+        assert np.array_equal(out, baseline)
+        assert db.cache_stats()["server"]["retries"] >= 1
+    finally:
+        db.close()
+        monkeypatch.delenv("RAVEN_FAULTS")
+        set_fault_plan(None)

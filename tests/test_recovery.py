@@ -1,0 +1,285 @@
+"""Crash-safe registry recovery + the automated rollback drill.
+
+The acceptance contract: a process can die (``kill -9``) between any two
+requests and a fresh session over the same tables and cache dir rebuilds
+the *entire* serving topology — published versions with their histories,
+live/shadow/split pointers, the rollback log, every served route with its
+bucket ladder — and answers previously-seen shapes with zero new XLA
+traces and bitwise-identical results. Rollback rides the cutover
+machinery: zero dropped requests, zero retraces.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro as raven
+from repro.analysis.registry_check import check_registry
+from repro.data.datasets import make_hospital
+from repro.errors import RecoveryError
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SQL = "SELECT * FROM PREDICT(model='risk', data=patients) AS p"
+
+
+def _batch(n: int, seed: int) -> dict[str, np.ndarray]:
+    return make_hospital(n, seed=seed).tables["patients"]
+
+
+def _sums(db, prep) -> list[float]:
+    out = []
+    for i, n in enumerate((128, 256)):
+        req = prep.submit(_batch(n, seed=40 + i))
+        db.flush()
+        out.append(float(np.sum(req.wait(timeout=60.0)["score"])))
+    return out
+
+
+def _topology(db) -> dict:
+    snap = db.models.snapshot()["risk"]
+    return {
+        "live": snap["live"],
+        "shadow": snap["shadow"],
+        "split": snap["split"],
+        "routes": sorted(snap["routes"]),
+        "versions": [(v["version"], v["state"]) for v in snap["versions"]],
+    }
+
+
+# -- in-process A/B ----------------------------------------------------------
+
+def test_recover_restores_topology_and_results(
+    tmp_path, hospital, hospital_dt, hospital_lr
+):
+    opts = raven.ConnectOptions(cache_dir=str(tmp_path / "c"))
+    db = raven.connect(hospital.tables, stats="auto", options=opts)
+    db.models.publish("risk", hospital_dt)
+    prep = db.sql(SQL).prepare(transform="sql")
+    prep.serve("q")
+    sums_a = _sums(db, prep)  # v1 results, before any split
+    db.models.publish("risk", hospital_lr, warm="sync")
+    db.models.shadow("risk", 2)
+    db.models.split("risk", {2: 0.25})
+    topo_a = _topology(db)
+    db.artifact_store.drain()
+    db.close()
+
+    db2 = raven.connect(hospital.tables, stats="auto", options=opts)
+    try:
+        counts = db2.recover()
+        assert counts["recovered"]
+        assert counts["models"] == 1 and counts["versions"] == 2
+        assert counts["routes"] == 1 and counts["skipped"] == []
+        assert _topology(db2) == topo_a
+        assert check_registry(db2) == []
+        # route traffic deterministically back to v1 for the equality leg
+        # (shadow stays: mirrored, never returned)
+        db2.models.split("risk", {})
+        traces = db2.cache_stats()["traces"]
+        prep2 = db2.sql(SQL).prepare(transform="sql")
+        prep2.serve("q")
+        assert _sums(db2, prep2) == sums_a
+        # previously-seen shapes replay warm: the ladder was restored and
+        # the stage programs came off disk
+        assert db2.cache_stats()["traces"] == traces
+    finally:
+        db2.close()
+
+
+def test_recover_error_paths(tmp_path, hospital, hospital_dt):
+    db = raven.connect(hospital.tables, stats="auto")
+    with pytest.raises(RecoveryError, match="artifact store"):
+        db.recover()
+    db.close()
+
+    opts = raven.ConnectOptions(cache_dir=str(tmp_path / "c"))
+    db = raven.connect(hospital.tables, stats="auto", options=opts)
+    assert db.recover() == {"recovered": False}  # nothing journaled yet
+    db.models.publish("risk", hospital_dt)
+    with pytest.raises(RecoveryError, match="fresh"):
+        db.recover()  # refuses to clobber a non-empty registry
+    db.close()
+
+
+# -- rollback drill: zero dropped, zero retraced -----------------------------
+
+def test_rollback_drill_zero_drop_zero_retrace(
+    tmp_path, hospital, hospital_dt, hospital_lr
+):
+    opts = raven.ConnectOptions(cache_dir=str(tmp_path / "c"))
+    db = raven.connect(hospital.tables, stats="auto", options=opts)
+    try:
+        db.models.publish("risk", hospital_dt)
+        prep = db.sql(SQL).prepare(transform="sql")
+        prep.serve("q")
+        sums_v1 = _sums(db, prep)
+        db.models.publish("risk", hospital_lr, warm="sync")
+        db.models.cutover("risk", 2)
+        _sums(db, prep)  # v2 serves; handles survived the swap
+        recompiles = db.cache_stats()["server"]["recompiles"]
+
+        restored = db.models.rollback("risk", reason="drill")
+        assert restored.version == 1 and restored.state == "live"
+        assert _sums(db, prep) == sums_v1  # v1 serves again, bitwise
+        assert db.cache_stats()["server"]["recompiles"] == recompiles
+
+        snap = db.models.snapshot()["risk"]
+        assert snap["live"] == 1
+        (rb,) = snap["rollbacks"]
+        assert rb["from"] == 2 and rb["to"] == 1 and rb["reason"] == "drill"
+        events = {
+            v["version"]: v["events"] for v in snap["versions"]
+        }
+        assert any("rolled back" in e for e in events[2])
+        assert any("restored live by rollback" in e for e in events[1])
+        assert "rolled back" in prep.explain()
+        assert check_registry(db) == []
+    finally:
+        db.close()
+
+
+# -- the acceptance path: kill -9, then recover in a fresh process -----------
+
+_CHILD_A = """
+import json, os, signal, sys
+import numpy as np
+import repro as raven
+from repro.data.datasets import make_hospital
+from repro.ml.pipeline import load_pipeline
+
+
+def main():
+    cache_dir, pipe1, pipe2 = sys.argv[1], sys.argv[2], sys.argv[3]
+    ds = make_hospital(512, seed=7)
+    db = raven.connect(
+        ds.tables, stats="auto",
+        options=raven.ConnectOptions(cache_dir=cache_dir),
+    )
+    db.models.publish("risk", load_pipeline(pipe1))
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='risk', data=patients) AS p"
+    ).prepare(transform="sql")
+    prep.serve("q")
+    sums = []
+    for i, n in enumerate((128, 256)):
+        req = prep.submit(make_hospital(n, seed=40 + i).tables["patients"])
+        db.flush()
+        sums.append(float(np.sum(req.wait(timeout=60.0)["score"])))
+    db.models.publish("risk", load_pipeline(pipe2), warm="sync")
+    db.models.shadow("risk", 2)
+    snap = db.models.snapshot()["risk"]
+    db.artifact_store.drain()  # stage programs must reach disk pre-crash
+    print(json.dumps({
+        "sums": sums,
+        "topology": {
+            "live": snap["live"], "shadow": snap["shadow"],
+            "split": snap["split"], "routes": sorted(snap["routes"]),
+            "versions": [
+                (v["version"], v["state"]) for v in snap["versions"]
+            ],
+        },
+    }))
+    sys.stdout.flush()
+    os.kill(os.getpid(), signal.SIGKILL)  # no close(), no atexit — a crash
+
+
+main()
+"""
+
+_CHILD_B = """
+import json, sys
+import numpy as np
+import repro as raven
+from repro.analysis.registry_check import check_registry
+from repro.data.datasets import make_hospital
+
+
+def main():
+    cache_dir = sys.argv[1]
+    ds = make_hospital(512, seed=7)
+    db = raven.connect(
+        ds.tables, stats="auto",
+        options=raven.ConnectOptions(cache_dir=cache_dir),
+    )
+    counts = db.recover()
+    snap = db.models.snapshot()["risk"]
+    violations = [str(v) for v in check_registry(db)]
+    traces0 = db.cache_stats()["traces"]
+    prep = db.sql(
+        "SELECT * FROM PREDICT(model='risk', data=patients) AS p"
+    ).prepare(transform="sql")
+    prep.serve("q")
+    sums = []
+    for i, n in enumerate((128, 256)):
+        req = prep.submit(make_hospital(n, seed=40 + i).tables["patients"])
+        db.flush()
+        sums.append(float(np.sum(req.wait(timeout=60.0)["score"])))
+    print(json.dumps({
+        "counts": counts,
+        "sums": sums,
+        "violations": violations,
+        "new_traces": db.cache_stats()["traces"] - traces0,
+        "topology": {
+            "live": snap["live"], "shadow": snap["shadow"],
+            "split": snap["split"], "routes": sorted(snap["routes"]),
+            "versions": [
+                (v["version"], v["state"]) for v in snap["versions"]
+            ],
+        },
+    }))
+    db.close()
+
+
+main()
+"""
+
+
+def _spawn(script_path: str, *argv: str, want_signal=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, script_path, *argv],
+        capture_output=True, text=True, timeout=300, env=env, cwd=REPO,
+    )
+    if want_signal is not None:
+        assert proc.returncode == -want_signal, (
+            proc.returncode, proc.stderr[-2000:],
+        )
+    else:
+        assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_sigkill_crash_recovery_across_processes(
+    tmp_path, hospital_dt, hospital_lr
+):
+    from repro.ml.pipeline import save_pipeline
+
+    cache = str(tmp_path / "c")
+    pipe1 = str(tmp_path / "p1.npz")
+    pipe2 = str(tmp_path / "p2.npz")
+    save_pipeline(hospital_dt, pipe1)
+    save_pipeline(hospital_lr, pipe2)
+    a_path = str(tmp_path / "child_a.py")
+    b_path = str(tmp_path / "child_b.py")
+    with open(a_path, "w") as f:
+        f.write(_CHILD_A)
+    with open(b_path, "w") as f:
+        f.write(_CHILD_B)
+
+    a = _spawn(a_path, cache, pipe1, pipe2, want_signal=signal.SIGKILL)
+    b = _spawn(b_path, cache)
+
+    assert b["counts"]["recovered"]
+    assert b["counts"]["routes"] == 1 and b["counts"]["skipped"] == []
+    assert b["topology"] == a["topology"]
+    assert b["sums"] == a["sums"]
+    assert b["violations"] == []
+    assert b["new_traces"] == 0

@@ -51,7 +51,8 @@ class _Req:
 
 def _pop(sch: Scheduler, q):
     with sch._cv:  # _pop_group's contract: caller holds the scheduler lock
-        return sch._pop_group(q)
+        group, _attempt = sch._pop_group(q)
+        return group
 
 
 def test_pop_group_respects_coalesce_cap():
